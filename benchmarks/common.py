@@ -1,0 +1,34 @@
+"""Shared benchmark helpers: timing, CSV emission, result storage."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, List
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    """Median wall-time of fn() in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def save_json(name: str, obj) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=2, default=str))
+    return p

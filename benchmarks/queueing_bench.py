@@ -1,0 +1,40 @@
+"""Paper Figs 3-4: M/G/N (scale-up) vs N x M/G/1 (scale-out) latency."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import simulate_scale_out, simulate_scale_up
+
+from .common import emit, save_json
+
+LOADS = [0.3, 0.5, 0.7, 0.8, 0.9, 0.95]
+
+
+def run(n_jobs: int = 120_000) -> dict:
+    out = {}
+    for service, fig in (("M", "fig3"), ("D", "fig4")):
+        for n in (4, 8):
+            rows = []
+            for rho in LOADS:
+                rate = rho * n
+                up = simulate_scale_up(rate, 1.0, n, n_jobs, service, seed=11)
+                so = simulate_scale_out(rate, 1.0, n, n_jobs, service, seed=11)
+                rows.append({
+                    "load": rho,
+                    "up_mean": up.mean, "up_p99": up.percentile(99),
+                    "out_mean": so.mean, "out_p99": so.percentile(99),
+                })
+            out[f"{fig}_n{n}"] = rows
+            hi = rows[-2]  # rho=0.9
+            emit(
+                f"queueing/{fig}_n{n}_rho0.9_p99", hi["up_p99"],
+                f"scale-up p99 {hi['up_p99']:.2f} vs scale-out {hi['out_p99']:.2f} "
+                f"({hi['out_p99'] / hi['up_p99']:.1f}x better)",
+            )
+    save_json("queueing", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

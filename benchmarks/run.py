@@ -1,0 +1,55 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (see common.emit) and stores
+full results under benchmarks/results/.  The dry-run/roofline cells are
+produced separately by ``python -m repro.launch.dryrun`` (512-device
+placeholder world); ``roofline.run`` here only aggregates their JSON.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        kernels_bench,
+        latency_bench,
+        queueing_bench,
+        reorder_traces,
+        reorder_udp,
+        roofline,
+        scalability,
+        serving_bench,
+        tcp_flows,
+    )
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (
+        queueing_bench,  # Figs 3-4
+        scalability,  # Tables 2-3
+        latency_bench,  # Figs 5-6
+        reorder_udp,  # Fig 7
+        reorder_traces,  # Table 4
+        tcp_flows,  # Table 5 + Figs 8-10
+        kernels_bench,  # Pallas kernel analytics
+        serving_bench,  # framework-level COREC serving
+        roofline,  # dry-run aggregation (section Roofline)
+    ):
+        try:
+            if mod.__name__.endswith("roofline"):
+                mod.run_all_tags()
+            else:
+                mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod.__name__, e))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Paper Table 5 + Figs 8-10: TCP flow completion times over the forwarder.
+
+Flow sizes are expressed in packets (MSS=1460B): the paper's 1GB/10GB
+flows are run scaled (100k/300k packets) — the claim under test is the
+*relative* FCT penalty and retransmission growth, which are size-stable
+once the flow is long enough to saturate the window.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tcp import TcpSimConfig, simulate_tcp
+
+from .common import emit, save_json
+
+
+def _fcts(res):
+    return np.array([r.fct for r in res])
+
+
+def run(scale: int = 1) -> dict:
+    out = {}
+
+    # --- Table 5: single huge flow, corec 1/2/4 workers ------------------
+    huge = {}
+    for label, npkts in (("1GB-scaled", 60_000 // scale),
+                         ("10GB-scaled", 180_000 // scale)):
+        rows = {}
+        base = None
+        for k in (1, 2, 4):
+            cfg = TcpSimConfig(policy="corec", n_workers=k, seed=13,
+                               deschedule_prob=1e-3)
+            r = simulate_tcp([(0, npkts, 0.0)], cfg)[0]
+            if base is None:
+                base = r.fct
+            rows[f"{k}c"] = {
+                "fct_us": r.fct, "retx": r.retransmissions,
+                "delta_pct": 100 * (r.fct / base - 1),
+            }
+        huge[label] = rows
+        emit(
+            f"tcp/huge_{label}_4c_delta", rows["4c"]["fct_us"],
+            f"{rows['4c']['delta_pct']:+.2f}% FCT vs 1c, retx "
+            f"{rows['1c']['retx']}->{rows['4c']['retx']} (paper: +2.3% max)",
+        )
+    out["table5_huge"] = huge
+
+    # --- Figs 8-10: medium/small/one-packet flows, corec vs scale-out ----
+    for label, npkts in (("100KB", 69), ("10KB", 7), ("1KB", 1)):
+        for nflows in (64, 128):
+            flows = [(i, npkts, i * 2.0) for i in range(nflows)]
+            res = {}
+            for pol in ("corec", "scaleout"):
+                # forwarder-bound path (fast client link), with realistic
+                # worker descheduling — the HOL-blocking scenario the
+                # paper's scale-out baseline suffers from
+                cfg = TcpSimConfig(policy=pol, n_workers=4, seed=17,
+                                   service_mean=3.0, link_pps=2.0,
+                                   deschedule_prob=5e-3)
+                f = _fcts(simulate_tcp(flows, cfg))
+                res[pol] = {
+                    "mean": float(f.mean()),
+                    "p50": float(np.percentile(f, 50)),
+                    "p99": float(np.percentile(f, 99)),
+                }
+            out[f"{label}_{nflows}flows"] = res
+            emit(
+                f"tcp/{label}_{nflows}flows_p99", res["corec"]["p99"],
+                f"corec p99 {res['corec']['p99']:.0f}us vs scale-out "
+                f"{res['scaleout']['p99']:.0f}us "
+                f"({res['scaleout']['p99'] / res['corec']['p99']:.2f}x)",
+            )
+    save_json("tcp_flows", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Run one forward/train/decode step on every assigned architecture
+(tiny variants) — the ``--arch`` selector surface.
+
+    PYTHONPATH=src python examples/multiarch_smoke.py [--arch rwkv6-3b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.api import build_model
+
+
+def run_one(arch: str):
+    cfg = configs.get_tiny(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab, dtype=jnp.int32),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab, dtype=jnp.int32),
+    }
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.is_encdec:
+        batch["audio_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    t0 = time.time()
+    loss, _ = jax.jit(model.loss)(params, batch)
+    cache, logits = model.prefill(params, batch, max_seq=S + 4)
+    cache, logits = model.decode_step(params, cache,
+                                      jnp.ones((B, 1), jnp.int32))
+    print(f"{arch:24s} loss={float(loss):6.3f} decode_logits={logits.shape} "
+          f"({time.time() - t0:.1f}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=configs.ALL_ARCHS)
+    args = ap.parse_args()
+    for arch in ([args.arch] if args.arch else configs.ALL_ARCHS):
+        run_one(arch)
+
+
+if __name__ == "__main__":
+    main()

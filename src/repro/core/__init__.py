@@ -1,0 +1,38 @@
+"""COREC core: the paper's contribution (section 3) + its evaluation
+substrate (section 4) as reusable, framework-grade modules.
+
+Layout:
+  atomics.py       RMW primitives (CAS / fetch_add / trylock) on CPython
+  ring.py          CorecRing — the non-blocking single-queue protocol
+  baseline.py      ScaleOutDriver (RSS) and LockedSharedQueue baselines
+  dispatch.py      worker pools draining any queue policy
+  queueing.py      M/G/N vs N x M/G/1 discrete-event simulator (sec 3.2)
+  reorder.py       RFC 4737 reordering metrics (sec 4.3)
+  traffic.py       UDP / MAWI-mix / flow traffic generators
+  tcp.py           TCP-over-forwarder DES (Table 5, Figs 8-10)
+  protocol_sim.py  stepped interleaving model for property tests
+"""
+
+from .atomics import AtomicU64, TryLock
+from .baseline import CorecSharedQueue, LockedSharedQueue, ScaleOutDriver, rss_hash
+from .dispatch import DispatchResult, Item, WorkerPool, make_queue
+from .queueing import (
+    simulate_protocol,
+    simulate_scale_out,
+    simulate_scale_up,
+    sweep_load,
+)
+from .reorder import ReorderReport, measure_reordering, per_flow_reordering
+from .ring import Claim, CorecRing, RingStats
+from .tcp import FlowResult, TcpSimConfig, simulate_tcp
+from .traffic import MSS, FlowSpec, Packet, flow_packets, mawi_mix, udp_stream
+
+__all__ = [
+    "AtomicU64", "TryLock", "Claim", "CorecRing", "RingStats",
+    "CorecSharedQueue", "LockedSharedQueue", "ScaleOutDriver", "rss_hash",
+    "DispatchResult", "Item", "WorkerPool", "make_queue",
+    "simulate_protocol", "simulate_scale_out", "simulate_scale_up", "sweep_load",
+    "ReorderReport", "measure_reordering", "per_flow_reordering",
+    "FlowResult", "TcpSimConfig", "simulate_tcp",
+    "MSS", "FlowSpec", "Packet", "flow_packets", "mawi_mix", "udp_stream",
+]

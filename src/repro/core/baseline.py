@@ -1,0 +1,130 @@
+"""The two comparison points the paper evaluates COREC against.
+
+* ``ScaleOutDriver`` — the state of the art (DPDK default): N independent
+  rings, each owned by exactly one consumer thread; incoming items are
+  hash-partitioned (RSS) across rings.  This is the ``N x M/G/1`` system.
+* ``LockedSharedQueue`` — the Metronome-class alternative [12]: one ring
+  shared by N threads, but the whole receive function is a critical
+  section guarded by a mutex, so only one thread makes progress at a time.
+
+Both expose the same claim/complete/release surface as ``CorecRing`` so the
+dispatcher and the benchmarks can swap policies freely.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, List, Optional, Sequence
+
+from .ring import Claim, CorecRing, RingStats
+
+__all__ = ["ScaleOutDriver", "LockedSharedQueue", "rss_hash"]
+
+
+def rss_hash(key: int, n_queues: int) -> int:
+    """Toeplitz-flavoured integer hash -> queue id (deterministic RSS).
+
+    The real RSS Toeplitz hash is keyed over the 5-tuple; for our purposes a
+    well-mixed integer hash of the flow key gives the same *policy*:
+    a flow always lands on the same queue.
+    """
+    h = key & 0xFFFFFFFFFFFFFFFF
+    h ^= h >> 33
+    h = (h * 0xFF51AFD7ED558CCD) & 0xFFFFFFFFFFFFFFFF
+    h ^= h >> 33
+    h = (h * 0xC4CEB9FE1A85EC53) & 0xFFFFFFFFFFFFFFFF
+    h ^= h >> 33
+    return h % n_queues
+
+
+class ScaleOutDriver:
+    """N per-thread rings with RSS partitioning (the paper's baseline).
+
+    Each ring is still a ``CorecRing`` (so slot mechanics are identical) but
+    the contract is that consumer ``i`` only ever touches ring ``i`` — the
+    single-consumer special case, in which every CAS trivially succeeds.
+    """
+
+    def __init__(self, n_queues: int, size: int):
+        self.n_queues = n_queues
+        self.rings = [CorecRing(size) for _ in range(n_queues)]
+
+    # -- producer side -------------------------------------------------
+    def produce(self, payload: Any, flow_key: int) -> bool:
+        """RSS: the flow key pins the item to one queue, full or not."""
+        return self.rings[rss_hash(flow_key, self.n_queues)].produce(payload)
+
+    # -- consumer side ---------------------------------------------------
+    def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
+        return self.rings[worker].claim(max_batch)
+
+    def complete(self, worker: int, claim: Claim) -> None:
+        self.rings[worker].complete(claim)
+
+    def try_release(self, worker: int) -> int:
+        return self.rings[worker].try_release()
+
+    def backlog(self) -> int:
+        return sum(r.backlog() for r in self.rings)
+
+    def stats(self) -> List[RingStats]:
+        return [r.stats for r in self.rings]
+
+
+class LockedSharedQueue:
+    """One shared ring, one big lock around the whole Rx function.
+
+    This is the 'obvious' shared-queue design the paper argues against:
+    work-conserving (single queue) but *blocking* — a descheduled lock
+    holder stalls every peer.  Claim+copy runs under the mutex, exactly as
+    a critical-section driver would.
+    """
+
+    def __init__(self, size: int):
+        self.ring = CorecRing(size)
+        self._mutex = threading.Lock()
+
+    def produce(self, payload: Any, flow_key: int = 0) -> bool:
+        return self.ring.produce(payload)
+
+    def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
+        with self._mutex:
+            c = self.ring.claim(max_batch)
+            if c is not None:
+                # Under the big lock the whole claim..release is one
+                # critical section: complete+release immediately.
+                self.ring.complete(c)
+                self.ring.try_release()
+            return c
+
+    def complete(self, worker: int, claim: Claim) -> None:
+        # Already done under the mutex in claim().
+        return None
+
+    def try_release(self, worker: int = 0) -> int:
+        return 0
+
+    def backlog(self) -> int:
+        return self.ring.backlog()
+
+
+class CorecSharedQueue:
+    """Adapter giving ``CorecRing`` the same (worker-indexed) surface."""
+
+    def __init__(self, size: int):
+        self.ring = CorecRing(size)
+
+    def produce(self, payload: Any, flow_key: int = 0) -> bool:
+        return self.ring.produce(payload)
+
+    def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
+        return self.ring.claim(max_batch)
+
+    def complete(self, worker: int, claim: Claim) -> None:
+        self.ring.complete(claim)
+
+    def try_release(self, worker: int = 0) -> int:
+        return self.ring.try_release()
+
+    def backlog(self) -> int:
+        return self.ring.backlog()

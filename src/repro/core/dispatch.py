@@ -1,0 +1,166 @@
+"""Work-conserving dispatcher: worker threads around a claim/release queue.
+
+This is the paper's "driver threads" layer: each worker loops
+``claim -> process -> complete -> try_release`` (Listing 2), against any of
+the three queue policies (COREC / scale-out / locked).  Used by the
+protocol tests and the threaded benchmarks; the serving engine has its own
+specialised copy of this loop (repro/serving/scheduler.py).
+
+Timing: items carry their enqueue timestamp; the dispatcher records
+per-item sojourn latency (enqueue -> processing complete) so mean/p99 can
+be compared across policies, plus per-worker processed counts to measure
+work conservation (idle-ness skew).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+from .baseline import CorecSharedQueue, LockedSharedQueue, ScaleOutDriver
+
+__all__ = ["Item", "DispatchResult", "WorkerPool", "make_queue"]
+
+
+@dataclass
+class Item:
+    """A unit of work (the 'packet'): payload + flow identity + timestamps."""
+
+    seqno: int
+    flow: int = 0
+    payload: Any = None
+    t_enqueue: float = 0.0
+    t_done: float = 0.0
+    worker: int = -1
+
+
+@dataclass
+class DispatchResult:
+    items: List[Item]
+    per_worker: List[int]
+    wall_time: float
+    stats: Any = None
+
+    def latencies(self) -> List[float]:
+        return [it.t_done - it.t_enqueue for it in self.items]
+
+    def completion_order(self) -> List[int]:
+        """Sequence numbers in the order processing *finished* (global)."""
+        return [it.seqno for it in sorted(self.items, key=lambda i: i.t_done)]
+
+
+def make_queue(policy: str, n_workers: int, size: int):
+    """policy in {'corec', 'scaleout', 'locked'}."""
+    if policy == "corec":
+        return CorecSharedQueue(size)
+    if policy == "scaleout":
+        return ScaleOutDriver(n_workers, size)
+    if policy == "locked":
+        return LockedSharedQueue(size)
+    raise ValueError(f"unknown queue policy {policy!r}")
+
+
+class WorkerPool:
+    """N consumer threads draining one queue object.
+
+    ``work_fn(item) -> None`` is the per-item service (the NF: l3fwd-class
+    cheap lookup or ipsec-class heavy transform).  The pool is policy
+    agnostic: for 'scaleout' each worker only sees its own ring (by
+    construction of ScaleOutDriver.claim).
+    """
+
+    def __init__(
+        self,
+        queue,
+        n_workers: int,
+        work_fn: Callable[[Item], None],
+        max_batch: int = 32,
+        poll_sleep: float = 0.0,
+    ):
+        self.queue = queue
+        self.n_workers = n_workers
+        self.work_fn = work_fn
+        self.max_batch = max_batch
+        self.poll_sleep = poll_sleep
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._done_lock = threading.Lock()
+        self.done_items: List[Item] = []
+        self.per_worker = [0] * n_workers
+
+    # ------------------------------------------------------------------
+    def _worker_loop(self, wid: int) -> None:
+        q = self.queue
+        while not self._stop.is_set():
+            claim = q.claim(wid, self.max_batch)
+            if claim is None:
+                q.try_release(wid)
+                if self.poll_sleep:
+                    time.sleep(self.poll_sleep)
+                continue
+            now_batch = []
+            for it in claim.payloads:
+                if it is None:
+                    continue
+                self.work_fn(it)
+                it.t_done = time.perf_counter()
+                it.worker = wid
+                now_batch.append(it)
+            q.complete(wid, claim)
+            q.try_release(wid)
+            with self._done_lock:
+                self.done_items.extend(now_batch)
+                self.per_worker[wid] += len(now_batch)
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        for w in range(self.n_workers):
+            t = threading.Thread(target=self._worker_loop, args=(w,), daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    # ------------------------------------------------------------------
+    def run_open_loop(
+        self,
+        items: List[Item],
+        rate: Optional[float] = None,
+        drain_timeout: float = 30.0,
+    ) -> DispatchResult:
+        """Producer-side open loop: offer items (optionally rate-paced),
+        wait for full drain, return per-item results."""
+        t0 = time.perf_counter()
+        self.start()
+        interval = (1.0 / rate) if rate else 0.0
+        next_t = time.perf_counter()
+        for it in items:
+            if interval:
+                while time.perf_counter() < next_t:
+                    pass
+                next_t += interval
+            it.t_enqueue = time.perf_counter()
+            while not self.queue.produce(it, it.flow):
+                # Ring full: producer backpressure (the NIC would drop; we
+                # spin so every item is accounted for in latency tests).
+                time.sleep(0)
+        deadline = time.perf_counter() + drain_timeout
+        while time.perf_counter() < deadline:
+            with self._done_lock:
+                if len(self.done_items) >= len(items):
+                    break
+            time.sleep(0.0005)
+        self.stop()
+        wall = time.perf_counter() - t0
+        return DispatchResult(
+            items=list(self.done_items),
+            per_worker=list(self.per_worker),
+            wall_time=wall,
+            stats=getattr(self.queue, "ring", None)
+            and self.queue.ring.stats.snapshot(),
+        )

@@ -1,0 +1,102 @@
+"""Open-loop L3-forwarder DES: packets -> k workers -> completion order.
+
+Shared by the UDP-reordering (Fig 7) and real-trace (Table 4) benchmarks:
+models the COREC driver's batch-claim pipeline on simulated time (the
+reordering mechanics — batch boundaries across workers + service jitter +
+rare descheduling — are the same ones the threaded ring exhibits, but the
+DES gives deterministic, load-controllable measurements on a 1-core box).
+
+Service time is a fixed per-packet CPU cost (+ a tiny per-byte cache
+term); wire serialization is the *arrival* process (line-rate caps pps by
+size).  High-rate 64B traffic is then the worst case for reordering —
+batches accumulate during worker busy periods and split across workers —
+while large packets arrive slower than one worker drains them, exactly
+the paper's Fig 7 shape.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from .baseline import rss_hash
+from .traffic import Packet
+
+__all__ = ["ForwarderConfig", "simulate_forwarder"]
+
+
+@dataclass
+class ForwarderConfig:
+    policy: str = "corec"  # corec | scaleout
+    n_workers: int = 4
+    batch: int = 32
+    base_service: float = 0.07  # us per packet (l3fwd lookup + desc swap)
+    per_byte: float = 0.00001  # us per byte (cache-line touch only: DMA
+    # and wire serialization belong to the LINK model, not the CPU)
+    service_jitter: float = 0.25  # lognormal sigma
+    claim_overhead: float = 0.05  # us per batch
+    deschedule_prob: float = 5e-4
+    deschedule_mean: float = 30.0  # us
+    seed: int = 0
+
+
+def simulate_forwarder(
+    packets: List[Packet], cfg: ForwarderConfig
+) -> List[Tuple[float, Packet]]:
+    """Returns [(completion_time, packet)] in completion order."""
+    rng = np.random.default_rng(cfg.seed)
+    counter = itertools.count()
+    events: list = []  # (t, tiebreak, kind, payload)
+    out: List[Tuple[float, Packet]] = []
+    from collections import deque
+
+    shared: deque = deque()
+    perq = [deque() for _ in range(cfg.n_workers)]
+    free = [True] * cfg.n_workers
+
+    def push(t, kind, payload):
+        heapq.heappush(events, (t, next(counter), kind, payload))
+
+    def svc(p: Packet) -> float:
+        mean = cfg.base_service + cfg.per_byte * p.size
+        mu = np.log(mean) - cfg.service_jitter**2 / 2
+        return float(rng.lognormal(mu, cfg.service_jitter))
+
+    def dispatch(t):
+        for w in range(cfg.n_workers):
+            if not free[w]:
+                continue
+            q = shared if cfg.policy == "corec" else perq[w]
+            if not q:
+                continue
+            batch = [q.popleft() for _ in range(min(cfg.batch, len(q)))]
+            free[w] = False
+            tt = t + cfg.claim_overhead
+            if rng.random() < cfg.deschedule_prob:
+                tt += float(rng.exponential(cfg.deschedule_mean))
+            for p in batch:
+                tt += svc(p)
+                push(tt, "done", p)
+            push(tt, "free", w)
+
+    for p in packets:
+        push(p.t_arrival, "arrive", p)
+    while events:
+        t, _, kind, payload = heapq.heappop(events)
+        if kind == "arrive":
+            if cfg.policy == "corec":
+                shared.append(payload)
+            else:
+                perq[rss_hash(payload.flow, cfg.n_workers)].append(payload)
+            dispatch(t)
+        elif kind == "free":
+            free[payload] = True
+            dispatch(t)
+        else:
+            out.append((t, payload))
+    out.sort(key=lambda x: x[0])
+    return out

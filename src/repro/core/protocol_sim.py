@@ -1,0 +1,208 @@
+"""Deterministic interleaving simulator for the COREC protocol.
+
+Property-based testing of a concurrent algorithm with real threads is
+non-deterministic; instead this module re-expresses the exact protocol of
+``ring.CorecRing`` as *stepped* coroutines that yield control after every
+shared-memory access.  A hypothesis-generated schedule (sequence of actor
+ids) then drives an arbitrary interleaving, and invariants are checked
+after every single step.  This mirrors how non-blocking algorithms are
+model-checked; any safety violation found here is a real bug in the
+protocol logic (the atomic ops themselves are executed atomically by
+construction — one step at a time).
+
+Keep the step bodies in sync with ring.py; tests/test_ring_properties.py
+asserts behavioural equivalence on sequential schedules.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Generator, List, Optional, Sequence
+
+__all__ = ["SimState", "consumer", "producer", "run_schedule", "ScheduleResult"]
+
+_WORD = 64
+
+
+class SimState:
+    """Plain-int replica of CorecRing state (steps are atomic by fiat)."""
+
+    def __init__(self, size: int):
+        assert size > 0 and size & (size - 1) == 0 and size % _WORD == 0
+        self.size = size
+        self.mask = size - 1
+        self.cells: List[Optional[int]] = [None] * size
+        self.seq = list(range(size))
+        self.head = 0
+        self.published = 0  # slots whose DD stamp is visible (head lags
+        # by one micro-step inside produce; single producer => benign)
+        self.claim_head = 0
+        self.done = [0] * (size // _WORD)
+        self.tail = 0
+        self.tail_lock_owner: Optional[int] = None
+        # audit trails
+        self.claims: List[tuple] = []  # (wid, start, end, payloads)
+        self.delivered: List[int] = []
+        self.released_upto = 0
+        self.produced_payloads: List[int] = []
+
+
+# ----------------------------------------------------------------------
+# actors: generators yielding a label after each atomic shared access
+# ----------------------------------------------------------------------
+def producer(st: SimState, payloads: Sequence[int]) -> Generator[str, None, None]:
+    """Single producer (the NIC): fills slots while it has credit."""
+    i = 0
+    while i < len(payloads):
+        head = st.head
+        yield "p:load_head"
+        tail = st.tail
+        yield "p:load_tail"
+        if head - tail >= st.size:
+            yield "p:full"
+            continue
+        idx = head & st.mask
+        if st.seq[idx] != head:
+            yield "p:slot_busy"
+            continue
+        st.cells[idx] = payloads[i]
+        yield "p:write_cell"
+        st.seq[idx] = head + 1  # DD publish
+        st.published = head + 1
+        st.produced_payloads.append(payloads[i])  # visible from this step
+        yield "p:publish_dd"
+        st.head = head + 1
+        yield "p:advance_head"
+        i += 1
+
+
+def consumer(
+    st: SimState, wid: int, max_batch: int = 4, rounds: int = 1 << 30
+) -> Generator[str, None, None]:
+    """claim -> copy -> complete -> try_release, stepped (Listing 2)."""
+    for _ in range(rounds):
+        # ---- claim -----------------------------------------------------
+        while True:
+            start = st.claim_head
+            yield f"c{wid}:load_claim_head"
+            n = 0
+            while n < max_batch:
+                t = start + n
+                ready = st.seq[t & st.mask] == t + 1
+                yield f"c{wid}:dd_scan"
+                if not ready:
+                    break
+                n += 1
+            if n == 0:
+                yield f"c{wid}:empty"
+                break
+            # CAS
+            ok = st.claim_head == start
+            if ok:
+                st.claim_head = start + n
+            yield f"c{wid}:cas_{'win' if ok else 'fail'}"
+            if ok:
+                # ---- copy out (exclusive ownership) ---------------------
+                payloads = []
+                for t in range(start, start + n):
+                    idx = t & st.mask
+                    payloads.append(st.cells[idx])
+                    st.cells[idx] = None
+                    yield f"c{wid}:copy"
+                st.claims.append((wid, start, start + n, payloads))
+                st.delivered.extend(payloads)
+                # ---- complete: set READ_DONE bits ----------------------
+                t = start
+                while t < start + n:
+                    word = (t & st.mask) // _WORD
+                    bit0 = (t & st.mask) % _WORD
+                    span = min(start + n - t, _WORD - bit0)
+                    st.done[word] |= ((1 << span) - 1) << bit0
+                    yield f"c{wid}:done_or"
+                    t += span
+                break
+        # ---- try_release ------------------------------------------------
+        if st.tail_lock_owner is None:
+            st.tail_lock_owner = wid
+            yield f"c{wid}:trylock_win"
+            tail = st.tail
+            limit = st.claim_head
+            yield f"c{wid}:release_load"
+            t = tail
+            while t < limit:
+                idx = t & st.mask
+                if not (st.done[idx // _WORD] >> (idx % _WORD)) & 1:
+                    break
+                t += 1
+                yield f"c{wid}:release_scan"
+            for u in range(tail, t):
+                idx = u & st.mask
+                st.done[idx // _WORD] &= ~(1 << (idx % _WORD))
+                st.seq[idx] = u + st.size
+                yield f"c{wid}:recycle"
+            if t != tail:
+                st.tail = t
+                st.released_upto = t
+            yield f"c{wid}:store_tail"
+            st.tail_lock_owner = None
+            yield f"c{wid}:unlock"
+        else:
+            yield f"c{wid}:trylock_fail"
+
+
+@dataclass
+class ScheduleResult:
+    steps: int
+    trace: List[str] = field(default_factory=list)
+
+
+def check_invariants(st: SimState) -> None:
+    """Safety invariants of the protocol — asserted after *every* step."""
+    # ordering of the cursors.  claim_head is bounded by *published* DD
+    # stamps, not by the producer's head (which advances one micro-step
+    # after the publish — the store-buffer analogue the paper discusses).
+    assert st.tail <= st.claim_head, "tail overran claim_head"
+    assert st.claim_head <= st.published, "claimed an unpublished ticket"
+    assert st.head <= st.published <= st.head + 1, "publish/head drift"
+    assert st.published - st.tail <= st.size, "producer overran credit"
+    # claims are disjoint and within [0, claim_head)
+    ivs = sorted((s, e) for _, s, e, _ in st.claims)
+    for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+        assert e1 <= s2, f"overlapping claims {(s1, e1)} {(s2, e2)}"
+    for s, e in ivs:
+        assert e <= st.claim_head, "claim beyond claim_head"
+    # no payload delivered twice / invented
+    assert len(st.delivered) == len(set(st.delivered)), "duplicate delivery"
+    assert set(st.delivered) <= set(st.produced_payloads), "phantom delivery"
+    # tail only covers completed-and-released tickets: every ticket < tail
+    # must belong to some claim
+    covered = set()
+    for _, s, e, _ in st.claims:
+        covered.update(range(s, e))
+    for t in range(st.tail):
+        assert t in covered, f"released ticket {t} never claimed"
+
+
+def run_schedule(
+    st: SimState,
+    actors: Sequence[Generator[str, None, None]],
+    schedule: Sequence[int],
+    invariant_every_step: bool = True,
+) -> ScheduleResult:
+    """Drive actors by the schedule; dead actors' turns are skipped."""
+    live = list(actors)
+    trace: List[str] = []
+    steps = 0
+    for pick in schedule:
+        g = live[pick % len(live)]
+        if g is None:
+            continue
+        try:
+            label = next(g)
+            trace.append(label)
+            steps += 1
+        except StopIteration:
+            live[pick % len(live)] = None
+        if invariant_every_step:
+            check_invariants(st)
+    return ScheduleResult(steps=steps, trace=trace)

@@ -1,0 +1,231 @@
+"""Discrete-event queueing simulator — reproduces paper section 3.2.
+
+Compares the two disciplines of Figure 2:
+
+* scale-up  (COREC):  one shared queue, N servers        ->  M/G/N
+* scale-out (RSS):    N queues, one server each          ->  N x M/G/1
+
+with Markovian arrivals and either Markovian ('M') or Deterministic ('D')
+service times, for 4 and 8 servers (Figures 3 and 4).  The simulator is a
+plain FCFS event engine; the *policy* (who may serve which job) is the only
+thing that differs — exactly the paper's claim that work conservation, not
+raw speed, is the source of the win.
+
+Also provides ``simulate_protocol`` — a simulated-time model of the COREC
+claim/release protocol with explicit per-batch overheads, used by the
+scalability benchmark to extrapolate thread-scaling beyond what a 1-core
+CPython host can physically exhibit (calibrated against measured costs).
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "QueueSimResult",
+    "simulate_scale_up",
+    "simulate_scale_out",
+    "sweep_load",
+    "simulate_protocol",
+]
+
+
+@dataclass
+class QueueSimResult:
+    sojourn: np.ndarray  # per-job latency (wait + service)
+    util: float
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.sojourn))
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(self.sojourn, p))
+
+
+def _service_samples(
+    rng: np.random.Generator, n: int, mean_service: float, kind: str
+) -> np.ndarray:
+    if kind == "M":
+        return rng.exponential(mean_service, size=n)
+    if kind == "D":
+        return np.full(n, mean_service)
+    if kind == "LN":  # heavy-ish tail, for the realistic-NF scenario
+        sigma = 0.8
+        mu = math.log(mean_service) - sigma**2 / 2
+        return rng.lognormal(mu, sigma, size=n)
+    raise ValueError(f"unknown service kind {kind!r}")
+
+
+def _arrivals(rng: np.random.Generator, n: int, rate: float) -> np.ndarray:
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def simulate_scale_up(
+    rate: float,
+    mean_service: float,
+    n_servers: int,
+    n_jobs: int = 200_000,
+    service: str = "M",
+    seed: int = 0,
+) -> QueueSimResult:
+    """M/G/N: one FCFS queue, any idle server takes the next job."""
+    rng = np.random.default_rng(seed)
+    arr = _arrivals(rng, n_jobs, rate)
+    svc = _service_samples(rng, n_jobs, mean_service, service)
+    free = [0.0] * n_servers  # heap of server-free times
+    heapq.heapify(free)
+    done = np.empty(n_jobs)
+    for i in range(n_jobs):
+        t_free = heapq.heappop(free)
+        start = arr[i] if arr[i] > t_free else t_free
+        end = start + svc[i]
+        done[i] = end
+        heapq.heappush(free, end)
+    sojourn = done - arr
+    util = float(np.sum(svc) / (n_servers * done.max()))
+    return QueueSimResult(sojourn=sojourn, util=util)
+
+
+def simulate_scale_out(
+    rate: float,
+    mean_service: float,
+    n_servers: int,
+    n_jobs: int = 200_000,
+    service: str = "M",
+    seed: int = 0,
+    assign: str = "hash",
+) -> QueueSimResult:
+    """N x M/G/1: jobs are pinned to a queue on arrival (RSS).
+
+    ``assign='hash'`` models RSS on uniformly random flow keys (uniform
+    random queue per job — the paper's 'traffic flow distribution is equal
+    among cores' case); 'rr' is deterministic round-robin (best case for
+    scale-out, zero skew).
+    """
+    rng = np.random.default_rng(seed)
+    arr = _arrivals(rng, n_jobs, rate)
+    svc = _service_samples(rng, n_jobs, mean_service, service)
+    if assign == "hash":
+        q = rng.integers(0, n_servers, size=n_jobs)
+    elif assign == "rr":
+        q = np.arange(n_jobs) % n_servers
+    else:
+        raise ValueError(assign)
+    done = np.empty(n_jobs)
+    # Per-queue FCFS single server: completion = max(arrival, prev) + svc.
+    prev = np.zeros(n_servers)
+    for i in range(n_jobs):
+        k = q[i]
+        start = arr[i] if arr[i] > prev[k] else prev[k]
+        end = start + svc[i]
+        prev[k] = end
+        done[i] = end
+    sojourn = done - arr
+    util = float(np.sum(svc) / (n_servers * done.max()))
+    return QueueSimResult(sojourn=sojourn, util=util)
+
+
+def sweep_load(
+    n_servers: int,
+    loads: Sequence[float],
+    service: str = "M",
+    mean_service: float = 1.0,
+    n_jobs: int = 200_000,
+    seed: int = 0,
+) -> dict:
+    """Figures 3-4: mean and p99 sojourn vs offered load, both policies.
+
+    ``loads`` are utilisation fractions rho in (0,1); the arrival rate is
+    rho * n_servers / mean_service.
+    """
+    out = {"load": list(loads), "scale_up": [], "scale_out": []}
+    for j, rho in enumerate(loads):
+        rate = rho * n_servers / mean_service
+        up = simulate_scale_up(rate, mean_service, n_servers, n_jobs, service, seed + j)
+        down = simulate_scale_out(
+            rate, mean_service, n_servers, n_jobs, service, seed + j
+        )
+        out["scale_up"].append({"mean": up.mean, "p99": up.percentile(99)})
+        out["scale_out"].append({"mean": down.mean, "p99": down.percentile(99)})
+    return out
+
+
+# ----------------------------------------------------------------------
+# Protocol-cost model (simulated time) for thread-scaling extrapolation
+# ----------------------------------------------------------------------
+def simulate_protocol(
+    n_workers: int,
+    policy: str,
+    rate: float,
+    mean_service: float,
+    claim_overhead: float,
+    cas_retry_cost: float = 0.0,
+    batch: int = 32,
+    n_jobs: int = 100_000,
+    service: str = "M",
+    seed: int = 0,
+) -> QueueSimResult:
+    """COREC protocol on simulated time.
+
+    Like ``simulate_scale_up`` but jobs are taken in *batches* (up to
+    ``batch`` of whatever is queued — the DD-bit scan) and each batch costs
+    ``claim_overhead`` plus an expected CAS-retry penalty that grows with
+    contention (p_fail ~ (k-1)/k per concurrent claimant, geometric
+    retries).  For 'scaleout' the batch overhead is paid too (scan + tail
+    write) but there is never CAS contention and each worker owns 1/N of
+    the arrivals (uniform hash).
+    """
+    rng = np.random.default_rng(seed)
+    arr = _arrivals(rng, n_jobs, rate)
+    svc = _service_samples(rng, n_jobs, mean_service, service)
+    done = np.empty(n_jobs)
+
+    if policy == "scaleout":
+        q = rng.integers(0, n_workers, size=n_jobs)
+        prev = np.zeros(n_workers)
+        # batched FCFS per queue: overhead amortised over jobs ready at
+        # claim time; conservatively charge per-batch overhead each batch.
+        counts = np.zeros(n_workers, dtype=int)
+        for i in range(n_jobs):
+            k = q[i]
+            if counts[k] % batch == 0:
+                prev[k] += claim_overhead
+            start = arr[i] if arr[i] > prev[k] else prev[k]
+            end = start + svc[i]
+            prev[k] = end
+            done[i] = end
+            counts[k] += 1
+        sojourn = done - arr
+        return QueueSimResult(sojourn, float(np.sum(svc) / (n_workers * done.max())))
+
+    if policy != "corec":
+        raise ValueError(policy)
+
+    # COREC: shared FCFS, batch claims, contention-scaled CAS retries.
+    free = [(0.0, w) for w in range(n_workers)]
+    heapq.heapify(free)
+    p_fail = (n_workers - 1) / max(n_workers, 1) * 0.5  # calibrated upper bound
+    expected_retries = p_fail / (1 - p_fail) if p_fail < 1 else 0.0
+    i = 0
+    while i < n_jobs:
+        t_free, w = heapq.heappop(free)
+        t = t_free if t_free > arr[i] else arr[i]
+        # claim the batch available at time t (>=1 job: job i has arrived)
+        j = i
+        while j < n_jobs - 1 and (j - i) < batch - 1 and arr[j + 1] <= t:
+            j += 1
+        t += claim_overhead + cas_retry_cost * expected_retries
+        for k in range(i, j + 1):
+            t += svc[k]
+            done[k] = t
+        heapq.heappush(free, (t, w))
+        i = j + 1
+    sojourn = done - arr
+    util = float(np.sum(svc) / (n_workers * done.max()))
+    return QueueSimResult(sojourn, util)

@@ -1,0 +1,260 @@
+"""COREC: the concurrent non-blocking single-queue receive ring.
+
+Paper mapping (Listing 2 + sections 3.4.1-3.4.4):
+
+=====================================  =========================================
+paper                                  here
+=====================================  =========================================
+NIC filling Rx descriptors             ``produce()`` (single producer; the
+                                       producer is *unmodifiable*: it only sees
+                                       head/tail credit, like a DMA engine)
+DD bit scan (lines 12-19)              ready scan over epoch-stamped slot seq
+CAS on queue->rx_index (line 21)       CAS on ``claim_head`` 64-bit ticket
+descriptor copy + mempool swap         payload move-out in ``claim()``
+write_batch_is_done (line 33)          ``complete()`` -> READ_DONE bitmask
+trylock + TAIL write (35-42)           ``try_release()`` contiguous prefix
+epoch = id // RING_SIZE (Table 1)      same; 64-bit ticket kills ABA
+=====================================  =========================================
+
+The claim path is lock-free: a consumer that loses the CAS retries against
+fresh state; a consumer that wins owns a disjoint ticket interval and never
+interacts with its peers again until the O(1) bitmask write.  A stalled
+consumer delays only the *reuse* of its own slots once the ring wraps
+(section 3.4.4 corner case) — peers keep claiming and processing.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence
+
+from .atomics import AtomicU64, TryLock
+
+__all__ = ["Claim", "CorecRing", "RingStats"]
+
+_WORD_BITS = 64
+
+
+@dataclass
+class Claim:
+    """An exclusively-owned batch of ring tickets ``[start, end)``.
+
+    ``payloads`` have already been moved out of the ring (the paper's
+    descriptor copy + mempool replacement), so the application may process
+    them at leisure — the slots become NIC-reusable as soon as
+    ``complete()`` + a successful release run.
+    """
+
+    start: int
+    end: int
+    payloads: List[Any]
+
+    def __len__(self) -> int:
+        return self.end - self.start
+
+
+@dataclass
+class RingStats:
+    """Race/occupancy counters (cheap, non-atomic; diagnostic only)."""
+
+    claims: int = 0
+    claimed_items: int = 0
+    cas_failures: int = 0
+    empty_polls: int = 0
+    releases: int = 0
+    released_items: int = 0
+    trylock_failures: int = 0
+    produced: int = 0
+    full_producer_polls: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class CorecRing:
+    """Bounded MPMC ring with single producer and COREC consumer protocol.
+
+    ``size`` must be a power of two (paper section 3.4.3: "the queue size is
+    always a power of 2 ... this already happens in network drivers").
+    """
+
+    def __init__(self, size: int):
+        if size <= 0 or size & (size - 1):
+            raise ValueError("ring size must be a power of two")
+        self.size = size
+        self.mask = size - 1
+        # Payload cells. Only the exclusive owner of a ticket touches cell
+        # ticket & mask, so plain list slots are safe.
+        self._cells: List[Any] = [None] * size
+        # Slot sequence words (Vyukov-style epoch stamps standing in for the
+        # DD bit):  seq == t      -> empty, awaiting producer ticket t
+        #           seq == t + 1  -> filled for consumer ticket t (DD set)
+        #           seq == t+size -> empty, awaiting next-epoch producer.
+        self._seq = [AtomicU64(i) for i in range(size)]
+        # Producer cursor (the NIC's HEAD). Single producer -> plain int
+        # guarded by producer discipline, but atomic for observers.
+        self._head = AtomicU64(0)
+        # The global transaction ID consumers CAS on (paper's rx_index,
+        # promoted to a monotonic 64-bit ticket -> epoch = id // size).
+        self._claim_head = AtomicU64(0)
+        # READ_DONE bitmask: one bit per slot, packed in atomic words.
+        self._done = [AtomicU64(0) for _ in range(max(1, size // _WORD_BITS))]
+        # TAIL: last ticket (exclusive) returned to the producer as credit.
+        self._tail = AtomicU64(0)
+        self._tail_lock = TryLock()
+        self.stats = RingStats()
+
+    # ------------------------------------------------------------------
+    # producer side (the "NIC")
+    # ------------------------------------------------------------------
+    def produce(self, payload: Any) -> bool:
+        """Fill one slot. Returns False when out of credit (ring full).
+
+        The producer role is intentionally minimal: check credit
+        (head - tail < size), write the payload, then publish the DD stamp.
+        A real DMA engine does exactly this, which is what keeps COREC
+        *transparent* to an unmodifiable producer (section 3.4.2).
+        """
+        head = self._head.load()
+        if head - self._tail.load() >= self.size:
+            self.stats.full_producer_polls += 1
+            return False
+        idx = head & self.mask
+        # Slot must have been recycled for this epoch by the releaser.
+        if self._seq[idx].load() != head:
+            self.stats.full_producer_polls += 1
+            return False
+        self._cells[idx] = payload
+        self._seq[idx].store(head + 1)  # DD bit: visible to consumers
+        self._head.store(head + 1)
+        self.stats.produced += 1
+        return True
+
+    def produce_batch(self, payloads: Sequence[Any]) -> int:
+        n = 0
+        for p in payloads:
+            if not self.produce(p):
+                break
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # consumer side (COREC workers)
+    # ------------------------------------------------------------------
+    def _ready(self, ticket: int) -> bool:
+        """DD-bit check, epoch-safe: slot is filled *for this ticket*."""
+        return self._seq[ticket & self.mask].load() == ticket + 1
+
+    def claim(self, max_batch: int = 32) -> Optional[Claim]:
+        """Listing 2 lines 8-31: scan DD bits, CAS the ticket, copy out.
+
+        Lock-free: on CAS failure we re-read fresh state and retry; each
+        retry means another consumer made progress (lock-freedom), and the
+        loop exits as soon as the queue looks empty.
+        """
+        while True:
+            start = self._claim_head.load()
+            n = 0
+            while n < max_batch and self._ready(start + n):
+                n += 1
+            if n == 0:
+                self.stats.empty_polls += 1
+                return None
+            if self._claim_head.compare_and_swap(start, start + n):
+                break
+            self.stats.cas_failures += 1
+        # Race won: [start, start+n) is exclusively ours. Move payloads out
+        # (descriptor copy + replacement with an empty buffer).
+        payloads = []
+        for t in range(start, start + n):
+            idx = t & self.mask
+            payloads.append(self._cells[idx])
+            self._cells[idx] = None
+        self.stats.claims += 1
+        self.stats.claimed_items += n
+        return Claim(start, start + n, payloads)
+
+    def complete(self, claim: Claim) -> None:
+        """Listing 2 line 33: publish [start, end) into READ_DONE.
+
+        Slot->bit mapping is unambiguous without epoch tags because a slot
+        cannot be re-claimed before its bit is cleared by a release (the
+        producer has no credit for it until TAIL moves past it).
+        """
+        t = claim.start
+        while t < claim.end:
+            word = (t & self.mask) // _WORD_BITS
+            bit0 = (t & self.mask) % _WORD_BITS
+            span = min(claim.end - t, _WORD_BITS - bit0)
+            bits = ((1 << span) - 1) << bit0
+            self._done[word].fetch_or(bits)
+            t += span
+
+    def try_release(self) -> int:
+        """Listing 2 lines 35-42: trylock, free the contiguous done-prefix.
+
+        Returns the number of slots handed back to the producer (0 on
+        trylock failure or no contiguous prefix — both are free non-events).
+        """
+        if not self._tail_lock.try_acquire():
+            self.stats.trylock_failures += 1
+            return 0
+        try:
+            tail = self._tail.load()
+            limit = self._claim_head.load()  # nothing beyond has a bit set
+            freed = 0
+            t = tail
+            while t < limit:
+                idx = t & self.mask
+                word, bit = idx // _WORD_BITS, idx % _WORD_BITS
+                if not (self._done[word].load() >> bit) & 1:
+                    break
+                t += 1
+                freed += 1
+            if freed:
+                # Clear bits and recycle slot seq for the next epoch before
+                # publishing the new TAIL (paper line 39 before line 41;
+                # order matters: once TAIL moves the producer may refill).
+                for u in range(tail, t):
+                    idx = u & self.mask
+                    word, bit = idx // _WORD_BITS, idx % _WORD_BITS
+                    self._done[word].fetch_and(~(1 << bit) & (2**64 - 1))
+                    self._seq[idx].store(u + self.size)
+                self._tail.store(t)
+                self.stats.releases += 1
+                self.stats.released_items += freed
+            return freed
+        finally:
+            self._tail_lock.release()
+
+    # ------------------------------------------------------------------
+    # observers
+    # ------------------------------------------------------------------
+    @property
+    def head(self) -> int:
+        return self._head.load()
+
+    @property
+    def tail(self) -> int:
+        return self._tail.load()
+
+    @property
+    def claim_head(self) -> int:
+        return self._claim_head.load()
+
+    def epoch(self) -> int:
+        """How many full rounds the queue has completed (Table 1)."""
+        return self._tail.load() // self.size
+
+    def backlog(self) -> int:
+        """Filled-but-unclaimed items (global workload visibility)."""
+        return self._head.load() - self._claim_head.load()
+
+    def in_flight(self) -> int:
+        """Claimed-but-unreleased slots (bounded by size)."""
+        return self._claim_head.load() - self._tail.load()
+
+    def credit(self) -> int:
+        """Free slots from the producer's point of view."""
+        return self.size - (self._head.load() - self._tail.load())

@@ -1,0 +1,270 @@
+"""TCP flow model over a COREC / scale-out forwarder (paper section 4.3.2).
+
+End-to-end discrete-event simulation of:  senders --> access link -->
+L3 forwarder (the device under test) --> receiver --> ACKs --> senders.
+The forwarder is k workers draining either one shared COREC queue (batch
+claims, natural cross-worker reordering) or k RSS-hashed per-worker queues
+(per-flow in-order, but no work conservation).
+
+TCP is CUBIC-flavoured NewReno with the two Linux-5.13 behaviours that
+matter for reordering tolerance (the paper runs stock CUBIC on 5.13):
+
+* an *adaptive reordering threshold*: fast retransmit fires at
+  ``dup_acks >= reorder_thresh``; detection of a spurious retransmit
+  (DSACK: receiver saw a duplicate segment) raises the threshold, exactly
+  like Linux's tcp_reordering metric / RACK reo_wnd growth.
+* *window undo* on spurious retransmit (Eifel-style): the multiplicative
+  decrease is reverted, so only genuinely lost-looking gaps cost window.
+
+The sender access link is explicitly serialized (``link_pps``): for the
+single-huge-flow test the path is link-bottlenecked like the paper's
+10 Gbps setup, so adding workers cannot speed the flow up — it can only
+hurt via reordering, reproducing Table 5's percent-level FCT deltas.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .baseline import rss_hash
+
+__all__ = ["TcpSimConfig", "FlowResult", "simulate_tcp"]
+
+
+@dataclass
+class TcpSimConfig:
+    policy: str = "corec"  # 'corec' | 'scaleout'
+    n_workers: int = 4
+    batch: int = 32
+    service_mean: float = 1.0  # per-packet forwarding cost (us)
+    service_jitter: float = 0.35  # lognormal sigma on per-packet service
+    claim_overhead: float = 0.6  # per-batch claim cost (us)
+    deschedule_prob: float = 2e-4  # per-batch chance a worker stalls
+    deschedule_mean: float = 150.0  # stall length (us)
+    prop_delay: float = 25.0  # one-way propagation (us)
+    link_pps: float = 0.85  # sender link rate, packets/us (~10GbE @1500B)
+    init_cwnd: int = 10
+    cubic_beta: float = 0.7
+    rwnd: int = 512  # receive-window cap (packets)
+    init_reorder_thresh: int = 3
+    max_reorder_thresh: int = 300  # Linux sysctl tcp_max_reordering
+    rto: float = 5_000.0  # coarse retransmission timer (us)
+    seed: int = 0
+
+
+@dataclass
+class FlowResult:
+    flow_id: int
+    n_packets: int
+    fct: float  # flow completion time (us)
+    retransmissions: int
+    spurious: int
+    t_start: float
+
+
+@dataclass
+class _Flow:
+    fid: int
+    n_packets: int
+    t_start: float
+    cwnd: float = 10.0
+    ssthresh: float = float("inf")
+    next_to_send: int = 0
+    highest_acked: int = -1  # cumulative: all <= this are acked
+    dup_acks: int = 0
+    in_flight: int = 0
+    retx: int = 0
+    spurious: int = 0
+    reorder_thresh: int = 3
+    cwnd_before_cut: float = 0.0
+    last_retx_seq: int = -1
+    done: bool = False
+    t_done: float = 0.0
+    recv_buf: set = field(default_factory=set)
+    recv_next: int = 0  # receiver's next expected seq
+    retx_queue: deque = field(default_factory=deque)
+
+
+def simulate_tcp(
+    flows: List[Tuple[int, int, float]],  # (flow_id, n_packets, t_start)
+    cfg: TcpSimConfig,
+) -> List[FlowResult]:
+    rng = np.random.default_rng(cfg.seed)
+    fl: Dict[int, _Flow] = {
+        fid: _Flow(
+            fid=fid,
+            n_packets=n,
+            t_start=t0,
+            cwnd=float(cfg.init_cwnd),
+            reorder_thresh=cfg.init_reorder_thresh,
+        )
+        for fid, n, t0 in flows
+    }
+
+    # ---- forwarder + link state ----------------------------------------
+    shared: deque = deque()  # corec: one queue of (fid, seq)
+    perq: List[deque] = [deque() for _ in range(cfg.n_workers)]
+    worker_free = [True] * cfg.n_workers
+    counter = itertools.count()  # heap tiebreaker
+    link_free = [0.0]  # sender NIC serialization horizon
+    spacing = 1.0 / cfg.link_pps
+
+    events: list = []  # (t, tiebreak, kind, data)
+
+    def push(t: float, kind: str, data) -> None:
+        heapq.heappush(events, (t, next(counter), kind, data))
+
+    def service_sample() -> float:
+        mu = np.log(cfg.service_mean) - cfg.service_jitter**2 / 2
+        return float(rng.lognormal(mu, cfg.service_jitter))
+
+    # ---- sender ---------------------------------------------------------
+    def try_send(f: _Flow, t: float) -> None:
+        wnd = min(f.cwnd, float(cfg.rwnd))
+        while (not f.done) and f.in_flight < int(wnd) and (
+            f.retx_queue or f.next_to_send < f.n_packets
+        ):
+            if f.retx_queue:
+                seq = f.retx_queue.popleft()
+            else:
+                seq = f.next_to_send
+                f.next_to_send += 1
+            f.in_flight += 1
+            depart = max(t, link_free[0]) + spacing  # NIC serialization
+            link_free[0] = depart
+            push(depart + cfg.prop_delay, "arrive", (f.fid, seq))
+
+    # ---- forwarder ------------------------------------------------------
+    def dispatch(t: float) -> None:
+        """Give every free worker a batch.  COREC: any worker claims from
+        the shared queue (work conserving).  Scale-out: worker w only
+        drains perq[w]."""
+        for w in range(cfg.n_workers):
+            if not worker_free[w]:
+                continue
+            if cfg.policy == "corec":
+                if not shared:
+                    continue
+                batch = [shared.popleft() for _ in range(min(cfg.batch, len(shared)))]
+            else:
+                if not perq[w]:
+                    continue
+                batch = [perq[w].popleft() for _ in range(min(cfg.batch, len(perq[w])))]
+            worker_free[w] = False
+            tt = t + cfg.claim_overhead
+            if rng.random() < cfg.deschedule_prob:
+                tt += float(rng.exponential(cfg.deschedule_mean))
+            for fid, seq in batch:
+                tt += service_sample()
+                push(tt + cfg.prop_delay, "deliver", (fid, seq))
+            push(tt, "worker_free", w)
+
+    # ---- receiver ---------------------------------------------------------
+    def deliver(t: float, fid: int, seq: int) -> None:
+        f = fl[fid]
+        dup = seq < f.recv_next or seq in f.recv_buf  # DSACK condition
+        if not dup:
+            f.recv_buf.add(seq)
+            while f.recv_next in f.recv_buf:
+                f.recv_buf.discard(f.recv_next)
+                f.recv_next += 1
+        push(t + cfg.prop_delay, "ack", (fid, f.recv_next - 1, dup))
+
+    # ---- sender ACK processing -------------------------------------------
+    def on_ack(t: float, fid: int, ackno: int, dsack: bool) -> None:
+        f = fl[fid]
+        if f.done:
+            return
+        if dsack:
+            # Spurious retransmit: raise the reordering threshold
+            # (tcp_reordering adaptation) and undo the window cut (Eifel).
+            f.spurious += 1
+            # Linux raises tcp_reordering to the observed displacement;
+            # approximate with additive growth (RACK's reo_wnd steps too).
+            f.reorder_thresh = min(f.reorder_thresh + 4, cfg.max_reorder_thresh)
+            if f.cwnd_before_cut > f.cwnd:
+                # Eifel-style undo of the rate cut, but the flow stays in
+                # congestion avoidance (ssthresh keeps the cut value).
+                f.cwnd = f.cwnd_before_cut
+        if ackno > f.highest_acked:
+            newly = ackno - f.highest_acked
+            f.highest_acked = ackno
+            f.in_flight = max(0, f.in_flight - newly)
+            f.dup_acks = 0
+            if f.cwnd < f.ssthresh:
+                f.cwnd += newly  # slow start
+            else:
+                f.cwnd += newly / f.cwnd  # congestion avoidance
+            if f.highest_acked >= f.n_packets - 1:
+                f.done = True
+                f.t_done = t
+                return
+        elif not dsack:
+            f.dup_acks += 1
+            if f.dup_acks >= f.reorder_thresh:  # fast retransmit
+                missing = f.highest_acked + 1
+                if missing < f.n_packets and missing != f.last_retx_seq:
+                    f.retx_queue.append(missing)
+                    f.retx += 1
+                    f.last_retx_seq = missing
+                    f.in_flight = max(0, f.in_flight - 1)
+                    f.cwnd_before_cut = f.cwnd
+                    f.ssthresh = max(2.0, f.cwnd * cfg.cubic_beta)
+                    f.cwnd = f.ssthresh
+                f.dup_acks = 0
+        try_send(f, t)
+
+    # ---- main loop ---------------------------------------------------------
+    for f in fl.values():
+        push(f.t_start, "start", f.fid)
+    while events:
+        t, _, kind, data = heapq.heappop(events)
+        if kind == "start":
+            try_send(fl[data], t)
+        elif kind == "arrive":
+            fid, seq = data
+            if cfg.policy == "corec":
+                shared.append((fid, seq))
+            else:
+                perq[rss_hash(fid, cfg.n_workers)].append((fid, seq))
+            dispatch(t)
+        elif kind == "worker_free":
+            worker_free[data] = True
+            dispatch(t)
+        elif kind == "deliver":
+            deliver(t, *data)
+        elif kind == "ack":
+            on_ack(t, *data)
+        # RTO safety: if everything stalls (in-flight accounting drift can
+        # strand a window), coarse timeout: reset and resend from the hole.
+        if not events:
+            for f in fl.values():
+                if not f.done:
+                    f.in_flight = 0
+                    f.dup_acks = 0
+                    f.ssthresh = max(2.0, f.cwnd * cfg.cubic_beta)
+                    f.cwnd = float(cfg.init_cwnd)
+                    missing = f.highest_acked + 1
+                    if missing < f.n_packets and missing not in f.retx_queue:
+                        f.retx_queue.appendleft(missing)
+                        f.retx += 1
+                        f.last_retx_seq = missing
+                    try_send(f, t + cfg.rto)
+
+    return [
+        FlowResult(
+            flow_id=f.fid,
+            n_packets=f.n_packets,
+            fct=(f.t_done - f.t_start),
+            retransmissions=f.retx,
+            spurious=f.spurious,
+            t_start=f.t_start,
+        )
+        for f in fl.values()
+    ]

@@ -1,0 +1,61 @@
+"""COREC done-prefix scan — the paper's TAIL-advance, on device.
+
+``read_batch_done`` (Listing 2 line 37) computes how many *contiguous*
+completed slots start at TAIL; only that prefix may be returned to the
+producer.  The serving engine keeps a device-resident READ_DONE mask for
+its decode slot ring (one bool per slot) and asks this kernel for the
+releasable prefix each step, so slot recycling is computed on-TPU without
+a host round-trip (host sync is the TPU analogue of the store-buffer
+interference the paper's RMW instructions bypass).
+
+Single-block kernel: the mask (<= a few thousand slots) fits one VMEM
+tile; the rotation by TAIL is done with an index comparison instead of a
+gather (TPU-friendly), and the contiguous run length is a masked min.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["done_prefix_pallas"]
+
+
+def _done_prefix_kernel(se_ref, done_ref, out_ref, *, n: int):
+    start = se_ref[0]
+    limit = se_ref[1]
+    d = done_ref[...].astype(jnp.int32)  # [1, n]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    # offset of each slot from start, in ring order
+    off = jnp.where(idx >= start, idx - start, idx + n - start)
+    # first not-done offset == run length (min over not-done slots)
+    first_gap = jnp.min(jnp.where(d == 0, off, n))
+    out_ref[0, 0] = jnp.minimum(first_gap, limit)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def done_prefix_pallas(
+    done: jax.Array,  # [n] bool — READ_DONE
+    start: jax.Array,  # scalar int32 — TAIL slot index
+    limit: jax.Array,  # scalar int32 — at most this many (claim_head - tail)
+    interpret: bool = False,
+) -> jax.Array:
+    n = done.shape[0]
+    se = jnp.stack([start.astype(jnp.int32), limit.astype(jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, n), lambda i, *_: (0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_done_prefix_kernel, n=n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(se, done.reshape(1, n))
+    return out[0, 0]

@@ -1,0 +1,349 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth for the Pallas kernels (asserted allclose in
+tests/test_kernels.py across shape/dtype sweeps) and the portable fallback
+the models use on non-TPU backends (ops.py dispatches).
+
+All functions are batch-light: they take the *core* operand layout; ops.py
+vmaps / reshapes model-layer layouts onto them.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rmsnorm_ref",
+    "attention_ref",
+    "flash_attention_ref",
+    "decode_attention_ref",
+    "rwkv6_scan_ref",
+    "rwkv6_chunk_ref",
+    "ssd_scan_ref",
+    "ssd_chunk_ref",
+    "done_prefix_ref",
+]
+
+
+# ----------------------------------------------------------------------
+# RMSNorm
+# ----------------------------------------------------------------------
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """y = x / rms(x) * w, reduction in fp32 (TPU-style)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# Attention (GQA, optional causal) — naive full-score oracle
+# ----------------------------------------------------------------------
+def attention_ref(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Sk, Hkv, D]
+    v: jax.Array,  # [B, Sk, Hkv, D]
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Materialised-scores attention.  ``q_offset`` positions the query
+    block inside the kv timeline (decode: q_offset = cache_len)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    assert H % Hkv == 0
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads over the group dim
+    qg = qf.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf)
+    if causal:
+        Sk = k.shape[1]
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(Sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# Flash attention (chunked online-softmax) — jnp implementation
+# ----------------------------------------------------------------------
+def flash_attention_ref(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Sk, Hkv, D]
+    v: jax.Array,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    block_k: int = 512,
+) -> jax.Array:
+    """Blocked over KV with running (m, l, acc) — identical math to the
+    Pallas kernel; O(Sq * block_k) live memory instead of O(Sq * Sk).
+    This is also what the models use on XLA backends for long sequences:
+    the memory-roofline term depends on it (see EXPERIMENTS.md §Perf)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    nblk = -(-Sk // block_k)
+    pad = nblk * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_k, Hkv, D)
+    vb = v.reshape(B, nblk, block_k, Hkv, D)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, D)
+    qpos = jnp.arange(Sq) + q_offset
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kc, vc, j = blk  # kc: [B, bk, Hkv, D]
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kc.astype(jnp.float32))
+        kpos = j * block_k + jnp.arange(block_k)
+        valid = kpos < Sk
+        if causal:
+            valid = valid[None, :] & (qpos[:, None] >= kpos[None, :])
+            s = jnp.where(valid[None, :, None, None, :], s, -jnp.inf)
+        else:
+            s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        o = jnp.einsum("bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+        acc_new = acc * alpha[..., None] + o
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    kbt = jnp.moveaxis(kb, 1, 0)
+    vbt = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kbt, vbt, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# Decode attention (single query position per sequence)
+# ----------------------------------------------------------------------
+def decode_attention_ref(
+    q: jax.Array,  # [B, H, D] — one new token per sequence
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    lengths: jax.Array,  # [B] int32 — valid cache length per sequence
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    mask = jnp.arange(S)[None] < lengths[:, None]  # [B, S]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# RWKV6 (Finch) WKV: data-dependent per-channel decay
+# ----------------------------------------------------------------------
+def rwkv6_scan_ref(
+    r: jax.Array,  # [T, N]   (single head; ops.py vmaps over B, H)
+    k: jax.Array,  # [T, N]
+    v: jax.Array,  # [T, N]
+    w: jax.Array,  # [T, N]   decay in (0, 1): w = exp(-exp(w_raw))
+    u: jax.Array,  # [N]      bonus for the current token
+    state: Optional[jax.Array] = None,  # [N, N] (k-dim, v-dim)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential oracle:  o_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t,
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T."""
+    T, N = r.shape
+    S0 = jnp.zeros((N, N), jnp.float32) if state is None else state.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.outer(kt, vt)
+        o = (S + u[:, None] * kv).T @ rt
+        S_new = wt[:, None] * S + kv
+        return S_new, o
+
+    S, o = jax.lax.scan(
+        step,
+        S0,
+        (
+            r.astype(jnp.float32),
+            k.astype(jnp.float32),
+            v.astype(jnp.float32),
+            w.astype(jnp.float32),
+        ),
+    )
+    return o.astype(r.dtype), S
+
+
+def rwkv6_chunk_ref(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: Optional[jax.Array] = None,
+    chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked-parallel form (the algorithm the Pallas kernel implements).
+
+    Within a chunk of length C (cumprod a_t = prod_{s<=t} w_s, a_{-1}=1):
+      intra:  o_t += sum_{s<t} [r_t * a_{t-1}/a_s? -> careful: decays apply
+              between s+1..t-1] + bonus at s=t
+      cross:  o_t += (r_t * a_{t-1}) @ S_prev
+      carry:  S    = diag(a_{C-1}) S_prev + sum_s diag(a_{C-1}/a_s) k_s v_s^T
+    Decay products are kept in log space for stability.
+    """
+    T, N = r.shape
+    assert T % chunk == 0, "pad sequence to a multiple of the chunk"
+    C = T // chunk
+    S = jnp.zeros((N, N), jnp.float32) if state is None else state.astype(jnp.float32)
+    rf = r.astype(jnp.float32).reshape(C, chunk, N)
+    kf = k.astype(jnp.float32).reshape(C, chunk, N)
+    vf = v.astype(jnp.float32).reshape(C, chunk, N)
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30)).reshape(C, chunk, N)
+
+    def chunk_step(S, inp):
+        rc, kc, vc, lw = inp  # [chunk, N]
+        la = jnp.cumsum(lw, axis=0)  # log a_t (inclusive)
+        la_prev = la - lw  # log a_{t-1} (exclusive)
+        r_decay = rc * jnp.exp(la_prev)  # r_t * a_{t-1}
+        k_scaled = kc * jnp.exp(-la)  # k_s / a_s
+        # intra-chunk, strictly lower triangular  (s < t)
+        A = r_decay @ k_scaled.T  # [t, s]
+        A = jnp.where(jnp.tril(jnp.ones((chunk, chunk), bool), k=-1), A, 0.0)
+        # diagonal bonus term  s = t
+        diag = jnp.sum(rc * (u[None, :] * kc), axis=-1)
+        o = A @ vc + diag[:, None] * vc
+        # cross-chunk
+        o = o + r_decay @ S
+        # carry state
+        la_end = la[-1]
+        S_new = jnp.exp(la_end)[:, None] * S + (
+            (kc * jnp.exp(la_end[None, :] - la)).T @ vc
+        )
+        return S_new, o
+
+    S, o = jax.lax.scan(chunk_step, S, (rf, kf, vf, logw))
+    return o.reshape(T, N).astype(r.dtype), S
+
+
+# ----------------------------------------------------------------------
+# Mamba2 SSD (scalar per-head decay, vector B/C)
+# ----------------------------------------------------------------------
+def ssd_scan_ref(
+    x: jax.Array,  # [T, P]    head channels
+    dt: jax.Array,  # [T]       softplus'd step size
+    A: jax.Array,  # []        scalar decay rate (negative)
+    B: jax.Array,  # [T, N]
+    C: jax.Array,  # [T, N]
+    D: jax.Array,  # []        skip
+    state: Optional[jax.Array] = None,  # [P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential oracle: S_t = exp(A dt_t) S_{t-1} + dt_t x_t B_t^T;
+    y_t = S_t C_t + D x_t."""
+    T, P = x.shape
+    N = B.shape[1]
+    S0 = jnp.zeros((P, N), jnp.float32) if state is None else state.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(A.astype(jnp.float32) * dtt)
+        S_new = dA * S + jnp.outer(dtt * xt, Bt)
+        y = S_new @ Ct + D.astype(jnp.float32) * xt
+        return S_new, y
+
+    S, y = jax.lax.scan(
+        step,
+        S0,
+        (
+            x.astype(jnp.float32),
+            dt.astype(jnp.float32),
+            B.astype(jnp.float32),
+            C.astype(jnp.float32),
+        ),
+    )
+    return y.astype(x.dtype), S
+
+
+def ssd_chunk_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    D: jax.Array,
+    state: Optional[jax.Array] = None,
+    chunk: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (Mamba2's 'state space dual' algorithm), log-space
+    segment sums for the scalar decays."""
+    T, P = x.shape
+    N = B.shape[1]
+    assert T % chunk == 0
+    Cn = T // chunk
+    S = jnp.zeros((P, N), jnp.float32) if state is None else state.astype(jnp.float32)
+    xf = x.astype(jnp.float32).reshape(Cn, chunk, P)
+    dtf = dt.astype(jnp.float32).reshape(Cn, chunk)
+    Bf = B.astype(jnp.float32).reshape(Cn, chunk, N)
+    Cf = C.astype(jnp.float32).reshape(Cn, chunk, N)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(S, inp):
+        xc, dtc, Bc, Cc = inp
+        ladt = Af * dtc  # log decay per step  [chunk]
+        lcum = jnp.cumsum(ladt)  # inclusive
+        # intra-chunk: y_t = sum_{s<=t} exp(lcum_t - lcum_s) (C_t.B_s) dt_s x_s
+        L = lcum[:, None] - lcum[None, :]  # [t, s]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        G = jnp.where(causal, jnp.exp(L), 0.0) * (Cc @ Bc.T)
+        y = G @ (dtc[:, None] * xc)
+        # cross-chunk: y_t += C_t @ (exp(lcum_t) S^T)  -> [t, P]
+        y = y + jnp.exp(lcum)[:, None] * (Cc @ S.T)
+        # carry: S_new = exp(lcum_end) S + sum_s exp(lcum_end - lcum_s) dt_s x_s B_s^T
+        decay_to_end = jnp.exp(lcum[-1] - lcum)
+        S_new = jnp.exp(lcum[-1]) * S + (
+            (decay_to_end[:, None] * dtc[:, None] * xc).T @ Bc
+        )
+        return S_new, y
+
+    S, y = jax.lax.scan(chunk_step, S, (xf, dtf, Bf, Cf))
+    y = y.reshape(T, P) + D.astype(jnp.float32) * x.astype(jnp.float32)
+    return y.astype(x.dtype), S
+
+
+# ----------------------------------------------------------------------
+# COREC done-prefix: contiguous completed run from TAIL (paper line 37)
+# ----------------------------------------------------------------------
+def done_prefix_ref(done: jax.Array, start: jax.Array, limit: jax.Array) -> jax.Array:
+    """Length of the contiguous set-bit run in ``done`` starting at
+    ``start`` (mod n), capped at ``limit`` slots.  ``done`` is a bool[n]
+    view of the READ_DONE bitmask.  Used by the serving engine to compute
+    how many finished decode slots can be released to the request producer
+    in one contiguous batch (the TAIL-advance of the paper on-device)."""
+    n = done.shape[0]
+    idx = (start + jnp.arange(n)) % n
+    run = jnp.cumprod(done[idx].astype(jnp.int32))
+    return jnp.minimum(jnp.sum(run), limit).astype(jnp.int32)

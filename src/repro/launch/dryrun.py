@@ -1,0 +1,375 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. jits the right step (train_4k -> train_step; prefill_32k ->
+     prefill_step; decode_32k / long_500k -> serve_step) with the logical
+     shardings from repro.sharding, donated state,
+  3. ``.lower(**input_specs).compile()`` — success IS the deliverable,
+  4. prints ``compiled.memory_analysis()`` and ``cost_analysis()``,
+  5. derives roofline terms.  XLA's cost analysis counts a scan body once
+     (ignoring the trip count), so FLOPs/bytes/collective-bytes are taken
+     from two *unrolled* small-depth compiles (1 and 2 scan units at full
+     width): total = base + n_units * (cost(2) - cost(1)).  Collective
+     bytes are parsed from the unrolled ``compiled.as_text()`` HLO
+     (operand bytes of all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute).
+
+Results land in benchmarks/results/dryrun/<cell>.json for the roofline
+report (benchmarks/roofline.py reads them).
+
+Usage:
+  python -m repro.launch.dryrun --arch grok-1-314b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  ... [--remat-policy dots] [--no-seq-shard-cache] [--microbatches 4]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..config import SHAPES, ArchConfig, ShapeConfig, cell_is_applicable, shape_by_name
+from .mesh import make_production_mesh
+from .specs import input_specs
+from .steps import build_steps
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# hardware model (TPU v5e-class, per assignment)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather(", "all-reduce(", "reduce-scatter(",
+                "all-to-all(", "collective-permute(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-device ICI bytes per collective kind, from post-SPMD HLO.
+
+    The per-device module prints operand types only on the op *output*
+    (operands are bare %refs), so we charge per-op bytes from the output
+    shard shape with the standard ring-algorithm factors:
+      all-gather         output bytes          (data received per device)
+      all-reduce         2 x output bytes      (reduce-scatter + all-gather)
+      reduce-scatter     output x group_size   (the full input operand)
+      all-to-all         output bytes
+      collective-permute output bytes
+    """
+    out = {k.rstrip("("): 0 for k in _COLLECTIVES}
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            if kind in line and "=" in line:
+                m = _SHAPE_RE.search(line.split("=", 1)[1])
+                if m is None:
+                    break
+                b = _shape_bytes(m.group(1), m.group(2))
+                key = kind.rstrip("(")
+                if key == "all-reduce":
+                    b *= 2
+                elif key == "reduce-scatter":
+                    g = _GROUPS_RE.search(line)
+                    b *= int(g.group(2)) if g else 1
+                out[key] += b
+                n_ops += 1
+                break
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["n_ops"] = n_ops
+    return out
+
+
+def _cfg_with_units(cfg: ArchConfig, k: int) -> ArchConfig:
+    """Config with k scan-units, unrolled (for cost extrapolation)."""
+    if cfg.cross_attn_every:  # vlm: unit = one group of `period` layers
+        return cfg.replace(n_layers=k * cfg.cross_attn_every, use_scan=False)
+    if cfg.is_encdec:  # whisper: unit = 1 enc + 1 dec layer
+        return cfg.replace(n_layers=k, enc_layers=k, use_scan=False)
+    if cfg.shared_attn_every:  # zamba: unit = period mambas + shared block
+        return cfg.replace(n_layers=k * cfg.shared_attn_every, use_scan=False)
+    return cfg.replace(n_layers=k, use_scan=False)
+
+
+def _n_units(cfg: ArchConfig) -> float:
+    if cfg.cross_attn_every:
+        return cfg.n_layers / cfg.cross_attn_every
+    if cfg.is_encdec:
+        return float(cfg.n_layers)
+    if cfg.shared_attn_every:
+        return cfg.n_layers / cfg.shared_attn_every
+    return float(cfg.n_layers)
+
+
+def _lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, microbatches: int = 1):
+    """Build + lower + compile one cell; returns (compiled, lowered)."""
+    bundle = build_steps(cfg, mesh, microbatches=microbatches)
+    data_par = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if shape.global_batch < data_par:
+        # long_500k (B=1): batch can't shard; replicate it.
+        bundle.rules.table["batch"] = None
+        bundle.serve_rules.table["batch"] = None
+    with mesh:
+        if shape.kind == "train":
+            batch = input_specs(cfg, shape)
+            batch_sh = bundle.batch_sharding(batch)
+            params, opt = bundle.abstract_state()
+            fn = jax.jit(
+                bundle.train_step,
+                in_shardings=(bundle.param_shardings, bundle.opt_shardings, batch_sh),
+                out_shardings=(bundle.param_shardings, bundle.opt_shardings, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            batch = input_specs(cfg, shape)
+            batch_sh = bundle.batch_sharding(batch)
+            params, _ = bundle.abstract_state()
+            cache_sh = bundle.cache_shardings(shape.global_batch, shape.seq_len)
+            fn = jax.jit(
+                lambda p, b: bundle.prefill_step(p, b, max_seq=shape.seq_len),
+                in_shardings=(bundle.param_shardings, batch_sh),
+                out_shardings=(cache_sh, None),
+            )
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            cache, tokens = input_specs(cfg, shape)
+            cache_sh = bundle.cache_shardings(shape.global_batch, shape.seq_len)
+            params, _ = bundle.abstract_state()
+            tok_sh = bundle.batch_sharding(tokens)
+            fn = jax.jit(
+                bundle.serve_step,
+                in_shardings=(bundle.serve_param_shardings, cache_sh, tok_sh),
+                out_shardings=(cache_sh, None),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(params, cache, tokens)
+        compiled = lowered.compile()
+    return compiled, lowered
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    overrides: dict | None = None,
+    probe_costs: bool = True,
+    microbatches: int = 1,
+    tag: str = "",
+    verbose: bool = True,
+) -> dict:
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = shape_by_name(shape_name)
+    ok, why = cell_is_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why,
+                "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    compiled, lowered = _lower_cell(cfg, shape, mesh, microbatches)
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)
+    ca = compiled.cost_analysis() or {}
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    mem_d = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        mem_d[attr] = getattr(mem, attr, None)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "kind": shape.kind,
+        "compile_seconds": round(compile_s, 1),
+        "memory_analysis": mem_d,
+        "tag": tag, "overrides": overrides or {},
+        "microbatches": microbatches,
+    }
+
+    if probe_costs:
+        # unrolled 1-unit and 2-unit compiles at full width
+        costs = {}
+        for k in (1, 2):
+            ck = _cfg_with_units(cfg, k)
+            comp_k, _ = _lower_cell(ck, shape, mesh, microbatches)
+            ca_k = comp_k.cost_analysis() or {}
+            coll = parse_collective_bytes(comp_k.as_text())
+            costs[k] = {
+                "flops": float(ca_k.get("flops", 0.0)),
+                "bytes": float(ca_k.get("bytes accessed", 0.0)),
+                "collective_bytes": float(coll["total"]),
+                "collective_detail": coll,
+            }
+        n_units = _n_units(cfg)
+        # XLA occasionally optimizes the 1-unit program into MORE flops
+        # than the 2-unit one (fusion/layout flips at trivial depth); when
+        # the (1,2) delta is non-positive, reprobe with (2,3).
+        if costs[2]["flops"] <= costs[1]["flops"]:
+            c3 = _cfg_with_units(cfg, 3)
+            comp3, _ = _lower_cell(c3, shape, mesh, microbatches)
+            ca3 = comp3.cost_analysis() or {}
+            coll3 = parse_collective_bytes(comp3.as_text())
+            costs[3] = {
+                "flops": float(ca3.get("flops", 0.0)),
+                "bytes": float(ca3.get("bytes accessed", 0.0)),
+                "collective_bytes": float(coll3["total"]),
+                "collective_detail": coll3,
+            }
+            lo, hi = 2, 3
+        else:
+            lo, hi = 1, 2
+        extrap = {}
+        for key in ("flops", "bytes", "collective_bytes"):
+            delta = costs[hi][key] - costs[lo][key]
+            base = costs[lo][key] - lo * delta
+            extrap[key] = max(base + n_units * delta, costs[hi][key])
+            extrap[key + "_per_unit"] = delta
+            extrap[key + "_base"] = base
+        # cost_analysis / the HLO module are PER-DEVICE in SPMD: the terms
+        # below are per-chip step times already.
+        extrap["compute_s"] = extrap["flops"] / PEAK_FLOPS
+        extrap["memory_s"] = extrap["bytes"] / HBM_BW
+        extrap["collective_s"] = extrap["collective_bytes"] / ICI_BW
+        dominant = max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: extrap[k]
+        )
+        extrap["dominant"] = dominant
+        # model flops (6 N D train, 2 N D inference; decode D = batch)
+        n_active = cfg.n_active_params()
+        if shape.kind == "train":
+            D = shape.global_batch * shape.seq_len
+            model_flops = 6 * n_active * D
+        elif shape.kind == "prefill":
+            D = shape.global_batch * shape.seq_len
+            model_flops = 2 * n_active * D
+        else:
+            model_flops = 2 * n_active * shape.global_batch
+        extrap["model_flops"] = float(model_flops)
+        extrap["model_flops_per_chip"] = float(model_flops) / n_chips
+        extrap["useful_fraction"] = (
+            float(model_flops) / n_chips / max(extrap["flops"], 1.0)
+        )
+        result["roofline"] = extrap
+        result["unit_costs"] = costs
+
+    if verbose:
+        r = result.get("roofline", {})
+        print(
+            f"[dryrun] {arch} x {shape_name} x {result['mesh']}"
+            f" compile={compile_s:.0f}s"
+            + (
+                f" compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s"
+                f" coll={r['collective_s']:.3e}s dom={r['dominant']}"
+                f" useful={r['useful_fraction']:.2f}"
+                if r
+                else ""
+            ),
+            flush=True,
+        )
+    return result
+
+
+def save_result(res: dict, out_dir: Path = RESULTS_DIR) -> Path:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = ("_" + res["tag"]) if res.get("tag") else ""
+    name = f"{res['arch']}__{res['shape']}__{res['mesh'].replace('x','-')}{tag}.json"
+    p = out_dir / name
+    p.write_text(json.dumps(res, indent=2, default=str))
+    return p
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="all (arch x shape) cells")
+    ap.add_argument("--no-probe", action="store_true", help="skip cost extrapolation")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--remat-policy", default=None, choices=["full", "dots", "none"])
+    ap.add_argument("--no-seq-shard-cache", action="store_true")
+    ap.add_argument("--attention-block-k", type=int, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+    if args.no_seq_shard_cache:
+        overrides["seq_shard_cache"] = False
+    if args.attention_block_k:
+        overrides["attention_block_k"] = args.attention_block_k
+    if args.capacity_factor:
+        overrides["capacity_factor"] = args.capacity_factor
+
+    cells = []
+    archs = configs.ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in cells:
+        if args.skip_existing:
+            mesh_tag = "2-16-16" if mp else "16-16"
+            tag = ("_" + args.tag) if args.tag else ""
+            if (RESULTS_DIR / f"{a}__{s}__{mesh_tag}{tag}.json").exists():
+                continue
+        try:
+            res = run_cell(
+                a, s, mp, overrides=overrides or None,
+                probe_costs=not args.no_probe,
+                microbatches=args.microbatches, tag=args.tag,
+            )
+            save_result(res)
+            if res.get("skipped"):
+                print(f"[dryrun] {a} x {s} SKIPPED: {res['skipped']}", flush=True)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures.append((a, s, mp, repr(e)))
+            print(f"[dryrun] FAIL {a} x {s} multi={mp}: {e!r}", flush=True)
+    if failures:
+        print(f"[dryrun] {len(failures)} failures", flush=True)
+        sys.exit(1)
+    print("[dryrun] all cells OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs`` returns exactly the pytrees a step callable is lowered
+against — weak-type-correct, shardable, no device allocation.  The
+modality frontends are stubs per the assignment: VLM cells get patch
+embeddings, audio cells get frame embeddings, already in d_model.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig, ShapeConfig
+from ..models.api import build_model
+from ..models.spec import abstract_params
+
+__all__ = ["train_batch_specs", "prefill_batch_specs", "decode_input_specs",
+           "input_specs"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = _sds((B, cfg.n_image_tokens, cfg.d_model), dt)
+    if cfg.is_encdec:
+        batch["audio_embeds"] = _sds((B, cfg.enc_len, cfg.d_model), dt)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    batch = train_batch_specs(cfg, shape)
+    del batch["labels"]
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[Any, Any]:
+    """(cache_specs_abstract, tokens) for serve_step."""
+    model = build_model(cfg)
+    cache = abstract_params(model.cache_specs(shape.global_batch, shape.seq_len))
+    tokens = _sds((shape.global_batch, 1), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

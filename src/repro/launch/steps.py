@@ -1,0 +1,156 @@
+"""Step builders: train_step / prefill_step / serve_step with shardings.
+
+``build_steps`` wires a model, the logical sharding rules for a mesh, and
+the optimizer into jit-able step callables plus the in/out shardings the
+dry-run and the real launchers both use.  Grad accumulation microbatches
+are scanned with *sharded* (already reduce-scattered) accumulators so
+XLA's latency-hiding scheduler can overlap microbatch k+1's compute with
+microbatch k's gradient collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..config import ArchConfig, ShapeConfig
+from ..models.api import build_model
+from ..models.spec import abstract_params
+from ..optim import AdamW, OptState, apply_updates
+from ..sharding import LogicalRules, make_rules, tree_shardings
+
+__all__ = ["StepBundle", "build_steps"]
+
+
+@dataclass
+class StepBundle:
+    model: Any
+    rules: LogicalRules
+    serve_rules: LogicalRules
+    optimizer: AdamW
+    train_step: Callable
+    prefill_step: Callable
+    serve_step: Callable
+    param_shardings: Any
+    serve_param_shardings: Any
+    opt_shardings: Any
+    batch_sharding: Callable  # leaf-shape -> NamedSharding
+    cache_shardings: Callable  # (batch, seq) -> shardings pytree
+
+    def abstract_state(self):
+        params = abstract_params(self.model.param_specs())
+        m = params
+        v = params
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        return params, OptState(m=m, v=v, step=step)
+
+
+def _batch_shardings(rules: LogicalRules, batch_specs) -> Any:
+    def leaf(s):
+        if s.ndim >= 3:  # modality embeddings [B, T, d]
+            return rules.sharding(("batch", None, None))
+        if s.ndim == 2:
+            return rules.sharding(("batch", "seq"))
+        return rules.sharding(("batch",))
+
+    return jax.tree_util.tree_map(leaf, batch_specs)
+
+
+def build_steps(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    lr_fn: Optional[Callable] = None,
+    optimizer: Optional[AdamW] = None,
+    microbatches: int = 1,
+    serve_replicate_weights: Optional[bool] = None,
+) -> StepBundle:
+    model = build_model(cfg)
+    rules = make_rules(cfg, mesh)
+    optimizer = optimizer or AdamW()
+    lr_fn = lr_fn or (lambda step: jnp.float32(3e-4))
+
+    param_specs = model.param_specs()
+    param_sh = tree_shardings(rules, param_specs)
+    opt_sh = OptState(m=param_sh, v=param_sh,
+                      step=NamedSharding(mesh, P()))
+
+    # Inference sharding != training sharding: decode steps amortize ZeRO-3
+    # weight gathers over ONE token, so when the bf16 weights fit HBM with
+    # model-axis sharding alone, replicate them over 'data' for serving
+    # (EXPERIMENTS.md section Perf, rwkv decode hillclimb).
+    model_ax = mesh.shape.get("model", 1)
+    if serve_replicate_weights is None:
+        serve_replicate_weights = (cfg.n_params() * 2 / model_ax) < 8e9
+    serve_rules = make_rules(cfg, mesh)
+    if serve_replicate_weights:
+        serve_rules.table["embed"] = None
+    serve_param_sh = tree_shardings(serve_rules, param_specs)
+
+    # ------------------------------------------------------------------
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, b):
+            loss, metrics = model.loss(p, b, rules)
+            return loss, metrics
+
+        if microbatches > 1:
+            def micro(carry, mb):
+                gsum, msum = carry
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads
+                )
+                return (gsum, msum + loss), None
+
+            mb_batch = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(micro, (zeros, 0.0), mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"ce": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        lr = lr_fn(opt_state.step)
+        updates, new_opt = optimizer.update(grads, opt_state, params, lr)
+        new_params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return new_params, new_opt, metrics
+
+    # ------------------------------------------------------------------
+    def prefill_step(params, batch, max_seq: Optional[int] = None):
+        return model.prefill(params, batch, rules, max_seq=max_seq)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, serve_rules)
+
+    def cache_shardings(batch_size: int, seq_len: int):
+        return tree_shardings(serve_rules, model.cache_specs(batch_size, seq_len))
+
+    return StepBundle(
+        model=model,
+        rules=rules,
+        serve_rules=serve_rules,
+        optimizer=optimizer,
+        train_step=train_step,
+        prefill_step=prefill_step,
+        serve_step=serve_step,
+        param_shardings=param_sh,
+        serve_param_shardings=serve_param_sh,
+        opt_shardings=opt_sh,
+        batch_sharding=lambda specs: _batch_shardings(rules, specs),
+        cache_shardings=cache_shardings,
+    )

@@ -1,0 +1,50 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains the tiny variant of the chosen arch on
+the local mesh; on a real fleet the same flags select the full config and
+the production mesh (the code path is identical — build_steps + Trainer).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from .. import configs
+from ..train import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=configs.ALL_ARCHS)
+    ap.add_argument("--tiny", action="store_true", default=True,
+                    help="use the reduced smoke config (CPU default)")
+    ap.add_argument("--full", dest="tiny", action="store_false")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_tiny(args.arch) if args.tiny else configs.get(args.arch)
+    # minicpm trains with WSD per its paper
+    schedule = "wsd" if args.arch == "minicpm-2b" else args.schedule
+    tcfg = TrainerConfig(
+        batch=args.batch, seq=args.seq, steps=args.steps, lr=args.lr,
+        schedule=schedule, microbatches=args.microbatches,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+    )
+    trainer = Trainer(cfg, tcfg)
+    out = trainer.run()
+    first, last = out["losses"][0], out["losses"][-1]
+    print(f"[train] {cfg.name}: {len(out['losses'])} steps, "
+          f"loss {first:.3f} -> {last:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Model construction dispatch: ArchConfig -> model object.
+
+Every model exposes the same surface:
+  param_specs() / abstract_params() / init(rng)
+  loss(params, batch, rules) -> (scalar, metrics)
+  prefill(params, batch, rules, max_seq) -> (cache, last_logits)
+  decode_step(params, cache, tokens, rules) -> (cache, logits)
+  cache_specs(batch_size, seq_len) -> ParamSpec pytree
+"""
+
+from __future__ import annotations
+
+from ..config import ArchConfig
+from .rwkv import Rwkv6LM
+from .transformer import DecoderLM
+from .whisper import EncDecLM
+from .zamba import ZambaLM
+
+__all__ = ["build_model"]
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.rwkv:
+        return Rwkv6LM(cfg)
+    if cfg.ssm_state > 0 and cfg.shared_attn_every > 0:
+        return ZambaLM(cfg)
+    if cfg.is_encdec:
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,405 @@
+"""Shared transformer building blocks (pure-functional JAX).
+
+All blocks take params as plain dicts (leaves created from ParamSpec
+trees), an optional ``LogicalRules`` for activation sharding constraints
+(None => no-op, used by CPU smoke tests), and the compute dtype from the
+ArchConfig.  Heavy math dispatches through repro.kernels.ops.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from ..kernels import ops
+from .spec import ParamSpec
+
+__all__ = [
+    "cdtype",
+    "rope",
+    "norm_specs",
+    "apply_norm",
+    "attn_specs",
+    "attention_block",
+    "attention_decode_block",
+    "mlp_specs",
+    "mlp_block",
+    "moe_specs",
+    "moe_block",
+    "embed_specs",
+    "unembed",
+    "use_weight",
+    "embed_tokens",
+    "cast_tree",
+]
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def cast_tree(params, dt):
+    """Cast every floating leaf to the compute dtype ONCE at step entry.
+
+    Keeps the FSDP weight all-gathers in bf16: cast-inside-layer lets XLA
+    gather the f32 master first and convert after (2x DCN/ICI bytes —
+    observed in the grok HLO); casting the whole tree before the layer
+    scan pins convert-then-gather.  Grad of astype accumulates in f32.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dt)
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+        else x,
+        params,
+    )
+
+
+def _c(x, dt):
+    return x.astype(dt)
+
+
+def _constrain(rules, x, *axes):
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(tuple(axes)))
+
+
+def use_weight(rules, w, axes, dt):
+    """Cast + ZeRO-3 use-time constraint: drop the 'embed' (FSDP) sharding
+    so GSPMD all-gathers the WEIGHT over 'data' at the matmul instead of
+    un-sharding the batched activations (which replicates the full global
+    batch — the 40 GB logits-all-gather failure mode).  TP axes stay."""
+    w = w.astype(dt)
+    if rules is None:
+        return w
+    return jax.lax.with_sharding_constraint(w, rules.sharding(tuple(axes)))
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D] (D even), positions: [B, S] or [S]."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+def norm_specs(cfg: ArchConfig, kind: str = "rms") -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    s = {"w": ParamSpec((d,), (None,), init="ones")}
+    if kind == "ln":
+        s["b"] = ParamSpec((d,), (None,), init="zeros")
+    return s
+
+
+def apply_norm(p: Dict[str, Any], x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if "b" in p:  # LayerNorm (whisper)
+        xf = x.astype(jnp.float32)
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        return (y * p["w"] + p["b"]).astype(x.dtype)
+    return ops.rmsnorm(x, p["w"], eps=cfg.norm_eps, impl=cfg.attention_impl
+                       if cfg.attention_impl in ("xla", "naive") else "auto")
+
+
+# ----------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------
+def attn_specs(cfg: ArchConfig, cross: bool = False, d_in: Optional[int] = None
+               ) -> Dict[str, ParamSpec]:
+    d = d_in if d_in is not None else cfg.d_model
+    dh, H, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    s = {
+        "wq": ParamSpec((d, H, dh), ("embed", "heads", None)),
+        "wk": ParamSpec((cfg.d_model if cross else d, Hkv, dh),
+                        ("embed", "kv_heads", None)),
+        "wv": ParamSpec((cfg.d_model if cross else d, Hkv, dh),
+                        ("embed", "kv_heads", None)),
+        "wo": ParamSpec((H, dh, cfg.d_model), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((H, dh), ("heads", None), init="zeros")
+        s["bk"] = ParamSpec((Hkv, dh), ("kv_heads", None), init="zeros")
+        s["bv"] = ParamSpec((Hkv, dh), ("kv_heads", None), init="zeros")
+    return s
+
+
+def _qkv(p, x, mem, cfg, dt, rules=None):
+    """x: [B,S,d] query source; mem: [B,Sk,d] key/value source."""
+    q = jnp.einsum("bsd,dhk->bshk", x, use_weight(rules, p["wq"], (None, "heads", None), dt))
+    k = jnp.einsum("bsd,dhk->bshk", mem, use_weight(rules, p["wk"], (None, "kv_heads", None), dt))
+    v = jnp.einsum("bsd,dhk->bshk", mem, use_weight(rules, p["wv"], (None, "kv_heads", None), dt))
+    if "bq" in p:
+        q = q + _c(p["bq"], dt)
+        k = k + _c(p["bk"], dt)
+        v = v + _c(p["bv"], dt)
+    return q, k, v
+
+
+def attention_block(
+    p: Dict[str, Any],
+    x: jax.Array,  # [B, S, d]
+    cfg: ArchConfig,
+    rules=None,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    memory: Optional[jax.Array] = None,  # cross-attn source [B, Sk, d]
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence attention (train / prefill).  Returns (out, kv) where
+    kv holds the computed K/V for cache initialisation in prefill."""
+    dt = cdtype(cfg)
+    mem = memory if memory is not None else x
+    q, k, v = _qkv(p, x, mem, cfg, dt, rules)
+    if use_rope and memory is None:
+        pos = positions if positions is not None else jnp.arange(x.shape[1])
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    q = _constrain(rules, q, "batch", "seq", "heads", None)
+    k = _constrain(rules, k, "batch", "seq", "kv_heads", None)
+    o = ops.attention(
+        q, k, v, causal=causal, impl=cfg.attention_impl,
+        block_k=cfg.attention_block_k,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", o, use_weight(rules, p["wo"], ("heads", None, None), dt))
+    return out, {"k": k, "v": v}
+
+
+def attention_decode_block(
+    p: Dict[str, Any],
+    x: jax.Array,  # [B, 1, d] — the new token
+    k_cache: jax.Array,  # [B, S, Hkv, dh] (already includes this token after update)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # [B] valid length INCLUDING the new token
+    cfg: ArchConfig,
+    rules=None,
+    use_rope: bool = True,
+) -> jax.Array:
+    dt = cdtype(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, use_weight(rules, p["wq"], (None, "heads", None), dt))
+    if "bq" in p:
+        q = q + _c(p["bq"], dt)
+    if use_rope:
+        q = rope(q, (lengths - 1)[:, None], cfg.rope_theta)
+    o = ops.decode_attention(
+        q[:, 0], k_cache, v_cache, lengths, impl=cfg.attention_impl
+    )
+    return jnp.einsum("bhk,hkd->bd", o, use_weight(rules, p["wo"], ("heads", None, None), dt))[:, None, :]
+
+
+def decode_kv(p, x, lengths, cfg, rules=None):
+    """K/V for the new token (decode): [B, 1, Hkv, dh] each, rope'd."""
+    dt = cdtype(cfg)
+    k = jnp.einsum("bsd,dhk->bshk", x, use_weight(rules, p["wk"], (None, "kv_heads", None), dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, use_weight(rules, p["wv"], (None, "kv_heads", None), dt))
+    if "bk" in p:
+        k = k + _c(p["bk"], dt)
+        v = v + _c(p["bv"], dt)
+    k = rope(k, (lengths - 1)[:, None], cfg.rope_theta)
+    return k, v
+
+
+# ----------------------------------------------------------------------
+# Dense MLP (gated SwiGLU or plain GELU)
+# ----------------------------------------------------------------------
+def mlp_specs(cfg: ArchConfig, gated: bool = True) -> Dict[str, ParamSpec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    s = {
+        "w1": ParamSpec((d, ff), ("embed", "mlp")),
+        "w2": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+    if gated:
+        s["w3"] = ParamSpec((d, ff), ("embed", "mlp"))
+    return s
+
+
+def mlp_block(p, x, cfg: ArchConfig, rules=None) -> jax.Array:
+    dt = cdtype(cfg)
+    h = jnp.einsum("bsd,df->bsf", x, use_weight(rules, p["w1"], (None, "mlp"), dt))
+    if "w3" in p:
+        h = jax.nn.silu(h) * jnp.einsum(
+            "bsd,df->bsf", x, use_weight(rules, p["w3"], (None, "mlp"), dt)
+        )
+    else:
+        h = jax.nn.gelu(h)
+    h = _constrain(rules, h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, use_weight(rules, p["w2"], ("mlp", None), dt))
+
+
+# ----------------------------------------------------------------------
+# MoE (top-k, capacity-based sort dispatch — memory-sane, active-FLOPs)
+# ----------------------------------------------------------------------
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, E), ("embed", None), scale=0.02),
+        "w1": ParamSpec((E, d, ff), ("experts", "embed", "expert_mlp")),
+        "w3": ParamSpec((E, d, ff), ("experts", "embed", "expert_mlp")),
+        "w2": ParamSpec((E, ff, d), ("experts", "expert_mlp", "embed")),
+    }
+
+
+def moe_block(p, x, cfg: ArchConfig, rules=None) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE with GROUP-LOCAL sort/scatter dispatch.
+
+    Tokens are split into G shard-aligned groups (``moe_group_size``); the
+    routing sort, capacity cut and the scatter into the [E, cap_g, d]
+    expert buffer all happen *within* a group, expressed as a vmapped
+    (batched) scatter.  GSPMD partitions batched gather/scatter on the
+    group dim trivially, so dispatch costs ZERO collectives — the global
+    sort-based dispatch needs a cross-shard scatter that the partitioner
+    can only lower by all-gathering updates + indices (measured: 2 x 51 GB
+    per grok layer; EXPERIMENTS.md section Perf iterations 1-3).
+
+    Per-group capacity (cap_g = Tg*k/E * cf) is the standard production
+    trade-off (Switch/GLaM): slightly more drops than global capacity,
+    load-balancing aux loss keeps them rare.  Expert parallelism is OFF by
+    default in favour of expert-FFN TP (repro/sharding.py): the dispatch
+    then never crosses the model axis either.
+    """
+    dt = cdtype(cfg)
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = max(1, T // cfg.moe_group_size)
+    while T % G:
+        G -= 1
+    Tg = T // G
+    xg = _constrain(rules, x.reshape(G, Tg, d), "batch", None, None)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(probs, k)  # [G, Tg, k]
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch): E * sum_e f_e * p_e, global over all tokens
+    me = probs.mean((0, 1))
+    ce_counts = jnp.sum(
+        jax.nn.one_hot(idx_k, E, dtype=jnp.float32), axis=(0, 1, 2)
+    ) / (T * k)
+    aux = E * jnp.sum(me * ce_counts)
+
+    cap = max(1, int(Tg * k / E * cfg.capacity_factor))
+    eidx = idx_k.reshape(G, Tg * k)
+    gate = gate_k.reshape(G, Tg * k).astype(dt)
+    tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, Tg * k)
+    )
+
+    order = jnp.argsort(eidx, axis=1)  # stable, per group
+    sorted_e = jnp.take_along_axis(eidx, order, axis=1)
+    tok_sorted = jnp.take_along_axis(tok, order, axis=1)
+    gate_sorted = jnp.take_along_axis(gate, order, axis=1)
+    counts = jax.vmap(lambda e: jnp.zeros((E,), jnp.int32).at[e].add(1))(eidx)
+    starts = jnp.cumsum(counts, axis=1) - counts
+    pos_sorted = jnp.arange(Tg * k)[None] - jnp.take_along_axis(
+        starts, sorted_e, axis=1
+    )
+    keep = pos_sorted < cap
+    e_slot = jnp.where(keep, sorted_e, E)  # OOB expert id => scatter drops
+
+    def dispatch_one(xg_g, es, ps, ts):
+        src = xg_g[ts].astype(dt)  # [Tg*k, d] local gather
+        return jnp.zeros((E, cap, d), dt).at[es, ps].set(src)
+
+    buf = jax.vmap(dispatch_one)(xg, e_slot, pos_sorted, tok_sorted)
+    buf = _constrain(rules, buf, "batch", "experts", None, None)
+
+    h = jnp.einsum(
+        "gecd,edf->gecf", buf,
+        use_weight(rules, p["w1"], ("experts", None, "expert_mlp"), dt))
+    h = jax.nn.silu(h) * jnp.einsum(
+        "gecd,edf->gecf", buf,
+        use_weight(rules, p["w3"], ("experts", None, "expert_mlp"), dt))
+    h = _constrain(rules, h, "batch", "experts", None, "expert_mlp")
+    out_e = jnp.einsum(
+        "gecf,efd->gecd", h,
+        use_weight(rules, p["w2"], ("experts", "expert_mlp", None), dt))
+    out_e = _constrain(rules, out_e, "batch", "experts", None, None)
+
+    def combine_one(oe, es, ps, ts, gs, kp):
+        y_sorted = oe.at[es, ps].get(mode="fill", fill_value=0)
+        y_sorted = y_sorted * (gs * kp.astype(oe.dtype))[:, None]
+        return jnp.zeros((Tg, d), oe.dtype).at[ts].add(y_sorted)
+
+    y = jax.vmap(combine_one)(out_e, e_slot, pos_sorted, tok_sorted,
+                              gate_sorted, keep)
+    y = _constrain(rules, y, "batch", None, None)
+    return y.reshape(B, S, d), aux
+
+
+# ----------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------
+def embed_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    V, d = cfg.vocab_padded(), cfg.d_model
+    s = {"tok": ParamSpec((V, d), ("vocab", "embed"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        s["out"] = ParamSpec((d, V), ("embed", "vocab"), scale=0.02)
+    return s
+
+
+def label_logprobs(logits_f32: jax.Array, labels: jax.Array, real_vocab: int):
+    """(logsumexp, label_logit) with vocab possibly sharded on 'model'.
+
+    The label logit uses a shard-local where-reduction (iota == label)
+    instead of take_along_axis: a gather across the sharded vocab dim
+    makes GSPMD all-gather the fp32 logits (tens of GB at 1M tokens);
+    the masked reduction stays local + one scalar all-reduce per token.
+    Padded vocab tail is excluded from the logsumexp the same way.
+    """
+    V = logits_f32.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits_f32.shape, logits_f32.ndim - 1)
+    if V != real_vocab:
+        logits_f32 = jnp.where(iota < real_vocab, logits_f32, -1e30)
+    lse = jax.nn.logsumexp(logits_f32, axis=-1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], logits_f32, 0.0), axis=-1)
+    return lse, ll
+
+
+def embed_tokens(p, tokens, cfg: ArchConfig, rules=None) -> jax.Array:
+    """Token embedding lookup with GSPMD-friendly shardings: the table's
+    FSDP ('embed'->data) dim is gathered at use (it conflicts with the
+    batch-over-data sharding of the output) and the result is pinned to
+    (batch, seq, None)."""
+    dt = cdtype(cfg)
+    tab = use_weight(rules, p["tok"], ("vocab", None), dt)
+    x = tab[tokens]
+    return _constrain(rules, x, "batch", "seq", None)
+
+
+def unembed(p, x, cfg: ArchConfig, rules=None) -> jax.Array:
+    dt = cdtype(cfg)
+    # pin x's batch sharding: the backward grad-weight dot otherwise sees an
+    # unannotated (replicated) x and all-gathers dlogits to full batch.
+    x = _constrain(rules, x, "batch", "seq", None)
+    if "out" in p:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, use_weight(rules, p["out"], (None, "vocab"), dt)
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, use_weight(rules, p["tok"], ("vocab", None), dt)
+        )
+    return _constrain(rules, logits, "batch", "seq", "vocab")

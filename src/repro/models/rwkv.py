@@ -1,0 +1,269 @@
+"""RWKV6 'Finch' — attention-free RNN with data-dependent decay.
+
+Faithful structure (arXiv:2404.05892): per layer a *time-mix* block
+(token-shift ddlerp mixing, LoRA-modulated per-channel decay w, bonus u,
+WKV recurrence, per-head GroupNorm, silu(g) gate) and a *channel-mix*
+block (token-shift, squared-ReLU FFN with receptance gate).
+
+The WKV recurrence runs through repro.kernels.ops.rwkv6 (chunked-parallel
+Pallas kernel on TPU, chunked jnp elsewhere; sequential-scan oracle in
+tests).  Decode state is O(1) per layer: the [H, N, N] WKV state plus the
+two token-shift vectors.  This is the arch that OWNS the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from ..kernels import ops
+from .layers import cdtype, embed_specs, embed_tokens, norm_specs, apply_norm, label_logprobs, unembed, use_weight
+from .spec import ParamSpec, abstract_params, init_params
+from .transformer import _remat, _stack, scan_stack
+
+__all__ = ["Rwkv6LM"]
+
+_LORA_MIX = 32  # rank of the ddlerp mixing LoRA
+_LORA_W = 64  # rank of the decay LoRA
+
+
+class Rwkv6LM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.rwkv
+        self.cfg = cfg
+        self.N = 64  # rwkv6 head size
+        assert cfg.d_model % self.N == 0
+        self.H = cfg.d_model // self.N
+
+    # ------------------------------------------------------------------
+    def _layer_specs(self):
+        cfg = self.cfg
+        d, ff = cfg.d_model, cfg.d_ff
+        H, N = self.H, self.N
+        r = _LORA_MIX
+        tm = {
+            "ln": norm_specs(cfg),
+            "mu_x": ParamSpec((d,), (None,), "zeros"),
+            "mu": ParamSpec((5, d), (None, None), "zeros"),  # r,k,v,g,w
+            "lora_a": ParamSpec((d, 5 * r), ("embed", None), scale=0.01),
+            "lora_b": ParamSpec((5, r, d), (None, None, "embed"), scale=0.01),
+            "wr": ParamSpec((d, d), ("embed", "rwkv_heads")),
+            "wk": ParamSpec((d, d), ("embed", "rwkv_heads")),
+            "wv": ParamSpec((d, d), ("embed", "rwkv_heads")),
+            "wg": ParamSpec((d, d), ("embed", "rwkv_heads")),
+            "w_base": ParamSpec((d,), (None,), "constant", scale=-2.0),
+            "w_lora_a": ParamSpec((d, _LORA_W), ("embed", None), scale=0.01),
+            "w_lora_b": ParamSpec((_LORA_W, d), (None, "embed"), scale=0.01),
+            "u": ParamSpec((H, N), (None, None), scale=0.1),
+            "gn_w": ParamSpec((d,), (None,), "ones"),
+            "gn_b": ParamSpec((d,), (None,), "zeros"),
+            "wo": ParamSpec((d, d), ("rwkv_heads", "embed")),
+        }
+        cm = {
+            "ln": norm_specs(cfg),
+            "mu_k": ParamSpec((d,), (None,), "zeros"),
+            "mu_r": ParamSpec((d,), (None,), "zeros"),
+            "wk": ParamSpec((d, ff), ("embed", "mlp")),
+            "wv": ParamSpec((ff, d), ("mlp", "embed")),
+            "wr": ParamSpec((d, d), ("embed", None)),
+        }
+        return {"tm": tm, "cm": cm}
+
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": embed_specs(cfg),
+            "layers": _stack(cfg.n_layers, self._layer_specs()),
+            "final_norm": norm_specs(cfg),
+        }
+
+    def init(self, rng):
+        return init_params(self.param_specs(), rng)
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs())
+
+    # ------------------------------------------------------------------
+    def _ddlerp(self, p, x, xs, dt):
+        """Data-dependent lerp producing the 5 mixed inputs (r,k,v,g,w)."""
+        dx = xs - x
+        xxx = x + dx * p["mu_x"].astype(dt)
+        low = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, p["lora_a"].astype(dt)))
+        B, T = x.shape[0], x.shape[1]
+        low = low.reshape(B, T, 5, _LORA_MIX)
+        dyn = jnp.einsum("btir,ird->btid", low, p["lora_b"].astype(dt))
+        mix = p["mu"].astype(dt)[None, None] + dyn  # [B,T,5,d]
+        return x[:, :, None, :] + dx[:, :, None, :] * mix  # [B,T,5,d]
+
+    def _time_mix(self, p, x, xs, state, dt, rules=None):
+        cfg = self.cfg
+        H, N = self.H, self.N
+        B, T, d = x.shape
+        m = self._ddlerp(p, x, xs, dt)
+        xr, xk, xv, xg, xw = (m[:, :, i] for i in range(5))
+        r = jnp.einsum("btd,de->bte", xr, use_weight(rules, p["wr"], (None, "rwkv_heads"), dt)).reshape(B, T, H, N)
+        k = jnp.einsum("btd,de->bte", xk, use_weight(rules, p["wk"], (None, "rwkv_heads"), dt)).reshape(B, T, H, N)
+        v = jnp.einsum("btd,de->bte", xv, use_weight(rules, p["wv"], (None, "rwkv_heads"), dt)).reshape(B, T, H, N)
+        g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, use_weight(rules, p["wg"], (None, "rwkv_heads"), dt)))
+        w_raw = p["w_base"].astype(jnp.float32) + jnp.einsum(
+            "btr,rd->btd",
+            jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_lora_a"].astype(dt))).astype(jnp.float32),
+            p["w_lora_b"].astype(jnp.float32),
+        )
+        w = jnp.exp(-jnp.exp(jnp.clip(w_raw, -8.0, 4.0))).reshape(B, T, H, N)
+        o, new_state = ops.rwkv6(
+            r, k, v, w, p["u"].astype(jnp.float32), state,
+            chunk=cfg.rwkv_chunk,
+            impl="xla" if cfg.attention_impl in ("xla", "naive") else cfg.attention_impl,
+        )
+        # per-head GroupNorm
+        of = o.astype(jnp.float32)
+        mu = of.mean(-1, keepdims=True)
+        var = of.var(-1, keepdims=True)
+        of = (of - mu) * jax.lax.rsqrt(var + 64e-5)
+        of = of.reshape(B, T, d) * p["gn_w"].astype(jnp.float32) + p["gn_b"].astype(jnp.float32)
+        out = of.astype(dt) * g
+        return jnp.einsum("btd,de->bte", out, use_weight(rules, p["wo"], ("rwkv_heads", None), dt)), new_state
+
+    def _channel_mix(self, p, x, xs, dt, rules=None):
+        dx = xs - x
+        xk = x + dx * p["mu_k"].astype(dt)
+        xr = x + dx * p["mu_r"].astype(dt)
+        k = jnp.einsum("btd,df->btf", xk, use_weight(rules, p["wk"], (None, "mlp"), dt))
+        k = jnp.square(jax.nn.relu(k))
+        kv = jnp.einsum("btf,fd->btd", k, use_weight(rules, p["wv"], ("mlp", None), dt))
+        return jax.nn.sigmoid(
+            jnp.einsum("btd,de->bte", xr, use_weight(rules, p["wr"], (None, None), dt))
+        ) * kv
+
+    @staticmethod
+    def _shift(x, last):
+        """Token shift: [last, x_0 .. x_{T-2}]; last: [B,1,d]."""
+        return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+    def _layer(self, collect_state, lp, x, dt, tm_last, cm_last, wkv_state, rules=None):
+        h = apply_norm(lp["tm"]["ln"], x, self.cfg)
+        hs = self._shift(h, tm_last)
+        a, wkv_new = self._time_mix(lp["tm"], h, hs, wkv_state, dt, rules)
+        x = x + a
+        h2 = apply_norm(lp["cm"]["ln"], x, self.cfg)
+        h2s = self._shift(h2, cm_last)
+        x = x + self._channel_mix(lp["cm"], h2, h2s, dt, rules)
+        if collect_state:
+            return x, (wkv_new, h[:, -1:], h2[:, -1:])
+        return x, None
+
+    def forward(self, params, tokens, rules=None, collect_state=False):
+        cfg = self.cfg
+        dt = cdtype(cfg)
+        from .layers import cast_tree
+        params = cast_tree(params, dt)
+        x = embed_tokens(params["embed"], tokens, cfg, rules)
+        B, T = tokens.shape
+        z_state = jnp.zeros((B, self.H, self.N, self.N), jnp.float32)
+        z_last = jnp.zeros((B, 1, cfg.d_model), dt)
+
+        def layer_fn(x, lp):
+            return self._layer(collect_state, lp, x, dt, z_last, z_last, z_state, rules)
+
+        x, ys = scan_stack(layer_fn, x, params["layers"], cfg)
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, ys
+
+    def loss(self, params, batch, rules=None):
+        cfg = self.cfg
+        x, _ = self.forward(params, batch["tokens"], rules)
+        logits = unembed(params["embed"], x, cfg, rules).astype(jnp.float32)
+        lse, ll = label_logprobs(logits, batch["labels"], cfg.vocab)
+        ce = jnp.mean(lse - ll)
+        return ce, {"ce": ce}
+
+    # ------------------------------------------------------------------
+    def cache_specs(self, batch_size: int, seq_len: int):
+        """O(1) state — seq_len only bounds the step counter."""
+        cfg = self.cfg
+        dt = cdtype(cfg)
+        L, d = cfg.n_layers, cfg.d_model
+        return {
+            "wkv": ParamSpec((L, batch_size, self.H, self.N, self.N),
+                             (None, "batch", "rwkv_heads", None, None), "zeros",
+                             dtype=jnp.float32),
+            "tm_last": ParamSpec((L, batch_size, 1, d), (None, "batch", None, None),
+                                 "zeros", dtype=dt),
+            "cm_last": ParamSpec((L, batch_size, 1, d), (None, "batch", None, None),
+                                 "zeros", dtype=dt),
+            "lengths": ParamSpec((batch_size,), ("batch",), "zeros", dtype=jnp.int32),
+        }
+
+    def prefill(self, params, batch, rules=None, max_seq: Optional[int] = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x, ys = self.forward(params, tokens, rules, collect_state=True)
+        wkv, tm_last, cm_last = ys
+        cache = {
+            "wkv": wkv, "tm_last": tm_last, "cm_last": cm_last,
+            "lengths": jnp.full((B,), S, jnp.int32),
+        }
+        logits = unembed(params["embed"], x[:, -1:], cfg, rules)
+        return cache, logits[:, 0]
+
+    def decode_step(self, params, cache, tokens, rules=None):
+        cfg = self.cfg
+        dt = cdtype(cfg)
+        x = embed_tokens(params["embed"], tokens, cfg, rules)  # [B,1,d]
+
+        def layer_fn(x, sl):
+            lp, wkv, tm_last, cm_last = sl
+            h = apply_norm(lp["tm"]["ln"], x, cfg)
+            a, wkv_new = self._time_mix_step(lp["tm"], h, tm_last, wkv, dt, rules)
+            x = x + a
+            h2 = apply_norm(lp["cm"]["ln"], x, cfg)
+            out = self._channel_mix(lp["cm"], h2, cm_last, dt, rules)
+            x = x + out
+            return x, (wkv_new, h, h2)
+
+        x, (wkv, tm_last, cm_last) = scan_stack(
+            layer_fn, x,
+            (params["layers"], cache["wkv"], cache["tm_last"], cache["cm_last"]),
+            cfg, remat=False,
+        )
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg, rules)
+        return (
+            dict(cache, wkv=wkv, tm_last=tm_last, cm_last=cm_last,
+                 lengths=cache["lengths"] + 1),
+            logits[:, 0],
+        )
+
+    def _time_mix_step(self, p, x, xs, state, dt, rules=None):
+        """Single-token time mix (decode)."""
+        cfg = self.cfg
+        H, N = self.H, self.N
+        B = x.shape[0]
+        m = self._ddlerp(p, x, xs, dt)
+        xr, xk, xv, xg, xw = (m[:, :, i] for i in range(5))
+        r = jnp.einsum("btd,de->bte", xr, use_weight(rules, p["wr"], (None, "rwkv_heads"), dt)).reshape(B, H, N)
+        k = jnp.einsum("btd,de->bte", xk, use_weight(rules, p["wk"], (None, "rwkv_heads"), dt)).reshape(B, H, N)
+        v = jnp.einsum("btd,de->bte", xv, use_weight(rules, p["wv"], (None, "rwkv_heads"), dt)).reshape(B, H, N)
+        g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, use_weight(rules, p["wg"], (None, "rwkv_heads"), dt)))
+        w_raw = p["w_base"].astype(jnp.float32) + jnp.einsum(
+            "btr,rd->btd",
+            jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_lora_a"].astype(dt))).astype(jnp.float32),
+            p["w_lora_b"].astype(jnp.float32),
+        )
+        w = jnp.exp(-jnp.exp(jnp.clip(w_raw[:, 0], -8.0, 4.0))).reshape(B, H, N)
+        o, new_state = ops.rwkv6_step(r, k, v, w, p["u"].astype(jnp.float32), state)
+        of = o.astype(jnp.float32)
+        mu = of.mean(-1, keepdims=True)
+        var = of.var(-1, keepdims=True)
+        of = (of - mu) * jax.lax.rsqrt(var + 64e-5)
+        of = of.reshape(B, 1, cfg.d_model) * p["gn_w"].astype(jnp.float32) + p[
+            "gn_b"
+        ].astype(jnp.float32)
+        out = of.astype(dt) * g
+        return jnp.einsum("btd,de->bte", out, use_weight(rules, p["wo"], ("rwkv_heads", None), dt)), new_state

@@ -1,0 +1,88 @@
+"""Parameter specification pytrees.
+
+Models declare their parameters as a pytree of ``ParamSpec`` leaves (shape
++ logical axis names + initializer).  Everything else derives mechanically:
+
+* ``init_params``      real arrays (per-leaf folded PRNG)
+* ``abstract_params``  ShapeDtypeStructs (dry-run: no allocation)
+* ``tree_shardings``   NamedShardings via repro.sharding logical rules
+
+The logical-axis vocabulary (resolved by repro/sharding.py):
+  'embed'    weight d_model dim        -> FSDP ('data')
+  'heads'    attention head dim        -> TP ('model') when enabled
+  'kv_heads' KV head dim               -> TP when divisible
+  'mlp'      FFN hidden dim            -> TP ('model')
+  'vocab'    vocabulary dim            -> TP ('model')
+  'experts'  MoE expert dim            -> EP ('model') when divisible
+  'batch'    data batch                -> ('pod', 'data')
+  'cache_seq' KV-cache sequence dim    -> SP ('model')
+  None       replicated dim
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "spec_map"]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | constant
+    scale: Optional[float] = None  # stddev (normal) or value (constant)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "constant":
+        return jnp.full(spec.shape, spec.scale, spec.dtype)
+    if spec.init == "normal":
+        # fan-in scaled unless an explicit stddev is given
+        if spec.scale is not None:
+            std = spec.scale
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(
+            spec.dtype
+        )
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, rng: jax.Array):
+    """Materialise real parameters; each leaf gets a path-folded key."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    out = []
+    for i, leaf in enumerate(leaves):
+        out.append(_leaf_init(leaf, jax.random.fold_in(rng, i)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct stand-ins — the dry-run's no-allocation params."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
+    )
+
+
+def spec_map(fn: Callable[[ParamSpec], Any], specs):
+    return jax.tree_util.tree_map(fn, specs, is_leaf=_is_spec)

@@ -1,0 +1,372 @@
+"""Decoder-only transformer family: dense GQA, MoE, and VLM cross-attn.
+
+Covers 8 of the 10 assigned architectures (grok, moonshot, llama-vision,
+qwen2, granite, qwen2.5, minicpm + whisper reuses the blocks).  Layers are
+``lax.scan``-stacked (one layer's HLO, fast compile at 100 layers) with a
+configurable remat policy; VLM interleaving scans over *groups* of
+(period-1) self-attn layers + 1 cross-attn layer.
+
+API (shared by all families, see models/api.py):
+  param_specs() / init(rng) / loss(params, batch, rules)
+  prefill(params, batch, rules)   -> (cache, last_logits)
+  decode_step(params, cache, tokens, rules) -> (cache, logits)
+  cache_specs(batch_size, seq_len) -> ParamSpec pytree (dry-run caches)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from .layers import (
+    apply_norm,
+    label_logprobs,
+    attention_block,
+    attention_decode_block,
+    attn_specs,
+    cdtype,
+    decode_kv,
+    embed_specs,
+    mlp_block,
+    mlp_specs,
+    moe_block,
+    moe_specs,
+    norm_specs,
+    unembed,
+)
+from .spec import ParamSpec, abstract_params, init_params, spec_map
+
+__all__ = ["DecoderLM"]
+
+
+def _stack(n: int, specs):
+    """Prepend a scan (layer) dim to every leaf of a spec tree."""
+    return spec_map(
+        lambda s: ParamSpec((n,) + s.shape, (None,) + s.axes, s.init, s.scale, s.dtype),
+        specs,
+    )
+
+
+def _remat(fn, cfg: ArchConfig):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _update_cache(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """cache [B,S,h,d], new [B,1,h,d], pos [B] -> write new at pos."""
+    return jax.vmap(
+        lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
+    )(cache, new, pos)
+
+
+def scan_stack(fn, carry, stacked, cfg: ArchConfig, remat: bool = True):
+    """lax.scan over a stacked-params pytree, or an unrolled python loop
+    when ``cfg.use_scan`` is False (the dry-run's cost-extrapolation
+    variants need unrolled HLO: XLA's cost_analysis counts a while body
+    once, ignoring the trip count)."""
+    if remat:
+        fn = _remat(fn, cfg)
+    if getattr(cfg, "use_scan", True):
+        return jax.lax.scan(fn, carry, stacked)
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree_util.tree_map(lambda a: a[i], stacked)
+        carry, y = fn(carry, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.period = cfg.cross_attn_every  # 0 => homogeneous stack
+        if self.period:
+            assert cfg.n_layers % self.period == 0, "layers % cross period != 0"
+            self.n_groups = cfg.n_layers // self.period
+        self.res_scale = (
+            cfg.depth_scale / (cfg.n_layers ** 0.5) if cfg.depth_scale else 1.0
+        )
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def _layer_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        s = {
+            "ln1": norm_specs(cfg),
+            "attn": attn_specs(cfg),
+            "ln2": norm_specs(cfg),
+        }
+        if cfg.is_moe:
+            s["moe"] = moe_specs(cfg)
+        else:
+            s["mlp"] = mlp_specs(cfg)
+        return s
+
+    def _cross_layer_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "ln1": norm_specs(cfg),
+            "attn": attn_specs(cfg, cross=True),
+            "ln2": norm_specs(cfg),
+            "mlp": mlp_specs(cfg),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        specs: Dict[str, Any] = {"embed": embed_specs(cfg), "final_norm": norm_specs(cfg)}
+        if self.period:
+            specs["groups"] = {
+                "self": _stack(self.n_groups, _stack(self.period - 1, self._layer_specs())),
+                "cross": _stack(self.n_groups, self._cross_layer_specs()),
+            }
+        else:
+            specs["layers"] = _stack(cfg.n_layers, self._layer_specs())
+        return specs
+
+    def init(self, rng):
+        return init_params(self.param_specs(), rng)
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # forward (train / prefill share this)
+    # ------------------------------------------------------------------
+    def _self_layer(self, collect_kv: bool, rules, positions, lp, x):
+        cfg = self.cfg
+        h = apply_norm(lp["ln1"], x, cfg)
+        a, kv = attention_block(lp["attn"], h, cfg, rules, positions=positions)
+        x = x + self.res_scale * a
+        h2 = apply_norm(lp["ln2"], x, cfg)
+        if cfg.is_moe:
+            m, aux = moe_block(lp["moe"], h2, cfg, rules)
+        else:
+            m, aux = mlp_block(lp["mlp"], h2, cfg, rules), jnp.float32(0)
+        x = x + self.res_scale * m
+        ys = (kv["k"], kv["v"], aux) if collect_kv else aux
+        return x, ys
+
+    def _cross_layer(self, rules, memory, lp, x):
+        cfg = self.cfg
+        h = apply_norm(lp["ln1"], x, cfg)
+        a, kv = attention_block(
+            lp["attn"], h, cfg, rules, memory=memory, causal=False, use_rope=False
+        )
+        x = x + self.res_scale * a
+        h2 = apply_norm(lp["ln2"], x, cfg)
+        x = x + self.res_scale * mlp_block(lp["mlp"], h2, cfg, rules)
+        return x, kv
+
+    def _embed_tokens(self, params, tokens, rules=None):
+        from .layers import embed_tokens
+        return embed_tokens(params["embed"], tokens, self.cfg, rules)
+
+    def forward(self, params, tokens, rules=None, image_embeds=None, collect_kv=False):
+        """tokens [B,S] -> (hidden [B,S,d], caches-or-None, aux_loss)."""
+        cfg = self.cfg
+        from .layers import cast_tree
+        params = cast_tree(params, cdtype(cfg))
+        x = self._embed_tokens(params, tokens, rules)
+        positions = jnp.arange(tokens.shape[1])
+        if self.period:
+            mem = image_embeds.astype(cdtype(cfg))
+
+            def group_fn(x, gp):
+                sl = functools.partial(self._self_layer, collect_kv, rules, positions)
+                x, ys = scan_stack(lambda c, p: sl(p, c), x, gp["self"], cfg)
+                x, ckv = self._cross_layer(rules, mem, gp["cross"], x)
+                if collect_kv:
+                    k, v, aux = ys
+                    return x, (k, v, ckv["k"], ckv["v"], aux)
+                return x, ys
+
+            x, ys = scan_stack(group_fn, x, params["groups"], cfg, remat=False)
+            if collect_kv:
+                k, v, ck, cv, aux = ys
+                caches = {"k": k, "v": v, "cross_k": ck, "cross_v": cv}
+            else:
+                caches, aux = None, ys
+        else:
+            sl = functools.partial(self._self_layer, collect_kv, rules, positions)
+            x, ys = scan_stack(lambda c, p: sl(p, c), x, params["layers"], cfg)
+            if collect_kv:
+                k, v, aux = ys
+                caches = {"k": k, "v": v}
+            else:
+                caches, aux = None, ys
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, caches, jnp.sum(aux)
+
+    # ------------------------------------------------------------------
+    # training loss
+    # ------------------------------------------------------------------
+    def loss(self, params, batch, rules=None):
+        cfg = self.cfg
+        x, _, aux = self.forward(
+            params, batch["tokens"], rules, image_embeds=batch.get("image_embeds")
+        )
+        logits = unembed(params["embed"], x, cfg, rules).astype(jnp.float32)
+        lse, ll = label_logprobs(logits, batch["labels"], cfg.vocab)
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(ll)
+        ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        zloss = 1e-4 * jnp.sum((lse**2) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce + zloss + 0.01 * aux
+        return total, {"ce": ce, "aux": aux, "zloss": zloss}
+
+    # ------------------------------------------------------------------
+    # serving: prefill + decode
+    # ------------------------------------------------------------------
+    def cache_specs(self, batch_size: int, seq_len: int) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        dt = cdtype(cfg)
+        Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        kv_axes = (None, "batch", "cache_seq", "cache_heads", None)
+        if self.period:
+            G, Pm1 = self.n_groups, self.period - 1
+            specs = {
+                "k": ParamSpec((G, Pm1, batch_size, seq_len, Hkv, dh),
+                               (None,) + kv_axes, "zeros", dtype=dt),
+                "v": ParamSpec((G, Pm1, batch_size, seq_len, Hkv, dh),
+                               (None,) + kv_axes, "zeros", dtype=dt),
+                "cross_k": ParamSpec((G, batch_size, cfg.n_image_tokens, Hkv, dh),
+                                     (None, "batch", None, "cache_heads", None),
+                                     "zeros", dtype=dt),
+                "cross_v": ParamSpec((G, batch_size, cfg.n_image_tokens, Hkv, dh),
+                                     (None, "batch", None, "cache_heads", None),
+                                     "zeros", dtype=dt),
+            }
+        else:
+            L = cfg.n_layers
+            specs = {
+                "k": ParamSpec((L, batch_size, seq_len, Hkv, dh), kv_axes, "zeros", dtype=dt),
+                "v": ParamSpec((L, batch_size, seq_len, Hkv, dh), kv_axes, "zeros", dtype=dt),
+            }
+        specs["lengths"] = ParamSpec((batch_size,), ("batch",), "zeros", dtype=jnp.int32)
+        return specs
+
+    def prefill(self, params, batch, rules=None, max_seq: Optional[int] = None):
+        """Full-sequence prefill; returns (cache padded to max_seq, last logits)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        max_seq = max_seq or S
+        x, caches, _ = self.forward(
+            params, tokens, rules, image_embeds=batch.get("image_embeds"),
+            collect_kv=True,
+        )
+        pad = max_seq - S
+
+        def pad_seq(a, axis):
+            if pad <= 0:
+                return a
+            cfgp = [(0, 0)] * a.ndim
+            cfgp[axis] = (0, pad)
+            return jnp.pad(a, cfgp)
+
+        if self.period:
+            cache = {
+                "k": pad_seq(caches["k"], 3),  # [G,P-1,B,S,h,d]
+                "v": pad_seq(caches["v"], 3),
+                "cross_k": caches["cross_k"],
+                "cross_v": caches["cross_v"],
+            }
+        else:
+            cache = {"k": pad_seq(caches["k"], 2), "v": pad_seq(caches["v"], 2)}
+        cache["lengths"] = jnp.full((B,), S, jnp.int32)
+        logits = unembed(params["embed"], x[:, -1:], cfg, rules)
+        return cache, logits[:, 0]
+
+    def _decode_self_layer(self, rules, lengths, lp, kc, vc, x):
+        """One self-attn layer, single token.  kc/vc [B,Smax,h,d]."""
+        cfg = self.cfg
+        h = apply_norm(lp["ln1"], x, cfg)
+        k_new, v_new = decode_kv(lp["attn"], h, lengths + 1, cfg, rules)
+        kc = _update_cache(kc, k_new, lengths)
+        vc = _update_cache(vc, v_new, lengths)
+        a = attention_decode_block(lp["attn"], h, kc, vc, lengths + 1, cfg, rules)
+        x = x + self.res_scale * a
+        h2 = apply_norm(lp["ln2"], x, cfg)
+        if cfg.is_moe:
+            m, _ = moe_block(lp["moe"], h2, cfg, rules)
+        else:
+            m = mlp_block(lp["mlp"], h2, cfg, rules)
+        return x + self.res_scale * m, kc, vc
+
+    def decode_step(self, params, cache, tokens, rules=None):
+        """tokens [B,1] -> (cache', logits [B,V]).  Appends one token."""
+        cfg = self.cfg
+        lengths = cache["lengths"]
+        x = self._embed_tokens(params, tokens, rules)
+
+        if self.period:
+            def group_fn(x, sl):
+                gp, kc, vc, ck, cv = sl
+
+                def inner(carry, l):
+                    x = carry
+                    lp, kcl, vcl = l
+                    x, kcl, vcl = self._decode_self_layer(rules, lengths, lp, kcl, vcl, x)
+                    return x, (kcl, vcl)
+
+                x, (kc, vc) = scan_stack(inner, x, (gp["self"], kc, vc), cfg, remat=False)
+                # cross layer: memory K/V precomputed in the cache
+                h = apply_norm(gp["cross"]["ln1"], x, cfg)
+                from .layers import use_weight as _uw
+                q = jnp.einsum(
+                    "bsd,dhk->bshk", h,
+                    _uw(rules, gp["cross"]["attn"]["wq"], (None, "heads", None), x.dtype),
+                )
+                from ..kernels import ops as _ops
+
+                n_img = ck.shape[1]  # ck: [B, n_img, Hkv, dh]
+                o = _ops.decode_attention(
+                    q[:, 0], ck, cv,
+                    jnp.full((x.shape[0],), n_img, jnp.int32),
+                    impl=cfg.attention_impl,
+                )
+                a = jnp.einsum(
+                    "bhk,hkd->bd", o,
+                    _uw(rules, gp["cross"]["attn"]["wo"], ("heads", None, None), x.dtype),
+                )[:, None]
+                x = x + self.res_scale * a
+                h2 = apply_norm(gp["cross"]["ln2"], x, cfg)
+                x = x + self.res_scale * mlp_block(gp["cross"]["mlp"], h2, cfg, rules)
+                return x, (kc, vc)
+
+            x, (k, v) = scan_stack(
+                group_fn, x,
+                (params["groups"], cache["k"], cache["v"],
+                 cache["cross_k"], cache["cross_v"]), cfg, remat=False,
+            )
+            new_cache = dict(cache, k=k, v=v, lengths=lengths + 1)
+        else:
+            def layer_fn(x, sl):
+                lp, kc, vc = sl
+                x, kc, vc = self._decode_self_layer(rules, lengths, lp, kc, vc, x)
+                return x, (kc, vc)
+
+            x, (k, v) = scan_stack(
+                layer_fn, x, (params["layers"], cache["k"], cache["v"]), cfg,
+                remat=False,
+            )
+            new_cache = dict(cache, k=k, v=v, lengths=lengths + 1)
+
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg, rules)
+        return new_cache, logits[:, 0]

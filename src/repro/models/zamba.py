@@ -1,0 +1,381 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) backbone + a shared attention block.
+
+Structure (arXiv:2411.15242, simplified where noted in DESIGN.md):
+
+* ``n_layers`` Mamba2 blocks (in_proj -> short causal conv over (x,B,C)
+  -> SSD chunk scan -> gated RMSNorm -> out_proj), SSD through
+  repro.kernels.ops.ssd (Pallas on TPU).
+* every ``shared_attn_every`` layers, ONE weight-shared attention+MLP
+  block runs on concat([hidden, initial_embedding]) (2*d_model wide) with
+  per-invocation LoRA adapters on the query and FFN-in projections; its
+  output (projected back to d_model) is added to the residual stream.
+  Each invocation owns a KV cache in decode.
+
+The SSD state is O(1) per layer; with only n_layers/period attention
+caches this arch runs the long_500k shape (sub-quadratic).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from ..kernels import ops
+from .layers import apply_norm, cdtype, embed_specs, embed_tokens, label_logprobs, norm_specs, rope, unembed, use_weight
+from .spec import ParamSpec, abstract_params, init_params
+from .transformer import _remat, _stack, _update_cache, scan_stack
+
+__all__ = ["ZambaLM"]
+
+_CONV_K = 4  # mamba short-conv window
+
+
+class ZambaLM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.ssm_state > 0 and cfg.shared_attn_every > 0
+        self.cfg = cfg
+        self.d_in = cfg.ssm_expand * cfg.d_model
+        self.P = cfg.ssm_head_dim
+        assert self.d_in % self.P == 0
+        self.H = self.d_in // self.P  # ssm heads
+        self.G = 1  # B/C groups
+        self.N = cfg.ssm_state
+        self.conv_dim = self.d_in + 2 * self.G * self.N
+        self.period = cfg.shared_attn_every
+        self.n_groups = cfg.n_layers // self.period
+        self.n_extra = cfg.n_layers - self.n_groups * self.period
+
+    # ------------------------------------------------------------------
+    def _mamba_specs(self):
+        cfg = self.cfg
+        d, d_in, H, G, N = cfg.d_model, self.d_in, self.H, self.G, self.N
+        return {
+            "ln": norm_specs(cfg),
+            "in_proj": ParamSpec((d, 2 * d_in + 2 * G * N + H), ("embed", "ssm_inner")),
+            "conv_w": ParamSpec((_CONV_K, self.conv_dim), (None, "ssm_inner"), scale=0.2),
+            "conv_b": ParamSpec((self.conv_dim,), ("ssm_inner",), "zeros"),
+            "A_log": ParamSpec((H,), ("ssm_heads",), "constant", scale=0.0),
+            "D": ParamSpec((H,), ("ssm_heads",), "ones"),
+            "dt_bias": ParamSpec((H,), ("ssm_heads",), "constant", scale=-1.0),
+            "gn_w": ParamSpec((d_in,), ("ssm_inner",), "ones"),
+            "out_proj": ParamSpec((d_in, d), ("ssm_inner", "embed")),
+        }
+
+    def _shared_specs(self):
+        cfg = self.cfg
+        d, ff = cfg.d_model, cfg.d_ff
+        dh, Hh, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        return {
+            "ln1": norm_specs(cfg.replace(d_model=2 * d)),
+            "wq": ParamSpec((2 * d, Hh, dh), ("embed", "heads", None)),
+            "wk": ParamSpec((2 * d, Hkv, dh), ("embed", "kv_heads", None)),
+            "wv": ParamSpec((2 * d, Hkv, dh), ("embed", "kv_heads", None)),
+            "wo": ParamSpec((Hh, dh, d), ("heads", None, "embed")),
+            "ln2": norm_specs(cfg.replace(d_model=2 * d)),
+            "w1": ParamSpec((2 * d, ff), ("embed", "mlp")),
+            "w3": ParamSpec((2 * d, ff), ("embed", "mlp")),
+            "w2": ParamSpec((ff, d), ("mlp", "embed")),
+        }
+
+    def _lora_specs(self):
+        """Per-invocation adapters (stacked over n_groups)."""
+        cfg = self.cfg
+        d, r = cfg.d_model, cfg.shared_lora_rank
+        Hh, dh = cfg.n_heads, cfg.head_dim
+        return {
+            "q_a": ParamSpec((2 * d, r), ("embed", None), scale=0.01),
+            "q_b": ParamSpec((r, Hh * dh), (None, "heads"), scale=0.01),
+            "m_a": ParamSpec((2 * d, r), ("embed", None), scale=0.01),
+            "m_b": ParamSpec((r, cfg.d_ff), (None, "mlp"), scale=0.01),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        specs = {
+            "embed": embed_specs(cfg),
+            "mamba_g": _stack(self.n_groups, _stack(self.period, self._mamba_specs())),
+            "shared": self._shared_specs(),
+            "lora": _stack(self.n_groups, self._lora_specs()),
+            "final_norm": norm_specs(cfg),
+        }
+        if self.n_extra:
+            specs["mamba_x"] = _stack(self.n_extra, self._mamba_specs())
+        return specs
+
+    def init(self, rng):
+        return init_params(self.param_specs(), rng)
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # Mamba2 block
+    # ------------------------------------------------------------------
+    def _mamba_proj(self, lp, x, dt, rules=None):
+        z_x_b_c_dt = jnp.einsum(
+            "btd,de->bte", x, use_weight(rules, lp["in_proj"], (None, "ssm_inner"), dt)
+        )
+        d_in, G, N, H = self.d_in, self.G, self.N, self.H
+        z = z_x_b_c_dt[..., :d_in]
+        conv_in = z_x_b_c_dt[..., d_in : d_in + self.conv_dim]
+        dt_raw = z_x_b_c_dt[..., d_in + self.conv_dim :]
+        return z, conv_in, dt_raw
+
+    def _mamba_post(self, lp, conv_out, dt_raw, z, ssm_state, dt, rules=None):
+        cfg = self.cfg
+        B_, T = conv_out.shape[0], conv_out.shape[1]
+        d_in, G, N, H, P = self.d_in, self.G, self.N, self.H, self.P
+        xc = conv_out[..., :d_in]
+        Bm = conv_out[..., d_in : d_in + G * N].reshape(B_, T, G, N)
+        Cm = conv_out[..., d_in + G * N :].reshape(B_, T, G, N)
+        dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+        y, new_state = ops.ssd(
+            xc.reshape(B_, T, H, P), dtv, A, Bm, Cm, lp["D"].astype(jnp.float32),
+            ssm_state, chunk=cfg.ssd_chunk,
+            impl="xla" if cfg.attention_impl in ("xla", "naive") else cfg.attention_impl,
+        )
+        y = y.reshape(B_, T, d_in)
+        # gated RMSNorm (mamba2 norm)
+        yf = y.astype(jnp.float32)
+        yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+        y = (yf * lp["gn_w"].astype(jnp.float32)).astype(dt) * jax.nn.silu(z)
+        return jnp.einsum(
+            "bte,ed->btd", y, use_weight(rules, lp["out_proj"], ("ssm_inner", None), dt)
+        ), new_state
+
+    def _mamba_block(self, lp, x, dt, collect_state=False, conv_state=None,
+                     ssm_state=None, rules=None):
+        """Full-sequence mamba block.  conv via causal depthwise window."""
+        h = apply_norm(lp["ln"], x, self.cfg)
+        z, conv_in, dt_raw = self._mamba_proj(lp, h, dt, rules)
+        B_, T = x.shape[0], x.shape[1]
+        if ssm_state is None:
+            ssm_state = jnp.zeros((B_, self.H, self.P, self.N), jnp.float32)
+        pad = jnp.zeros((B_, _CONV_K - 1, self.conv_dim), conv_in.dtype)
+        ci = jnp.concatenate([pad, conv_in], axis=1)
+        conv_out = sum(
+            ci[:, i : i + T] * lp["conv_w"].astype(dt)[i] for i in range(_CONV_K)
+        ) + lp["conv_b"].astype(dt)
+        conv_out = jax.nn.silu(conv_out)
+        out, new_ssm = self._mamba_post(lp, conv_out, dt_raw, z, ssm_state, dt, rules)
+        if collect_state:
+            new_conv = ci[:, -(_CONV_K - 1):]  # last K-1 conv inputs
+            return x + out, (new_ssm, new_conv)
+        return x + out, None
+
+    def _mamba_step(self, lp, x, conv_state, ssm_state, dt, rules=None):
+        """Single-token mamba block.  conv_state: [B, K-1, conv_dim]."""
+        h = apply_norm(lp["ln"], x, self.cfg)
+        z, conv_in, dt_raw = self._mamba_proj(lp, h, dt, rules)
+        window = jnp.concatenate([conv_state.astype(conv_in.dtype), conv_in], axis=1)
+        conv_out = sum(
+            window[:, i : i + 1] * lp["conv_w"].astype(dt)[i] for i in range(_CONV_K)
+        ) + lp["conv_b"].astype(dt)
+        conv_out = jax.nn.silu(conv_out)
+        out, new_ssm = self._mamba_post(lp, conv_out, dt_raw, z, ssm_state, dt, rules)
+        return x + out, window[:, 1:], new_ssm
+
+    # ------------------------------------------------------------------
+    # Shared attention block
+    # ------------------------------------------------------------------
+    def _shared_block(self, sp, lora, x, emb0, dt, rules=None, positions=None):
+        cfg = self.cfg
+        B_, T, d = x.shape
+        Hh, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        u = jnp.concatenate([x, emb0], axis=-1)
+        h = apply_norm(sp["ln1"], u, cfg)
+        q = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wq"], (None, "heads", None), dt))
+        q = q + jnp.einsum(
+            "btr,re->bte", jnp.einsum("btd,dr->btr", h, lora["q_a"].astype(dt)),
+            lora["q_b"].astype(dt),
+        ).reshape(B_, T, Hh, dh)
+        k = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wk"], (None, "kv_heads", None), dt))
+        v = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wv"], (None, "kv_heads", None), dt))
+        pos = positions if positions is not None else jnp.arange(T)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        o = ops.attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                          block_k=cfg.attention_block_k)
+        a = jnp.einsum("bthk,hkd->btd", o, use_weight(rules, sp["wo"], ("heads", None, None), dt))
+        h2 = apply_norm(sp["ln2"], u, cfg)
+        m = jnp.einsum("btd,df->btf", h2, use_weight(rules, sp["w1"], (None, "mlp"), dt))
+        m = m + jnp.einsum(
+            "btr,rf->btf", jnp.einsum("btd,dr->btr", h2, lora["m_a"].astype(dt)),
+            lora["m_b"].astype(dt),
+        )
+        m = jax.nn.silu(m) * jnp.einsum(
+            "btd,df->btf", h2, use_weight(rules, sp["w3"], (None, "mlp"), dt))
+        m = jnp.einsum("btf,fd->btd", m, use_weight(rules, sp["w2"], ("mlp", None), dt))
+        return x + a + m, {"k": k, "v": v}
+
+    def _shared_step(self, sp, lora, x, emb0, kc, vc, lengths, dt, rules=None):
+        cfg = self.cfg
+        B_, _, d = x.shape
+        Hh, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        u = jnp.concatenate([x, emb0], axis=-1)
+        h = apply_norm(sp["ln1"], u, cfg)
+        q = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wq"], (None, "heads", None), dt))
+        q = q + jnp.einsum(
+            "btr,re->bte", jnp.einsum("btd,dr->btr", h, lora["q_a"].astype(dt)),
+            lora["q_b"].astype(dt),
+        ).reshape(B_, 1, Hh, dh)
+        k = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wk"], (None, "kv_heads", None), dt))
+        v = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wv"], (None, "kv_heads", None), dt))
+        q = rope(q, (lengths)[:, None], cfg.rope_theta)
+        k = rope(k, (lengths)[:, None], cfg.rope_theta)
+        kc = _update_cache(kc, k, lengths)
+        vc = _update_cache(vc, v, lengths)
+        o = ops.decode_attention(q[:, 0], kc, vc, lengths + 1, impl=cfg.attention_impl)
+        a = jnp.einsum("bhk,hkd->bd", o, use_weight(rules, sp["wo"], ("heads", None, None), dt))[:, None]
+        h2 = apply_norm(sp["ln2"], u, cfg)
+        m = jnp.einsum("btd,df->btf", h2, use_weight(rules, sp["w1"], (None, "mlp"), dt))
+        m = m + jnp.einsum(
+            "btr,rf->btf", jnp.einsum("btd,dr->btr", h2, lora["m_a"].astype(dt)),
+            lora["m_b"].astype(dt),
+        )
+        m = jax.nn.silu(m) * jnp.einsum(
+            "btd,df->btf", h2, use_weight(rules, sp["w3"], (None, "mlp"), dt))
+        m = jnp.einsum("btf,fd->btd", m, use_weight(rules, sp["w2"], ("mlp", None), dt))
+        return x + a + m, kc, vc
+
+    # ------------------------------------------------------------------
+    def forward(self, params, tokens, rules=None, collect_state=False):
+        cfg = self.cfg
+        dt = cdtype(cfg)
+        from .layers import cast_tree
+        params = cast_tree(params, dt)
+        emb0 = embed_tokens(params["embed"], tokens, cfg, rules)
+        x = emb0
+        positions = jnp.arange(tokens.shape[1])
+
+        def group_fn(x, sl):
+            gp, lora = sl
+
+            def inner(x, lp):
+                return self._mamba_block(lp, x, dt, collect_state=collect_state,
+                                         rules=rules)
+
+            x, ys = scan_stack(inner, x, gp, cfg)
+            x, kv = self._shared_block(params["shared"], lora, x, emb0, dt, rules,
+                                       positions)
+            if collect_state:
+                ssm, conv = ys
+                return x, (ssm, conv, kv["k"], kv["v"])
+            return x, None
+
+        x, ys = scan_stack(group_fn, x, (params["mamba_g"], params["lora"]), cfg, remat=False)
+        ys_x = None
+        if self.n_extra:
+            def inner_x(x, lp):
+                return self._mamba_block(lp, x, dt, collect_state=collect_state,
+                                         rules=rules)
+
+            x, ys_x = scan_stack(inner_x, x, params["mamba_x"], cfg)
+        x = apply_norm(params["final_norm"], x, cfg)
+        return x, ys, ys_x
+
+    def loss(self, params, batch, rules=None):
+        cfg = self.cfg
+        x, _, _ = self.forward(params, batch["tokens"], rules)
+        logits = unembed(params["embed"], x, cfg, rules).astype(jnp.float32)
+        lse, ll = label_logprobs(logits, batch["labels"], cfg.vocab)
+        ce = jnp.mean(lse - ll)
+        return ce, {"ce": ce}
+
+    # ------------------------------------------------------------------
+    def cache_specs(self, batch_size: int, seq_len: int):
+        cfg = self.cfg
+        dt = cdtype(cfg)
+        Gn, Pd = self.n_groups, self.period
+        Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        specs = {
+            "ssm_g": ParamSpec((Gn, Pd, batch_size, self.H, self.P, self.N),
+                               (None, None, "batch", "ssm_heads", None, None),
+                               "zeros", dtype=jnp.float32),
+            "conv_g": ParamSpec((Gn, Pd, batch_size, _CONV_K - 1, self.conv_dim),
+                                (None, None, "batch", None, "ssm_inner"),
+                                "zeros", dtype=dt),
+            "attn_k": ParamSpec((Gn, batch_size, seq_len, Hkv, dh),
+                                (None, "batch", "cache_seq", "cache_heads", None),
+                                "zeros", dtype=dt),
+            "attn_v": ParamSpec((Gn, batch_size, seq_len, Hkv, dh),
+                                (None, "batch", "cache_seq", "cache_heads", None),
+                                "zeros", dtype=dt),
+            "lengths": ParamSpec((batch_size,), ("batch",), "zeros", dtype=jnp.int32),
+        }
+        if self.n_extra:
+            specs["ssm_x"] = ParamSpec((self.n_extra, batch_size, self.H, self.P, self.N),
+                                       (None, "batch", "ssm_heads", None, None),
+                                       "zeros", dtype=jnp.float32)
+            specs["conv_x"] = ParamSpec((self.n_extra, batch_size, _CONV_K - 1, self.conv_dim),
+                                        (None, "batch", None, "ssm_inner"),
+                                        "zeros", dtype=dt)
+        return specs
+
+    def prefill(self, params, batch, rules=None, max_seq: Optional[int] = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        max_seq = max_seq or S
+        x, ys, ys_x = self.forward(params, tokens, rules, collect_state=True)
+        ssm_g, conv_g, k, v = ys
+        pad = max_seq - S
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {
+            "ssm_g": ssm_g, "conv_g": conv_g, "attn_k": k, "attn_v": v,
+            "lengths": jnp.full((B,), S, jnp.int32),
+        }
+        if self.n_extra:
+            cache["ssm_x"], cache["conv_x"] = ys_x
+        logits = unembed(params["embed"], x[:, -1:], cfg, rules)
+        return cache, logits[:, 0]
+
+    def decode_step(self, params, cache, tokens, rules=None):
+        cfg = self.cfg
+        dt = cdtype(cfg)
+        emb0 = embed_tokens(params["embed"], tokens, cfg, rules)
+        x = emb0
+        lengths = cache["lengths"]
+
+        def group_fn(x, sl):
+            gp, lora, ssm, conv, kc, vc = sl
+
+            def inner(x, l):
+                lp, ssm_l, conv_l = l
+                x, conv_new, ssm_new = self._mamba_step(lp, x, conv_l, ssm_l, dt, rules)
+                return x, (ssm_new, conv_new)
+
+            x, (ssm, conv) = scan_stack(inner, x, (gp, ssm, conv), cfg, remat=False)
+            x, kc, vc = self._shared_step(params["shared"], lora, x, emb0, kc, vc,
+                                          lengths, dt, rules)
+            return x, (ssm, conv, kc, vc)
+
+        x, (ssm_g, conv_g, k, v) = scan_stack(
+            group_fn, x,
+            (params["mamba_g"], params["lora"], cache["ssm_g"], cache["conv_g"],
+             cache["attn_k"], cache["attn_v"]), cfg, remat=False,
+        )
+        new_cache = dict(cache, ssm_g=ssm_g, conv_g=conv_g, attn_k=k, attn_v=v,
+                         lengths=lengths + 1)
+        if self.n_extra:
+            def inner_x(x, l):
+                lp, ssm_l, conv_l = l
+                x, conv_new, ssm_new = self._mamba_step(lp, x, conv_l, ssm_l, dt, rules)
+                return x, (ssm_new, conv_new)
+
+            x, (ssm_x, conv_x) = scan_stack(
+                inner_x, x, (params["mamba_x"], cache["ssm_x"], cache["conv_x"]),
+                cfg, remat=False,
+            )
+            new_cache["ssm_x"] = ssm_x
+            new_cache["conv_x"] = conv_x
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = unembed(params["embed"], x, cfg, rules)
+        return new_cache, logits[:, 0]

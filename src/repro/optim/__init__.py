@@ -1,0 +1,21 @@
+from .adamw import AdamW, OptState, apply_updates, global_norm
+from .schedules import cosine_schedule, wsd_schedule
+from .compress import (
+    dequantize_int8,
+    error_feedback_init,
+    quantize_int8,
+    compressed_pod_allreduce,
+)
+
+__all__ = [
+    "AdamW",
+    "OptState",
+    "apply_updates",
+    "global_norm",
+    "cosine_schedule",
+    "wsd_schedule",
+    "quantize_int8",
+    "dequantize_int8",
+    "error_feedback_init",
+    "compressed_pod_allreduce",
+]

@@ -1,0 +1,36 @@
+"""Learning-rate schedules: cosine and WSD (MiniCPM's warmup-stable-decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "wsd_schedule"]
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int, floor: float = 0.01):
+    """Warmup -> flat -> short exponential-ish (linear here) decay.
+
+    MiniCPM (arXiv:2404.06395) trains with WSD so checkpoints in the stable
+    phase can branch into decayed 'deliverables' at any time.
+    """
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t_decay = step - (warmup + stable)
+        dec = peak_lr * jnp.clip(1.0 - t_decay / max(decay, 1), floor, 1.0)
+        out = jnp.where(step < warmup, warm, peak_lr)
+        return jnp.where(t_decay > 0, dec, out)
+
+    return lr

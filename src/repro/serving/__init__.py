@@ -1,0 +1,13 @@
+from .request import Request, RequestResult
+from .scheduler import CorecScheduler, RssScheduler, make_scheduler
+from .engine import InferenceEngine, EngineConfig
+
+__all__ = [
+    "Request",
+    "RequestResult",
+    "CorecScheduler",
+    "RssScheduler",
+    "make_scheduler",
+    "InferenceEngine",
+    "EngineConfig",
+]

@@ -1,0 +1,226 @@
+"""Continuous-batching inference engine with a COREC ingestion queue.
+
+Dataflow (the paper's Rx pipeline, serving edition):
+
+  frontend --submit--> scheduler (COREC shared ring | RSS per-worker rings)
+      --claim (CAS)--> ingestion workers: prefill the prompt, stage the
+      per-request cache --> decode loop: inserts staged requests into free
+      decode slots, steps ALL active slots in one batched ``decode_step``,
+      retires finished sequences.
+
+Decode slots form a ring with the paper's producer-credit semantics:
+``head`` is the admission cursor, ``tail`` advances only over the
+*contiguous* prefix of finished slots (computed on-device by
+kernels/doneprefix — the TAIL-register write), so admission order is
+checkpointable exactly like the NIC's credit scheme.  A straggling
+sequence delays only its own slot's reuse, never its peers' decoding —
+section 3.4.4's corner case, verified in tests/test_serving.py.
+``contiguous_release=False`` gives the free-list alternative for A/B
+comparison (more capacity under stragglers, unordered admission).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ArchConfig
+from ..kernels import ops
+from ..models.api import build_model
+from ..models.spec import abstract_params
+from .request import Request, RequestResult
+from .scheduler import make_scheduler
+
+__all__ = ["EngineConfig", "InferenceEngine"]
+
+
+@dataclass
+class EngineConfig:
+    n_slots: int = 8  # decode slot-ring size
+    max_seq: int = 64  # cache capacity per slot
+    n_workers: int = 2  # ingestion (prefill) workers
+    policy: str = "corec"  # 'corec' | 'rss'
+    claim_batch: int = 4
+    eos_token: int = 1
+    contiguous_release: bool = True  # paper's TAIL rule for slot reuse
+    greedy: bool = True
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ArchConfig, ecfg: EngineConfig, params=None,
+                 rng: Optional[jax.Array] = None):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.model = build_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            rng if rng is not None else jax.random.PRNGKey(0)
+        )
+        self.sched = make_scheduler(ecfg.policy, ecfg.n_workers)
+        B, S = ecfg.n_slots, ecfg.max_seq
+
+        self.cache = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            abstract_params(self.model.cache_specs(B, S)),
+        )
+        self._decode = jax.jit(lambda p, c, t: self.model.decode_step(p, c, t))
+        self._prefill = jax.jit(lambda p, b: self.model.prefill(p, b, max_seq=S))
+
+        # slot ring bookkeeping (host side)
+        self.slot_req: List[Optional[RequestResult]] = [None] * B
+        self.slot_budget = np.zeros(B, np.int32)
+        self.done_mask = np.zeros(B, bool)  # READ_DONE bits for admitted slots
+        self.head = 0  # monotonic admission cursor
+        self.tail = 0  # monotonic release cursor
+        self._staged: List = []
+        self._staged_lock = threading.Lock()
+        self._stop = threading.Event()
+        self.results: List[RequestResult] = []
+        self.release_events: List[int] = []  # run lengths (diagnostics)
+
+    # ------------------------------------------------------------------
+    # ingestion worker: claim -> prefill -> stage
+    # ------------------------------------------------------------------
+    def _make_batch(self, req: Request):
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        batch = {"tokens": tokens}
+        if self.cfg.cross_attn_every:
+            batch["image_embeds"] = jnp.zeros(
+                (1, self.cfg.n_image_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        if self.cfg.is_encdec:
+            batch["audio_embeds"] = jnp.zeros(
+                (1, self.cfg.enc_len, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        return batch
+
+    def _worker_loop(self, wid: int):
+        while not self._stop.is_set():
+            claim = self.sched.claim(wid, self.ecfg.claim_batch)
+            if claim is None:
+                time.sleep(0.0005)
+                continue
+            for req in claim.payloads:
+                if req is None:
+                    continue
+                cache1, logits = self._prefill(self.params, self._make_batch(req))
+                first = int(jnp.argmax(logits[0])) if self.ecfg.greedy else 0
+                rr = RequestResult(
+                    rid=req.rid, tokens=[first], t_arrival=req.t_arrival,
+                    t_first_token=time.perf_counter(), worker=wid,
+                )
+                with self._staged_lock:
+                    self._staged.append((cache1, rr, req.max_new_tokens))
+            self.sched.complete(wid, claim)
+
+    # ------------------------------------------------------------------
+    # slot ring: release (TAIL advance) + admit (HEAD advance)
+    # ------------------------------------------------------------------
+    def _release(self):
+        """Advance tail over the contiguous done prefix (paper line 37-41)."""
+        B = self.ecfg.n_slots
+        in_flight = self.head - self.tail
+        if self.ecfg.contiguous_release and in_flight:
+            run = int(ops.done_prefix(
+                jnp.asarray(self.done_mask), jnp.int32(self.tail % B),
+                jnp.int32(in_flight), impl="pallas", interpret=not ops.on_tpu(),
+            ))
+        else:
+            run = 0  # free-list mode: no tail semantics
+        if run:
+            for i in range(run):
+                self.done_mask[(self.tail + i) % B] = False
+            self.tail += run
+            self.release_events.append(run)
+
+    def _capacity_slots(self) -> List[int]:
+        B = self.ecfg.n_slots
+        if self.ecfg.contiguous_release:
+            self._release()
+            free = B - (self.head - self.tail)
+            return [(self.head + i) % B for i in range(free)]
+        return [i for i in range(B) if self.slot_req[i] is None]
+
+    def _insert(self, slot: int, cache1, rr: RequestResult, budget: int):
+        B = self.ecfg.n_slots
+
+        def put(cb, c1):
+            axes = [i for i in range(cb.ndim)
+                    if i < c1.ndim and c1.shape[i] == 1 and cb.shape[i] == B]
+            ax = axes[0]
+            start = [0] * cb.ndim
+            start[ax] = slot
+            return jax.lax.dynamic_update_slice(cb, c1.astype(cb.dtype), tuple(start))
+
+        self.cache = jax.tree_util.tree_map(put, self.cache, cache1)
+        self.slot_req[slot] = rr
+        self.slot_budget[slot] = budget
+        self.done_mask[slot] = False
+        if self.ecfg.contiguous_release:
+            self.head += 1
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], rate: Optional[float] = None,
+            timeout: float = 180.0) -> List[RequestResult]:
+        """Open loop: submit at ``rate`` req/s (None = all at once)."""
+        threads = [
+            threading.Thread(target=self._worker_loop, args=(w,), daemon=True)
+            for w in range(self.ecfg.n_workers)
+        ]
+        for t in threads:
+            t.start()
+
+        def producer():
+            interval = 1.0 / rate if rate else 0.0
+            for req in requests:
+                req.t_arrival = time.perf_counter()
+                while not self.sched.submit(req):
+                    time.sleep(0.0005)
+                if interval:
+                    time.sleep(interval)
+
+        prod = threading.Thread(target=producer, daemon=True)
+        prod.start()
+
+        n_total = len(requests)
+        deadline = time.perf_counter() + timeout
+        while len(self.results) < n_total and time.perf_counter() < deadline:
+            # 1) admit staged requests into released slots
+            slots = self._capacity_slots()
+            for slot in slots:
+                with self._staged_lock:
+                    item = self._staged.pop(0) if self._staged else None
+                if item is None:
+                    break
+                self._insert(slot, *item)
+            active = [i for i, r in enumerate(self.slot_req) if r is not None]
+            if not active:
+                time.sleep(0.001)
+                continue
+            # 2) one batched decode step over all slots
+            last = jnp.asarray(
+                [r.tokens[-1] if r else 0 for r in self.slot_req], jnp.int32
+            )[:, None]
+            self.cache, logits = self._decode(self.params, self.cache, last)
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            now = time.perf_counter()
+            # 3) retire finished sequences (set READ_DONE bits)
+            for i in active:
+                rr = self.slot_req[i]
+                rr.tokens.append(int(nxt[i]))
+                self.slot_budget[i] -= 1
+                if int(nxt[i]) == self.ecfg.eos_token or self.slot_budget[i] <= 0:
+                    rr.t_done = now
+                    self.results.append(rr)
+                    self.slot_req[i] = None
+                    self.done_mask[i] = True
+        self._stop.set()
+        self._release()  # hand back the trailing done-prefix (drain)
+        for t in threads:
+            t.join(timeout=2.0)
+        return list(self.results)

@@ -1,0 +1,138 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+One place decides how every logical tensor dimension maps onto mesh axes;
+models only speak logical names (see models/spec.py).  The resolution is
+config-aware:
+
+* 'heads'/'kv_heads' shard over 'model' only when the head count divides
+  the model-axis size (``attn_tp``); otherwise attention weights stay
+  replicated on 'model' and TP applies to MLP + vocab only (the
+  MLP-only-TP scheme for small-head archs: qwen2-1.5b, minicpm, whisper).
+* 'experts' shards over 'model' (expert parallelism) when the expert
+  count divides it (moonshot 64e); otherwise experts are computed by all
+  shards and 'expert_mlp' (the per-expert FFN dim) takes the TP role
+  (grok 8e on a 16-way model axis).
+* 'embed' (weight d_model dims) shards over 'data' — ZeRO-3/FSDP; with a
+  'pod' axis present, over ('pod','data') — grads reduce-scatter across
+  pods too (bandwidth-optimal DP).
+* 'batch' shards over ('pod','data'); 'cache_seq' (KV cache sequence)
+  shards over 'model' — sequence-parallel flash-decode.
+
+Everything returns jax.sharding objects; no jax device state is touched
+at import time.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ArchConfig
+from .models.spec import ParamSpec, spec_map
+
+__all__ = [
+    "LogicalRules",
+    "make_rules",
+    "resolve_axes",
+    "tree_shardings",
+    "activation_sharding",
+    "batch_spec",
+]
+
+
+class LogicalRules:
+    def __init__(self, table: Dict[str, Optional[Tuple[str, ...]]], mesh: Mesh):
+        self.table = table
+        self.mesh = mesh
+
+    def pspec(self, axes: Tuple[Optional[str], ...]) -> P:
+        parts = []
+        used = set()
+        for ax in axes:
+            m = self.table.get(ax) if ax is not None else None
+            if m is None:
+                parts.append(None)
+                continue
+            m = tuple(a for a in m if a in self.mesh.axis_names and a not in used)
+            used.update(m)
+            parts.append(m if len(m) != 1 else m[0])
+        # trim trailing Nones for cleanliness
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding(self, axes: Tuple[Optional[str], ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(axes))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh) -> LogicalRules:
+    model = _axis_size(mesh, "model")
+    attn_tp = cfg.attn_tp
+    if attn_tp is None:
+        attn_tp = cfg.n_heads % model == 0 and cfg.n_heads >= model
+    # EP default OFF: group-local MoE dispatch + expert-FFN TP beats the
+    # all-to-all EP pattern on this workload (see EXPERIMENTS.md §Perf);
+    # set expert_parallel=True explicitly to study the EP layout.
+    ep = cfg.expert_parallel
+    if ep is None:
+        ep = False
+
+    table: Dict[str, Optional[Tuple[str, ...]]] = {
+        "batch": ("pod", "data"),
+        "embed": ("data",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "heads": ("model",) if attn_tp else None,
+        "kv_heads": ("model",)
+        if (attn_tp and cfg.n_kv_heads % model == 0 and cfg.n_kv_heads >= model)
+        else None,
+        "experts": ("model",) if ep else None,
+        "expert_mlp": None if ep else ("model",),
+        "cache_seq": ("model",) if cfg.seq_shard_cache else None,
+        "cache_heads": None,  # resolved below
+        "seq": None,  # activation sequence dim (train): stays unsharded
+        "enc_seq": None,
+        "ssm_heads": ("model",)
+        if (cfg.ssm_state > 0 and (cfg.ssm_expand * cfg.d_model // max(cfg.ssm_head_dim, 1)) % model == 0)
+        else None,
+        "ssm_inner": ("model",),
+        "rwkv_heads": ("model",)
+        if (cfg.rwkv and (cfg.d_model // 64) % model == 0)
+        else None,
+    }
+    # KV-cache head sharding: only if kv heads divide model AND we are not
+    # already sharding the cache on seq (avoid double-sharding conflicts).
+    if not cfg.seq_shard_cache and cfg.n_kv_heads % model == 0 and cfg.n_kv_heads >= model:
+        table["cache_heads"] = ("model",)
+    return LogicalRules(table, mesh)
+
+
+def resolve_axes(rules: LogicalRules, axes) -> P:
+    return rules.pspec(tuple(axes))
+
+
+def tree_shardings(rules: LogicalRules, specs):
+    """ParamSpec pytree -> NamedSharding pytree."""
+    return spec_map(lambda s: rules.sharding(s.axes), specs)
+
+
+def activation_sharding(rules: LogicalRules, *axes) -> NamedSharding:
+    return rules.sharding(tuple(axes))
+
+
+def batch_spec(rules: LogicalRules) -> P:
+    return rules.pspec(("batch", "seq"))
+
+
+def constrain(rules: Optional[LogicalRules], x: jax.Array, *axes):
+    """with_sharding_constraint via logical names (no-op without rules)."""
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(tuple(axes)))

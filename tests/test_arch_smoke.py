@@ -1,0 +1,102 @@
+"""Per-assigned-architecture smoke tests (reduced same-family configs).
+
+For each of the 10 archs: instantiate the TINY variant, run one forward/
+train step on CPU, assert output shapes + finiteness; run prefill + one
+decode step and check it matches the full forward (cache correctness).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models.api import build_model
+from repro.models.layers import unembed
+from repro.optim import AdamW, apply_updates
+
+
+def _batch(cfg, B=2, S=12, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab, dtype=jnp.int32),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab, dtype=jnp.int32),
+    }
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.is_encdec:
+        batch["audio_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.enc_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def _forward_last_logits(model, cfg, params, tokens, batch):
+    if cfg.is_encdec:
+        x, _ = model.forward(params, tokens, batch["audio_embeds"])
+    elif cfg.rwkv:
+        x, _ = model.forward(params, tokens)
+    elif cfg.ssm_state:
+        x, _, _ = model.forward(params, tokens)
+    else:
+        x, _, _ = model.forward(params, tokens,
+                                image_embeds=batch.get("image_embeds"))
+    return unembed(params["embed"], x, cfg)[:, -1]
+
+
+@pytest.mark.parametrize("arch", configs.ALL_ARCHS)
+def test_arch_train_step_and_decode(arch):
+    cfg = configs.get_tiny(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+
+    # one train step: loss finite, grads flow, params update
+    opt = AdamW(weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, _), grads = jax.value_and_grad(
+            lambda pp: model.loss(pp, b), has_aux=True
+        )(p)
+        upd, o = opt.update(grads, o, p, jnp.float32(1e-3))
+        return apply_updates(p, upd), o, loss
+
+    p2, opt_state, loss = step(params, opt_state, batch)
+    assert jnp.isfinite(loss), arch
+    # logits shape via loss path implies [B,S,vocab_padded]; check update
+    leaves0 = jax.tree_util.tree_leaves(params)
+    leaves1 = jax.tree_util.tree_leaves(p2)
+    assert any(
+        not jnp.allclose(a, b) for a, b in zip(leaves0, leaves1)
+    ), f"{arch}: no parameter moved"
+
+    # prefill + decode consistency against the full forward
+    cache, lg = model.prefill(params, batch, max_seq=S + 4)
+    assert lg.shape == (B, cfg.vocab_padded())
+    nxt = jnp.ones((B, 1), jnp.int32)
+    cache2, lg2 = model.decode_step(params, cache, nxt)
+    tok_ext = jnp.concatenate([batch["tokens"], nxt], axis=1)
+    want = _forward_last_logits(model, cfg, params, tok_ext, batch)
+    scale = float(jnp.abs(want).max()) + 1e-6
+    err = float(jnp.abs(lg2 - want).max())
+    assert err < 2e-3 * scale + 2e-3, f"{arch}: decode mismatch {err} vs {scale}"
+    assert jnp.all(jnp.isfinite(lg2)), arch
+
+
+@pytest.mark.parametrize("arch", configs.ALL_ARCHS)
+def test_arch_full_config_shapes(arch):
+    """The FULL config is exercised via eval_shape only (no allocation)."""
+    cfg = configs.get(arch)
+    model = build_model(cfg)
+    import math
+
+    abstract = model.abstract_params()
+    n = sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(abstract))
+    # within 25% of the analytic count (analytic skips small fudge terms)
+    assert abs(n - cfg.n_params()) / cfg.n_params() < 0.25, (n, cfg.n_params())
+    cache = model.cache_specs(4, 64)
+    assert "lengths" in cache

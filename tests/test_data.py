@@ -1,0 +1,68 @@
+"""Data pipeline: determinism, resumability, COREC prefetch correctness."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import CorecDataPipeline, SyntheticLMSource
+
+
+def test_source_deterministic():
+    s = SyntheticLMSource(vocab=100, batch=2, seq=8, seed=3)
+    a = s.batch_at(17)
+    b = s.batch_at(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(s.batch_at(18)["tokens"], a["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    s = SyntheticLMSource(vocab=100, batch=1, seq=8, seed=0)
+    b = s.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][0, 1:], b["labels"][0, :-1])
+
+
+def test_pipeline_delivers_in_order_single_feeder():
+    src = SyntheticLMSource(vocab=50, batch=1, seq=4, seed=1)
+    pipe = CorecDataPipeline(src, ring_size=64, n_producers=2)
+    pipe.start()
+    try:
+        got = [pipe.next_batch()["index"] for _ in range(20)]
+    finally:
+        pipe.stop()
+    assert got == list(range(20))
+
+
+def test_pipeline_resume_position():
+    """The released TAIL is a valid resume point: batch streams glue."""
+    src = SyntheticLMSource(vocab=50, batch=1, seq=4, seed=2)
+    pipe = CorecDataPipeline(src, ring_size=64, n_producers=2)
+    pipe.start()
+    try:
+        seen = [pipe.next_batch()["index"] for _ in range(7)]
+    finally:
+        pipe.stop()
+    pos = pipe.position()
+    assert pos >= 7  # everything claimed AND released counts
+    pipe2 = CorecDataPipeline.restore(src, pos, ring_size=64, n_producers=2)
+    pipe2.start()
+    try:
+        nxt = pipe2.next_batch()["index"]
+    finally:
+        pipe2.stop()
+    assert nxt == pos
+    assert set(range(7)) <= set(seen)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(5, 30))
+def test_pipeline_no_loss_no_dup(n):
+    src = SyntheticLMSource(vocab=50, batch=1, seq=4, seed=4)
+    pipe = CorecDataPipeline(src, ring_size=64, n_producers=3)
+    pipe.start()
+    try:
+        got = [pipe.next_batch()["index"] for _ in range(n)]
+    finally:
+        pipe.stop()
+    assert got == sorted(set(got)) == list(range(n))

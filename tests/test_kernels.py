@@ -1,0 +1,202 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+# ----------------------------------------------------------------------
+# rmsnorm
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 64), (3, 5, 128), (1, 256), (7, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = jax.random.normal(ks[1], shape[-1:], jnp.float32)
+    got = rmsnorm_pallas(x, w, interpret=True, block_rows=4)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,Sq,Sk,H,Hkv,D,causal,q_offset",
+    [
+        (1, 32, 32, 4, 4, 32, True, 0),  # MHA causal
+        (2, 40, 40, 8, 2, 64, True, 0),  # GQA, ragged blocks
+        (1, 16, 48, 4, 1, 32, False, 0),  # MQA non-causal, Sq != Sk
+        (1, 8, 72, 4, 2, 32, True, 64),  # decode-ish offset window
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Sk, H, Hkv, D, causal, q_offset, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
+    got = ops.attention(q, k, v, causal=causal, q_offset=q_offset,
+                        impl="pallas", interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_xla_matches_naive_long():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 300, 4, 32))
+    k = jax.random.normal(ks[1], (1, 300, 2, 32))
+    v = jax.random.normal(ks[2], (1, 300, 2, 32))
+    got = ref.flash_attention_ref(q, k, v, causal=True, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+# ----------------------------------------------------------------------
+# decode attention
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,H,Hkv,D,S,block_k",
+    [(2, 4, 4, 32, 40, 16), (3, 8, 2, 64, 100, 32), (1, 4, 1, 32, 513, 128)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, Hkv, D, S, block_k, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    got = ops.decode_attention(q, kc, vc, lengths, impl="pallas",
+                               interpret=True, block_k=block_k)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ----------------------------------------------------------------------
+# rwkv6
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,H,N,chunk", [(1, 32, 2, 16, 8), (2, 48, 3, 32, 16),
+                                           (1, 20, 1, 16, 8)])
+def test_rwkv6_chunk_and_pallas_vs_scan(B, T, H, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, N)) * 0.5 - 1.0))
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    o_ref, s_ref = ops.rwkv6(r, k, v, w, u, impl="naive")
+    for impl in ("xla", "pallas"):
+        o, s = ops.rwkv6(r, k, v, w, u, impl=impl, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(o, o_ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(s, s_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_step_matches_scan():
+    B, T, H, N = 2, 12, 2, 16
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, N)) * 0.3))
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    o_ref, s_ref = ops.rwkv6(r, k, v, w, u, impl="naive")
+    st = jnp.zeros((B, H, N, N))
+    outs = []
+    for t in range(T):
+        o, st = ops.rwkv6_step(r[:, t], k[:, t], v[:, t], w[:, t], u, st)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.stack(outs, 1), o_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st, s_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_state_carry_split():
+    """Running [0:T/2) then [T/2:T) with the carried state == full run."""
+    B, T, H, N = 1, 32, 2, 16
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, N)) * 0.3))
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    o_full, s_full = ops.rwkv6(r, k, v, w, u, impl="xla", chunk=8)
+    h = T // 2
+    o1, s1 = ops.rwkv6(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, impl="xla", chunk=8)
+    o2, s2 = ops.rwkv6(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, state=s1,
+                       impl="xla", chunk=8)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), o_full,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(s2, s_full, rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# ssd (mamba2)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,H,P,G,N,chunk",
+                         [(1, 32, 2, 8, 1, 16, 8), (2, 24, 4, 16, 2, 8, 8)])
+def test_ssd_chunk_and_pallas_vs_scan(B, T, H, P, G, N, chunk):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))) * 0.2
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, T, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, T, G, N)) * 0.5
+    D = jax.random.normal(ks[5], (H,)) * 0.3
+    y_ref, s_ref = ops.ssd(x, dt, A, Bm, Cm, D, impl="naive")
+    for impl in ("xla", "pallas"):
+        y, s = ops.ssd(x, dt, A, Bm, Cm, D, impl=impl, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(s, s_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_step_matches_scan():
+    B, T, H, P, G, N = 1, 10, 2, 8, 1, 16
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))) * 0.2
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, T, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, T, G, N)) * 0.5
+    D = jax.random.normal(ks[5], (H,)) * 0.3
+    y_ref, s_ref = ops.ssd(x, dt, A, Bm, Cm, D, impl="naive")
+    st = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(T):
+        y, st = ops.ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D, st)
+        ys.append(y)
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st, s_ref, rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# done-prefix (COREC TAIL on device)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n", [64, 128])
+def test_done_prefix_sweep(n):
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        done = jnp.asarray(rng.random(n) < 0.7)
+        start = jnp.int32(rng.integers(0, n))
+        limit = jnp.int32(rng.integers(1, n + 1))
+        got = ops.done_prefix(done, start, limit, impl="pallas", interpret=True)
+        want = ref.done_prefix_ref(done, start, limit)
+        assert int(got) == int(want)

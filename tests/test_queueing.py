@@ -1,0 +1,77 @@
+"""Queueing theory reproduction (paper section 3.2, Figs 3-4) + metrics."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    measure_reordering,
+    per_flow_reordering,
+    simulate_scale_out,
+    simulate_scale_up,
+    sweep_load,
+)
+
+
+def test_scale_up_beats_scale_out_markovian():
+    """M/M/N dominates N x M/M/1 in mean AND p99 at moderate-high load."""
+    for n in (4, 8):
+        up = simulate_scale_up(0.85 * n, 1.0, n, n_jobs=60_000, seed=1)
+        out = simulate_scale_out(0.85 * n, 1.0, n, n_jobs=60_000, seed=1)
+        assert up.mean < out.mean
+        assert up.percentile(99) < out.percentile(99)
+
+
+def test_deterministic_service_still_wins_at_high_load():
+    """Fig 4: benefits shrink with deterministic service but persist at
+    very high load."""
+    n = 4
+    up = simulate_scale_up(0.95 * n, 1.0, n, n_jobs=60_000, service="D", seed=2)
+    out = simulate_scale_out(0.95 * n, 1.0, n, n_jobs=60_000, service="D", seed=2)
+    assert up.percentile(99) < out.percentile(99)
+
+
+def test_low_load_equivalence():
+    """At trivial load both disciplines are ~service time."""
+    n = 4
+    up = simulate_scale_up(0.05 * n, 1.0, n, n_jobs=20_000, seed=3)
+    out = simulate_scale_out(0.05 * n, 1.0, n, n_jobs=20_000, seed=3)
+    assert abs(up.mean - out.mean) < 0.35
+
+
+def test_sweep_load_shape():
+    r = sweep_load(4, [0.5, 0.9], n_jobs=20_000)
+    assert len(r["scale_up"]) == 2
+    assert r["scale_up"][1]["p99"] < r["scale_out"][1]["p99"]
+
+
+# ---------------------------------------------------------------------
+# RFC 4737 reordering metrics
+# ---------------------------------------------------------------------
+def test_reordering_in_order():
+    rep = measure_reordering(list(range(100)))
+    assert rep.n_reordered == 0 and rep.pct == 0.0 and rep.max_distance == 0
+
+
+def test_reordering_single_swap():
+    rep = measure_reordering([0, 2, 1, 3])
+    assert rep.n_reordered == 1
+    assert rep.max_distance == 1
+    assert rep.max_extent == 1
+
+
+def test_reordering_displaced_packet():
+    # packet 0 arrives 5 positions late
+    rep = measure_reordering([1, 2, 3, 4, 5, 0, 6, 7])
+    assert rep.n_reordered == 1
+    assert rep.max_distance == 5
+
+
+def test_per_flow_aggregation():
+    stream = [(0, 0), (1, 0), (0, 1), (1, 2), (1, 1), (0, 2)]
+    reps = per_flow_reordering(stream)
+    assert reps[0].n_reordered == 0
+    assert reps[1].n_reordered == 1
+    assert reps["__all__"].n == 6
+    assert reps["__all__"].n_reordered == 1

@@ -1,0 +1,167 @@
+"""Property tests of the COREC protocol (hypothesis-driven interleavings).
+
+The stepped simulator (core/protocol_sim.py) replays the exact ring.py
+protocol one atomic operation at a time under arbitrary schedules, with
+the safety invariants asserted after EVERY step:
+  * cursor order tail <= claim_head <= head, credit bound,
+  * claims disjoint, payloads delivered exactly once, no phantoms,
+  * tail only covers claimed-and-completed tickets.
+Plus threaded end-to-end runs of the real ring for liveness/accounting.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CorecRing
+from repro.core.protocol_sim import SimState, consumer, producer, run_schedule
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    schedule=st.lists(st.integers(0, 3), min_size=50, max_size=600),
+    n_payloads=st.integers(1, 100),
+    max_batch=st.integers(1, 8),
+)
+def test_interleavings_preserve_invariants(schedule, n_payloads, max_batch):
+    st_ = SimState(64)
+    actors = [producer(st_, list(range(n_payloads)))] + [
+        consumer(st_, wid, max_batch=max_batch, rounds=1000) for wid in range(3)
+    ]
+    run_schedule(st_, actors, schedule)  # invariants checked inside
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_random_long_schedules_drain(seed):
+    import random
+
+    rnd = random.Random(seed)
+    st_ = SimState(64)
+    n = 200
+    actors = [producer(st_, list(range(n)))] + [
+        consumer(st_, wid, max_batch=4, rounds=10_000) for wid in range(4)
+    ]
+    schedule = [rnd.randrange(len(actors)) for _ in range(40_000)]
+    run_schedule(st_, actors, schedule)
+    # with a long fair-ish schedule everything produced must be delivered
+    assert sorted(st_.delivered) == sorted(st_.produced_payloads)
+
+
+def test_sequential_consumer_matches_real_ring():
+    """Stepped model and the real ring agree on a sequential schedule."""
+    ring = CorecRing(64)
+    sim = SimState(64)
+    for i in range(40):
+        assert ring.produce(i)
+    for _ in sim.produced_payloads:
+        pass
+    g = producer(sim, list(range(40)))
+    for _ in g:
+        pass
+    got = []
+    while True:
+        c = ring.claim(max_batch=7)
+        if c is None:
+            break
+        ring.complete(c)
+        ring.try_release()
+        got.extend(c.payloads)
+    cg = consumer(sim, 0, max_batch=7, rounds=100)
+    for _ in cg:
+        pass
+    assert got == list(range(40))
+    assert sim.delivered == got
+    assert ring.tail == sim.tail == 40
+
+
+def test_threaded_exactly_once_and_epochs():
+    ring = CorecRing(128)
+    N = 5000
+    delivered = []
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def worker():
+        while not stop.is_set():
+            c = ring.claim(max_batch=16)
+            if c is None:
+                ring.try_release()
+                continue
+            ring.complete(c)
+            ring.try_release()
+            with lock:
+                delivered.extend(c.payloads)
+
+    threads = [threading.Thread(target=worker, daemon=True) for _ in range(4)]
+    for t in threads:
+        t.start()
+    i = 0
+    while i < N:
+        if ring.produce(i):
+            i += 1
+    # drain
+    import time
+
+    deadline = time.time() + 20
+    while time.time() < deadline:
+        with lock:
+            if len(delivered) == N:
+                break
+        time.sleep(0.001)
+    stop.set()
+    for t in threads:
+        t.join(timeout=2)
+    assert sorted(delivered) == list(range(N))  # exactly once
+    assert ring.epoch() == N // 128  # Table 1: epochs counted correctly
+
+
+def test_stalled_claim_blocks_reuse_not_processing():
+    """Section 3.4.4: a stalled claimant stalls slot reuse after a wrap,
+    but peers keep claiming everything else."""
+    ring = CorecRing(64)
+    for i in range(10):
+        ring.produce(i)
+    stalled = ring.claim(max_batch=1)  # worker A claims ticket 0 and stalls
+    assert stalled.start == 0
+    # peer B drains the rest and completes
+    got = []
+    while True:
+        c = ring.claim(max_batch=8)
+        if c is None:
+            break
+        ring.complete(c)
+        got.extend(c.payloads)
+    assert got == list(range(1, 10))  # processing was never blocked
+    assert ring.try_release() == 0  # but nothing releases: gap at ticket 0
+    assert ring.tail == 0
+    # producer can still fill up to the credit limit, then stalls
+    produced = 0
+    j = 10
+    while ring.produce(j):
+        j += 1
+        produced += 1
+    assert produced == 64 - 10  # full ring minus already-produced
+    # A finally completes; release unblocks the whole prefix
+    ring.complete(stalled)
+    freed = ring.try_release()
+    assert freed == 10
+    assert ring.tail == 10
+
+
+def test_producer_credit_never_exceeded():
+    ring = CorecRing(64)
+    n = 0
+    while ring.produce(n):
+        n += 1
+    assert n == 64
+    assert not ring.produce(999)
+    c = ring.claim(max_batch=3)
+    ring.complete(c)
+    assert ring.try_release() == 3
+    for k in range(3):
+        assert ring.produce(100 + k)
+    assert not ring.produce(999)

@@ -1,0 +1,74 @@
+"""Logical sharding rules: per-config resolution on a local mesh."""
+
+from __future__ import annotations
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.config import SHAPES, cell_is_applicable
+from repro.models.api import build_model
+from repro.sharding import make_rules, tree_shardings
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_attn_tp_auto(mesh):
+    # 48 heads on 1-way model axis -> tp on (trivially divisible)
+    cfg = configs.get("granite-34b")
+    rules = make_rules(cfg, mesh)
+    assert rules.pspec(("embed", "heads", None)) == P("data", "model")
+
+
+def test_vocab_and_mlp_always_tp(mesh):
+    for arch in configs.ALL_ARCHS:
+        rules = make_rules(configs.get(arch), mesh)
+        assert rules.pspec(("vocab", "embed")) == P("model", "data")
+
+
+def test_no_double_axis_use(mesh):
+    """A PartitionSpec must never use one mesh axis on two dims."""
+    for arch in configs.ALL_ARCHS:
+        cfg = configs.get(arch)
+        rules = make_rules(cfg, mesh)
+        model = build_model(cfg)
+        sh = tree_shardings(rules, model.param_specs())
+        for leaf in jax.tree_util.tree_leaves(sh):
+            seen = []
+            for part in leaf.spec:
+                if part is None:
+                    continue
+                parts = part if isinstance(part, tuple) else (part,)
+                for a in parts:
+                    assert a not in seen, (arch, leaf.spec)
+                    seen.append(a)
+
+
+def test_cache_specs_have_shardings(mesh):
+    for arch in configs.ALL_ARCHS:
+        cfg = configs.get(arch)
+        rules = make_rules(cfg, mesh)
+        model = build_model(cfg)
+        sh = tree_shardings(rules, model.cache_specs(4, 64))
+        assert jax.tree_util.tree_leaves(sh)
+
+
+def test_applicability_matrix():
+    """40 cells: 34 applicable + 6 whole-skip (wait: 8 archs skip
+    long_500k => 32 + 8 skips = 40)."""
+    n_ok = n_skip = 0
+    for arch in configs.ALL_ARCHS:
+        cfg = configs.get(arch)
+        for shape in SHAPES:
+            ok, why = cell_is_applicable(cfg, shape)
+            if ok:
+                n_ok += 1
+            else:
+                n_skip += 1
+                assert shape.name == "long_500k"
+                assert not cfg.subquadratic
+    assert n_ok == 32 and n_skip == 8
