@@ -1,0 +1,97 @@
+"""Per-op cost of the ring's word-packed fast path vs the per-item path.
+
+The paper's argument is that COREC's per-packet coordination is a handful
+of O(1) RMW instructions; this benchmark measures how close each data
+plane gets.  For batch sizes 1/8/32/64 it drives a steady-state
+produce -> claim -> complete -> try_release cycle through a 1024-slot
+ring on both planes and reports:
+
+* us/item for the claim+release hot path (and the full cycle),
+* atomic ops/item from ``RingStats.atomic_ops`` (every shared atomic
+  load/store/RMW the ring issued),
+* the packed-vs-peritem ratios for both.
+
+Emitted as CSV lines (common.emit) and saved to results/ring_ops.json so
+the perf trajectory is tracked across PRs.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.ring import CorecRing
+
+from .common import emit, save_json
+
+RING_SIZE = 1024
+BATCHES = (1, 8, 32, 64)
+N_ITEMS = 16384
+
+
+def _measure(packed: bool, batch: int, n_items: int = N_ITEMS) -> dict:
+    ring = CorecRing(RING_SIZE, packed=packed)
+    payload = list(range(batch))
+    rounds = max(1, n_items // batch)
+    pc = time.perf_counter
+    t_claim = t_release = 0.0
+    t0 = pc()
+    for _ in range(rounds):
+        ring.produce_batch(payload)
+        t1 = pc()
+        claim = ring.claim(max_batch=batch)
+        t2 = pc()
+        ring.complete(claim)
+        t3 = pc()
+        ring.try_release()
+        t4 = pc()
+        t_claim += t2 - t1
+        t_release += t4 - t3
+        assert len(claim) == batch
+    wall = pc() - t0
+    n = rounds * batch
+    s = ring.stats
+    assert s.claimed_items == s.released_items == n
+    return {
+        "packed": packed,
+        "batch": batch,
+        "items": n,
+        "us_per_item_cycle": wall / n * 1e6,
+        "us_per_item_claim_release": (t_claim + t_release) / n * 1e6,
+        "atomic_ops_per_item": s.atomic_ops / n,
+        "stats": s.snapshot(),
+    }
+
+
+def run() -> dict:
+    out = {"ring_size": RING_SIZE, "configs": []}
+    for batch in BATCHES:
+        peritem = _measure(packed=False, batch=batch)
+        packed = _measure(packed=True, batch=batch)
+        ops_ratio = peritem["atomic_ops_per_item"] / max(
+            packed["atomic_ops_per_item"], 1e-12
+        )
+        us_ratio = peritem["us_per_item_claim_release"] / max(
+            packed["us_per_item_claim_release"], 1e-12
+        )
+        out["configs"].append(
+            {"peritem": peritem, "packed": packed,
+             "atomic_ops_reduction": ops_ratio, "claim_release_speedup": us_ratio}
+        )
+        for m in (peritem, packed):
+            plane = "packed" if m["packed"] else "peritem"
+            emit(
+                f"ring_ops/{plane}/b{batch}",
+                m["us_per_item_claim_release"],
+                f"atomic_ops_per_item={m['atomic_ops_per_item']:.3f}",
+            )
+        emit(
+            f"ring_ops/ratio/b{batch}",
+            us_ratio,
+            f"atomic_ops_reduction={ops_ratio:.1f}x",
+        )
+    save_json("ring_ops", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -19,6 +19,7 @@ def main() -> None:
         queueing_bench,
         reorder_traces,
         reorder_udp,
+        ring_ops_bench,
         roofline,
         scalability,
         serving_bench,
@@ -28,6 +29,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     for mod in (
+        ring_ops_bench,  # per-op cost: word-packed vs per-item ring
         queueing_bench,  # Figs 3-4
         scalability,  # Tables 2-3
         latency_bench,  # Figs 5-6
@@ -47,7 +49,10 @@ def main() -> None:
             failures.append((mod.__name__, e))
             traceback.print_exc()
     if failures:
-        print(f"FAILED: {failures}", file=sys.stderr)
+        # Non-zero exit so CI catches a broken benchmark instead of a
+        # silently truncated CSV.
+        names = ", ".join(f"{name}: {e!r}" for name, e in failures)
+        print(f"FAILED ({len(failures)}): {names}", file=sys.stderr)
         sys.exit(1)
 
 

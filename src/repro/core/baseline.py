@@ -54,6 +54,24 @@ class ScaleOutDriver:
         """RSS: the flow key pins the item to one queue, full or not."""
         return self.rings[rss_hash(flow_key, self.n_queues)].produce(payload)
 
+    def produce_batch(self, payloads: Sequence[Any], flow_keys: Sequence[int]) -> int:
+        """Batch offer with *prefix* semantics: returns how many leading
+        items were accepted, stopping at the first full queue so a caller
+        can retry ``payloads[n:]`` without reordering any flow.  Runs of
+        consecutive same-queue items are published as one descriptor burst
+        (same surface as ``CorecRing.produce_batch``)."""
+        n = 0
+        total = len(payloads)
+        while n < total:
+            q = rss_hash(flow_keys[n], self.n_queues)
+            run_end = n + 1
+            while run_end < total and rss_hash(flow_keys[run_end], self.n_queues) == q:
+                run_end += 1
+            n += self.rings[q].produce_batch(payloads[n:run_end])
+            if n < run_end:  # queue full mid-run: stop at the prefix
+                break
+        return n
+
     # -- consumer side ---------------------------------------------------
     def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
         return self.rings[worker].claim(max_batch)
@@ -87,6 +105,11 @@ class LockedSharedQueue:
     def produce(self, payload: Any, flow_key: int = 0) -> bool:
         return self.ring.produce(payload)
 
+    def produce_batch(
+        self, payloads: Sequence[Any], flow_keys: Optional[Sequence[int]] = None
+    ) -> int:
+        return self.ring.produce_batch(payloads)
+
     def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
         with self._mutex:
             c = self.ring.claim(max_batch)
@@ -116,6 +139,11 @@ class CorecSharedQueue:
 
     def produce(self, payload: Any, flow_key: int = 0) -> bool:
         return self.ring.produce(payload)
+
+    def produce_batch(
+        self, payloads: Sequence[Any], flow_keys: Optional[Sequence[int]] = None
+    ) -> int:
+        return self.ring.produce_batch(payloads)
 
     def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
         return self.ring.claim(max_batch)

@@ -138,17 +138,37 @@ class WorkerPool:
         t0 = time.perf_counter()
         self.start()
         interval = (1.0 / rate) if rate else 0.0
-        next_t = time.perf_counter()
-        for it in items:
-            if interval:
+        if interval:
+            next_t = time.perf_counter()
+            for it in items:
                 while time.perf_counter() < next_t:
                     pass
                 next_t += interval
-            it.t_enqueue = time.perf_counter()
-            while not self.queue.produce(it, it.flow):
-                # Ring full: producer backpressure (the NIC would drop; we
-                # spin so every item is accounted for in latency tests).
-                time.sleep(0)
+                it.t_enqueue = time.perf_counter()
+                while not self.queue.produce(it, it.flow):
+                    # Ring full: producer backpressure (the NIC would drop;
+                    # we spin so every item is accounted for in latency
+                    # tests).
+                    time.sleep(0)
+        else:
+            # Burst mode: offer descriptor bursts through the batch surface
+            # (one DD-word publish + one doorbell per burst).  Prefix
+            # semantics let us retry the remainder on backpressure without
+            # reordering any flow.
+            i = 0
+            stamped = 0  # items get t_enqueue once, at their FIRST offer —
+            # a retry after backpressure must keep the wait in the latency
+            while i < len(items):
+                chunk = items[i : i + 256]
+                if i + len(chunk) > stamped:
+                    now = time.perf_counter()
+                    for it in items[stamped : i + len(chunk)]:
+                        it.t_enqueue = now
+                    stamped = i + len(chunk)
+                took = self.queue.produce_batch(chunk, [it.flow for it in chunk])
+                i += took
+                if took == 0:
+                    time.sleep(0)
         deadline = time.perf_counter() + drain_timeout
         while time.perf_counter() < deadline:
             with self._done_lock:

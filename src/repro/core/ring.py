@@ -5,35 +5,66 @@ Paper mapping (Listing 2 + sections 3.4.1-3.4.4):
 =====================================  =========================================
 paper                                  here
 =====================================  =========================================
-NIC filling Rx descriptors             ``produce()`` (single producer; the
-                                       producer is *unmodifiable*: it only sees
-                                       head/tail credit, like a DMA engine)
-DD bit scan (lines 12-19)              ready scan over epoch-stamped slot seq
+NIC filling Rx descriptors             ``produce()`` / ``produce_batch()``
+                                       (single producer; the producer is
+                                       *unmodifiable*: it only sees head/tail
+                                       credit, like a DMA engine — a batch is
+                                       one burst of descriptor writes followed
+                                       by one HEAD doorbell)
+DD bit scan (lines 12-19)              DD *bitmap*: one bit per slot packed in
+                                       AtomicU64 words; ``claim()`` finds the
+                                       ready-run length with O(size/64) word
+                                       loads + trailing-ones bit tricks — the
+                                       descriptor-cacheline scan a real driver
+                                       does, not one load per descriptor
 CAS on queue->rx_index (line 21)       CAS on ``claim_head`` 64-bit ticket
 descriptor copy + mempool swap         payload move-out in ``claim()``
-write_batch_is_done (line 33)          ``complete()`` -> READ_DONE bitmask
-trylock + TAIL write (35-42)           ``try_release()`` contiguous prefix
+write_batch_is_done (line 33)          ``complete()`` -> READ_DONE bitmask,
+                                       one ``fetch_or`` per word span
+trylock + TAIL write (35-42)           ``try_release()``: done-prefix counted
+                                       word-at-a-time (trailing-ones
+                                       popcount), whole word spans cleared
+                                       and recycled with one RMW per word
 epoch = id // RING_SIZE (Table 1)      same; 64-bit ticket kills ABA
 =====================================  =========================================
+
+Two data planes coexist so the cost model can be compared honestly:
+
+* ``packed=True`` (default): the word-packed fast path above.  Per-item
+  atomic cost is O(1/64) word ops amortised — the paper's "handful of RMW
+  instructions" budget.
+* ``packed=False``: the per-item reference path (one atomic load per DD
+  scan step, one ``fetch_and`` per released bit), kept for the
+  old-vs-new benchmark (benchmarks/ring_ops_bench.py) and the
+  observational-equivalence property tests
+  (tests/test_ring_properties.py).
+
+``RingStats.atomic_ops`` counts every shared-memory atomic operation the
+hot paths issue (loads, stores, RMWs; a fenced ``store_many`` batch counts
+as one), so benchmarks can report atomic-ops-per-item for either plane.
 
 The claim path is lock-free: a consumer that loses the CAS retries against
 fresh state; a consumer that wins owns a disjoint ticket interval and never
 interacts with its peers again until the O(1) bitmask write.  A stalled
 consumer delays only the *reuse* of its own slots once the ring wraps
 (section 3.4.4 corner case) — peers keep claiming and processing.
+
+Epoch safety of the packed claim: the DD bit of slot ``t & mask`` is set
+when ticket ``t`` is published and cleared when it is released, so a set
+bit alone cannot distinguish ticket ``t`` from ``t - size``.  ``claim()``
+therefore clamps the scan at ``head`` (loaded *after* ``claim_head``): a
+ticket below head was necessarily published after its slot was recycled,
+so within ``[claim_head, head)`` a set bit always means "this epoch".
 """
 
 from __future__ import annotations
 
-import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, List, Optional, Sequence
 
-from .atomics import AtomicU64, TryLock
+from .atomics import AtomicBitmap, AtomicU64, AtomicU64Array, TryLock
 
 __all__ = ["Claim", "CorecRing", "RingStats"]
-
-_WORD_BITS = 64
 
 
 @dataclass
@@ -67,6 +98,8 @@ class RingStats:
     trylock_failures: int = 0
     produced: int = 0
     full_producer_polls: int = 0
+    batch_publishes: int = 0
+    atomic_ops: int = 0  # every atomic load/store/RMW on the hot paths
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
@@ -77,13 +110,17 @@ class CorecRing:
 
     ``size`` must be a power of two (paper section 3.4.3: "the queue size is
     always a power of 2 ... this already happens in network drivers").
+
+    ``packed`` selects the word-packed fast path (default) or the per-item
+    reference path (see module docstring).
     """
 
-    def __init__(self, size: int):
+    def __init__(self, size: int, packed: bool = True):
         if size <= 0 or size & (size - 1):
             raise ValueError("ring size must be a power of two")
         self.size = size
         self.mask = size - 1
+        self.packed = packed
         # Payload cells. Only the exclusive owner of a ticket touches cell
         # ticket & mask, so plain list slots are safe.
         self._cells: List[Any] = [None] * size
@@ -91,7 +128,11 @@ class CorecRing:
         # DD bit):  seq == t      -> empty, awaiting producer ticket t
         #           seq == t + 1  -> filled for consumer ticket t (DD set)
         #           seq == t+size -> empty, awaiting next-epoch producer.
-        self._seq = [AtomicU64(i) for i in range(size)]
+        self._seq = AtomicU64Array(range(size))
+        # DD bitmap: consumer-facing "descriptor done" bits, one per slot,
+        # packed in words so claim() scans a cacheline at a time.  Only
+        # maintained on the packed plane (the per-item plane scans _seq).
+        self._dd = AtomicBitmap(size)
         # Producer cursor (the NIC's HEAD). Single producer -> plain int
         # guarded by producer discipline, but atomic for observers.
         self._head = AtomicU64(0)
@@ -99,7 +140,7 @@ class CorecRing:
         # promoted to a monotonic 64-bit ticket -> epoch = id // size).
         self._claim_head = AtomicU64(0)
         # READ_DONE bitmask: one bit per slot, packed in atomic words.
-        self._done = [AtomicU64(0) for _ in range(max(1, size // _WORD_BITS))]
+        self._done = AtomicBitmap(size)
         # TAIL: last ticket (exclusive) returned to the producer as credit.
         self._tail = AtomicU64(0)
         self._tail_lock = TryLock()
@@ -118,33 +159,68 @@ class CorecRing:
         """
         head = self._head.load()
         if head - self._tail.load() >= self.size:
+            self.stats.atomic_ops += 2
             self.stats.full_producer_polls += 1
             return False
         idx = head & self.mask
         # Slot must have been recycled for this epoch by the releaser.
-        if self._seq[idx].load() != head:
+        if self._seq.load(idx) != head:
+            self.stats.atomic_ops += 3
             self.stats.full_producer_polls += 1
             return False
         self._cells[idx] = payload
-        self._seq[idx].store(head + 1)  # DD bit: visible to consumers
+        self._seq.store(idx, head + 1)  # DD stamp: visible to consumers
+        ops = 4
+        if self.packed:
+            ops += self._dd.set_range(idx, 1)  # DD bit for word-scan claims
         self._head.store(head + 1)
+        self.stats.atomic_ops += ops + 1
         self.stats.produced += 1
         return True
 
     def produce_batch(self, payloads: Sequence[Any]) -> int:
-        n = 0
-        for p in payloads:
-            if not self.produce(p):
-                break
-            n += 1
+        """Fill up to ``len(payloads)`` slots; returns the accepted prefix.
+
+        On the packed plane this is one burst: all cells written, the
+        epoch stamps published under one fence, the DD word(s) OR'd in,
+        then a single HEAD store — the descriptor-burst + doorbell of a
+        real NIC, O(n/64) RMWs instead of O(n).
+        """
+        if not self.packed:
+            n = 0
+            for p in payloads:
+                if not self.produce(p):
+                    break
+                n += 1
+            return n
+        head = self._head.load()
+        tail = self._tail.load()
+        n = min(len(payloads), self.size - (head - tail))
+        if n <= 0:
+            self.stats.atomic_ops += 2
+            self.stats.full_producer_polls += 1
+            return 0
+        # Credit implies recycled: try_release() restamps _seq and clears
+        # the bitmaps *before* publishing the new TAIL, so any ticket
+        # below tail + size has a clean, restamped slot.
+        for k in range(n):
+            self._cells[(head + k) & self.mask] = payloads[k]
+        self._seq.store_many(
+            ((head + k) & self.mask, head + k + 1) for k in range(n)
+        )
+        ops = 3 + self._dd.set_range(head & self.mask, n)
+        self._head.store(head + n)  # the one doorbell write
+        self.stats.atomic_ops += ops + 1
+        self.stats.produced += n
+        self.stats.batch_publishes += 1
         return n
 
     # ------------------------------------------------------------------
     # consumer side (COREC workers)
     # ------------------------------------------------------------------
     def _ready(self, ticket: int) -> bool:
-        """DD-bit check, epoch-safe: slot is filled *for this ticket*."""
-        return self._seq[ticket & self.mask].load() == ticket + 1
+        """DD-stamp check, epoch-safe: slot is filled *for this ticket*."""
+        return self._seq.load(ticket & self.mask) == ticket + 1
 
     def claim(self, max_batch: int = 32) -> Optional[Claim]:
         """Listing 2 lines 8-31: scan DD bits, CAS the ticket, copy out.
@@ -153,17 +229,64 @@ class CorecRing:
         retry means another consumer made progress (lock-freedom), and the
         loop exits as soon as the queue looks empty.
         """
+        if self.packed:
+            return self._claim_packed(max_batch)
+        return self._claim_peritem(max_batch)
+
+    def _claim_peritem(self, max_batch: int) -> Optional[Claim]:
+        """Reference path: one atomic _seq load per DD scan step."""
         while True:
             start = self._claim_head.load()
+            ops = 1
             n = 0
             while n < max_batch and self._ready(start + n):
                 n += 1
+                ops += 1
+            ops += 1  # the failing (or max_batch-bounded) scan load
             if n == 0:
+                self.stats.atomic_ops += ops
                 self.stats.empty_polls += 1
                 return None
-            if self._claim_head.compare_and_swap(start, start + n):
+            won = self._claim_head.compare_and_swap(start, start + n)
+            self.stats.atomic_ops += ops + 1
+            if won:
                 break
             self.stats.cas_failures += 1
+        return self._copy_out(start, n)
+
+    def _claim_packed(self, max_batch: int) -> Optional[Claim]:
+        """Fast path: ready-run length from DD words, O(size/64) loads.
+
+        ``head`` is loaded after ``claim_head`` and clamps the scan so a
+        stale DD bit from an unreleased previous-epoch ticket can never be
+        claimed (see module docstring).
+        """
+        while True:
+            start = self._claim_head.load()
+            head = self._head.load()
+            ops = 2
+            want = min(max_batch, head - start)
+            if want <= 0:
+                self.stats.atomic_ops += ops
+                self.stats.empty_polls += 1
+                return None
+            n, w = self._dd.run_of_ones(start & self.mask, want)
+            ops += w
+            if n == 0:
+                # Stale view: a peer claimed and released [start, ...) between
+                # our claim_head load and the word scan.  Retry with fresh
+                # cursors — the peer's progress is what failed us.
+                self.stats.atomic_ops += ops
+                self.stats.cas_failures += 1
+                continue
+            won = self._claim_head.compare_and_swap(start, start + n)
+            self.stats.atomic_ops += ops + 1
+            if won:
+                break
+            self.stats.cas_failures += 1
+        return self._copy_out(start, n)
+
+    def _copy_out(self, start: int, n: int) -> Claim:
         # Race won: [start, start+n) is exclusively ours. Move payloads out
         # (descriptor copy + replacement with an empty buffer).
         payloads = []
@@ -182,14 +305,9 @@ class CorecRing:
         cannot be re-claimed before its bit is cleared by a release (the
         producer has no credit for it until TAIL moves past it).
         """
-        t = claim.start
-        while t < claim.end:
-            word = (t & self.mask) // _WORD_BITS
-            bit0 = (t & self.mask) % _WORD_BITS
-            span = min(claim.end - t, _WORD_BITS - bit0)
-            bits = ((1 << span) - 1) << bit0
-            self._done[word].fetch_or(bits)
-            t += span
+        self.stats.atomic_ops += self._done.set_range(
+            claim.start & self.mask, claim.end - claim.start
+        )
 
     def try_release(self) -> int:
         """Listing 2 lines 35-42: trylock, free the contiguous done-prefix.
@@ -201,32 +319,64 @@ class CorecRing:
             self.stats.trylock_failures += 1
             return 0
         try:
-            tail = self._tail.load()
-            limit = self._claim_head.load()  # nothing beyond has a bit set
-            freed = 0
-            t = tail
-            while t < limit:
-                idx = t & self.mask
-                word, bit = idx // _WORD_BITS, idx % _WORD_BITS
-                if not (self._done[word].load() >> bit) & 1:
-                    break
-                t += 1
-                freed += 1
-            if freed:
-                # Clear bits and recycle slot seq for the next epoch before
-                # publishing the new TAIL (paper line 39 before line 41;
-                # order matters: once TAIL moves the producer may refill).
-                for u in range(tail, t):
-                    idx = u & self.mask
-                    word, bit = idx // _WORD_BITS, idx % _WORD_BITS
-                    self._done[word].fetch_and(~(1 << bit) & (2**64 - 1))
-                    self._seq[idx].store(u + self.size)
-                self._tail.store(t)
-                self.stats.releases += 1
-                self.stats.released_items += freed
-            return freed
+            if self.packed:
+                return self._release_packed()
+            return self._release_peritem()
         finally:
             self._tail_lock.release()
+
+    def _release_peritem(self) -> int:
+        """Reference path: one load per scanned bit, one RMW per freed bit."""
+        tail = self._tail.load()
+        limit = self._claim_head.load()  # nothing beyond has a bit set
+        ops = 3  # + the trylock
+        freed = 0
+        t = tail
+        while t < limit:
+            if not self._done.test(t & self.mask):
+                ops += 1
+                break
+            ops += 1
+            t += 1
+            freed += 1
+        if freed:
+            # Clear bits and recycle slot seq for the next epoch before
+            # publishing the new TAIL (paper line 39 before line 41;
+            # order matters: once TAIL moves the producer may refill).
+            for u in range(tail, t):
+                idx = u & self.mask
+                self._done.clear_bit(idx)
+                self._seq.store(idx, u + self.size)
+                ops += 2
+            self._tail.store(t)
+            ops += 1
+            self.stats.releases += 1
+            self.stats.released_items += freed
+        self.stats.atomic_ops += ops
+        return freed
+
+    def _release_packed(self) -> int:
+        """Fast path: trailing-ones popcount on READ_DONE words, then one
+        RMW per word span to clear/recycle and a single TAIL store."""
+        tail = self._tail.load()
+        limit = self._claim_head.load()  # nothing beyond has a bit set
+        ops = 3  # + the trylock
+        freed, w = self._done.run_of_ones(tail & self.mask, limit - tail)
+        ops += w
+        if freed:
+            # Word-span clear of READ_DONE and DD, vectorized _seq restamp
+            # (one fenced batch), all before the TAIL publish.
+            ops += self._done.clear_range(tail & self.mask, freed)
+            ops += self._dd.clear_range(tail & self.mask, freed)
+            self._seq.store_many(
+                (u & self.mask, u + self.size) for u in range(tail, tail + freed)
+            )
+            self._tail.store(tail + freed)
+            ops += 2
+            self.stats.releases += 1
+            self.stats.released_items += freed
+        self.stats.atomic_ops += ops
+        return freed
 
     # ------------------------------------------------------------------
     # observers

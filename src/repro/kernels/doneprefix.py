@@ -3,14 +3,28 @@
 ``read_batch_done`` (Listing 2 line 37) computes how many *contiguous*
 completed slots start at TAIL; only that prefix may be returned to the
 producer.  The serving engine keeps a device-resident READ_DONE mask for
-its decode slot ring (one bool per slot) and asks this kernel for the
+its decode slot ring(s) (one bool per slot) and asks this kernel for the
 releasable prefix each step, so slot recycling is computed on-TPU without
 a host round-trip (host sync is the TPU analogue of the store-buffer
 interference the paper's RMW instructions bypass).
 
-Single-block kernel: the mask (<= a few thousand slots) fits one VMEM
-tile; the rotation by TAIL is done with an index comparison instead of a
-gather (TPU-friendly), and the contiguous run length is a masked min.
+Two entry points over one kernel:
+
+* ``done_prefix_pallas`` — one ``[n]`` mask.  The mask axis is tiled over
+  a multi-block grid (``block_n`` slots per block) so masks far larger
+  than one VMEM tile still lower; blocks accumulate a running min into
+  the single output cell (sequential TPU grid), and the final block
+  clamps by ``limit``.
+* ``done_prefix_batch_pallas`` — ``[R, n]`` masks with per-ring ``start``
+  /``limit`` vectors: the releasable prefix of *all* R decode slot rings
+  in ONE ``pallas_call`` (grid ``(R, n/block_n)``), which is how the
+  serving engine releases every lane per step with a single kernel
+  launch instead of R.
+
+The rotation by ``start`` is done with an index comparison instead of a
+gather (TPU-friendly), and the contiguous run length is a masked min:
+``off`` is each slot's distance from ``start`` in ring order, and the
+smallest not-done ``off`` *is* the run length.
 """
 
 from __future__ import annotations
@@ -22,40 +36,72 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["done_prefix_pallas"]
+__all__ = ["done_prefix_pallas", "done_prefix_batch_pallas"]
+
+_DEFAULT_BLOCK = 512
 
 
-def _done_prefix_kernel(se_ref, done_ref, out_ref, *, n: int):
-    start = se_ref[0]
-    limit = se_ref[1]
-    d = done_ref[...].astype(jnp.int32)  # [1, n]
-    idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+def _done_prefix_kernel(se_ref, done_ref, out_ref, *, n: int, bn: int):
+    r = pl.program_id(0)
+    i = pl.program_id(1)
+    start = se_ref[0, r]
+    limit = se_ref[1, r]
+    d = done_ref[...].astype(jnp.int32)  # [1, bn] tile of ring r
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1) + i * bn
     # offset of each slot from start, in ring order
     off = jnp.where(idx >= start, idx - start, idx + n - start)
-    # first not-done offset == run length (min over not-done slots)
-    first_gap = jnp.min(jnp.where(d == 0, off, n))
-    out_ref[0, 0] = jnp.minimum(first_gap, limit)
+    # first not-done offset == run length; padded lanes (idx >= n) and
+    # done lanes impose no constraint
+    local = jnp.min(jnp.where((d == 0) & (idx < n), off, n))
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = jnp.int32(n)
+
+    cur = jnp.minimum(out_ref[0, 0], local)
+    is_last = i == pl.num_programs(1) - 1
+    out_ref[0, 0] = jnp.where(is_last, jnp.minimum(cur, limit), cur)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def done_prefix_batch_pallas(
+    done: jax.Array,  # [R, n] bool — READ_DONE, one row per slot ring
+    start: jax.Array,  # [R] int32 — TAIL slot index per ring
+    limit: jax.Array,  # [R] int32 — cap per ring (claim_head - tail)
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:  # [R] int32
+    R, n = done.shape
+    bn = min(n, block_n or _DEFAULT_BLOCK)
+    se = jnp.stack([start.astype(jnp.int32), limit.astype(jnp.int32)])  # [2, R]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R, pl.cdiv(n, bn)),
+        in_specs=[pl.BlockSpec((1, bn), lambda r, i, *_: (r, i))],
+        out_specs=pl.BlockSpec((1, 1), lambda r, i, *_: (r, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_done_prefix_kernel, n=n, bn=bn),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        interpret=interpret,
+    )(se, done)
+    return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def done_prefix_pallas(
     done: jax.Array,  # [n] bool — READ_DONE
     start: jax.Array,  # scalar int32 — TAIL slot index
     limit: jax.Array,  # scalar int32 — at most this many (claim_head - tail)
+    block_n: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    n = done.shape[0]
-    se = jnp.stack([start.astype(jnp.int32), limit.astype(jnp.int32)])
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(1,),
-        in_specs=[pl.BlockSpec((1, n), lambda i, *_: (0, 0))],
-        out_specs=pl.BlockSpec((1, 1), lambda i, *_: (0, 0)),
-    )
-    out = pl.pallas_call(
-        functools.partial(_done_prefix_kernel, n=n),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    out = done_prefix_batch_pallas(
+        done[None, :],
+        jnp.atleast_1d(start),
+        jnp.atleast_1d(limit),
+        block_n=block_n,
         interpret=interpret,
-    )(se, done.reshape(1, n))
-    return out[0, 0]
+    )
+    return out[0]

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention_pallas
-from .doneprefix import done_prefix_pallas
+from .doneprefix import done_prefix_batch_pallas, done_prefix_pallas
 from .flash_attention import flash_attention_pallas
 from .rmsnorm import rmsnorm_pallas
 from .rwkv6 import rwkv6_pallas
@@ -39,6 +39,7 @@ __all__ = [
     "ssd",
     "ssd_step",
     "done_prefix",
+    "done_prefix_batch",
     "on_tpu",
 ]
 
@@ -290,9 +291,27 @@ def done_prefix(
     start: jax.Array,
     limit: jax.Array,
     impl: str = "auto",
+    block_n: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     impl = _resolve(impl)
     if impl in ("naive", "xla"):
         return ref.done_prefix_ref(done, start, limit)
-    return done_prefix_pallas(done, start, limit, interpret=interpret)
+    return done_prefix_pallas(done, start, limit, block_n=block_n, interpret=interpret)
+
+
+def done_prefix_batch(
+    done: jax.Array,  # [R, n] — one READ_DONE row per slot ring
+    start: jax.Array,  # [R]
+    limit: jax.Array,  # [R]
+    impl: str = "auto",
+    block_n: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Releasable prefixes of R slot rings in one kernel launch."""
+    impl = _resolve(impl)
+    if impl in ("naive", "xla"):
+        return ref.done_prefix_batch_ref(done, start, limit)
+    return done_prefix_batch_pallas(
+        done, start, limit, block_n=block_n, interpret=interpret
+    )

@@ -26,6 +26,7 @@ __all__ = [
     "ssd_scan_ref",
     "ssd_chunk_ref",
     "done_prefix_ref",
+    "done_prefix_batch_ref",
 ]
 
 
@@ -347,3 +348,11 @@ def done_prefix_ref(done: jax.Array, start: jax.Array, limit: jax.Array) -> jax.
     idx = (start + jnp.arange(n)) % n
     run = jnp.cumprod(done[idx].astype(jnp.int32))
     return jnp.minimum(jnp.sum(run), limit).astype(jnp.int32)
+
+
+def done_prefix_batch_ref(
+    done: jax.Array, start: jax.Array, limit: jax.Array
+) -> jax.Array:
+    """Row-wise ``done_prefix_ref`` over ``[R, n]`` masks with per-row
+    start/limit — the oracle for the multi-ring Pallas variant."""
+    return jax.vmap(done_prefix_ref)(done, start, limit)

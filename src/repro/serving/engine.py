@@ -8,15 +8,20 @@ Dataflow (the paper's Rx pipeline, serving edition):
       decode slots, steps ALL active slots in one batched ``decode_step``,
       retires finished sequences.
 
-Decode slots form a ring with the paper's producer-credit semantics:
-``head`` is the admission cursor, ``tail`` advances only over the
-*contiguous* prefix of finished slots (computed on-device by
-kernels/doneprefix — the TAIL-register write), so admission order is
-checkpointable exactly like the NIC's credit scheme.  A straggling
-sequence delays only its own slot's reuse, never its peers' decoding —
-section 3.4.4's corner case, verified in tests/test_serving.py.
-``contiguous_release=False`` gives the free-list alternative for A/B
-comparison (more capacity under stragglers, unordered admission).
+Decode slots form ``n_lanes`` rings with the paper's producer-credit
+semantics (lane = a hardware Rx queue of the decode batch): each lane has
+an admission cursor ``head`` and a ``tail`` that advances only over the
+*contiguous* prefix of finished slots.  All lanes' releasable prefixes
+are computed on-device in ONE batched ``pallas_call``
+(kernels/doneprefix ``[R, n]`` variant — R TAIL-register writes from a
+single kernel launch), so slot recycling cost is independent of the lane
+count.  Admission order is checkpointable per lane exactly like the
+NIC's credit scheme.  A straggling sequence delays only its own lane's
+slot reuse, never any peer's decoding — section 3.4.4's corner case,
+verified in tests/test_serving.py; extra lanes bound the blast radius of
+a straggler to ``n_slots / n_lanes`` slots.  ``contiguous_release=False``
+gives the free-list alternative for A/B comparison (more capacity under
+stragglers, unordered admission).
 """
 
 from __future__ import annotations
@@ -42,7 +47,7 @@ __all__ = ["EngineConfig", "InferenceEngine"]
 
 @dataclass
 class EngineConfig:
-    n_slots: int = 8  # decode slot-ring size
+    n_slots: int = 8  # decode slots (total, across all lanes)
     max_seq: int = 64  # cache capacity per slot
     n_workers: int = 2  # ingestion (prefill) workers
     policy: str = "corec"  # 'corec' | 'rss'
@@ -50,6 +55,7 @@ class EngineConfig:
     eos_token: int = 1
     contiguous_release: bool = True  # paper's TAIL rule for slot reuse
     greedy: bool = True
+    n_lanes: int = 1  # decode slot rings; released in ONE batched kernel
 
 
 class InferenceEngine:
@@ -71,12 +77,18 @@ class InferenceEngine:
         self._decode = jax.jit(lambda p, c, t: self.model.decode_step(p, c, t))
         self._prefill = jax.jit(lambda p, b: self.model.prefill(p, b, max_seq=S))
 
-        # slot ring bookkeeping (host side)
+        # slot ring bookkeeping (host side): R lanes of B/R slots each;
+        # global slot id = lane * lane_slots + offset
+        if B % ecfg.n_lanes:
+            raise ValueError("n_slots must be divisible by n_lanes")
+        self.n_lanes = ecfg.n_lanes
+        self.lane_slots = B // ecfg.n_lanes
         self.slot_req: List[Optional[RequestResult]] = [None] * B
         self.slot_budget = np.zeros(B, np.int32)
-        self.done_mask = np.zeros(B, bool)  # READ_DONE bits for admitted slots
-        self.head = 0  # monotonic admission cursor
-        self.tail = 0  # monotonic release cursor
+        # READ_DONE bits for admitted slots, one row per lane
+        self.done_mask = np.zeros((self.n_lanes, self.lane_slots), bool)
+        self.lane_head = np.zeros(self.n_lanes, np.int64)  # admission cursors
+        self.lane_tail = np.zeros(self.n_lanes, np.int64)  # release cursors
         self._staged: List = []
         self._staged_lock = threading.Lock()
         self._stop = threading.Event()
@@ -121,30 +133,52 @@ class InferenceEngine:
     # ------------------------------------------------------------------
     # slot ring: release (TAIL advance) + admit (HEAD advance)
     # ------------------------------------------------------------------
+    @property
+    def head(self) -> int:
+        """Total admissions across lanes (monotonic)."""
+        return int(self.lane_head.sum())
+
+    @property
+    def tail(self) -> int:
+        """Total releases across lanes (monotonic)."""
+        return int(self.lane_tail.sum())
+
     def _release(self):
-        """Advance tail over the contiguous done prefix (paper line 37-41)."""
-        B = self.ecfg.n_slots
-        in_flight = self.head - self.tail
-        if self.ecfg.contiguous_release and in_flight:
-            run = int(ops.done_prefix(
-                jnp.asarray(self.done_mask), jnp.int32(self.tail % B),
-                jnp.int32(in_flight), impl="pallas", interpret=not ops.on_tpu(),
-            ))
-        else:
-            run = 0  # free-list mode: no tail semantics
-        if run:
-            for i in range(run):
-                self.done_mask[(self.tail + i) % B] = False
-            self.tail += run
-            self.release_events.append(run)
+        """Advance every lane's tail over its contiguous done prefix
+        (paper line 37-41) — ONE batched kernel launch for all R lanes."""
+        if not self.ecfg.contiguous_release:
+            return  # free-list mode: no tail semantics
+        n = self.lane_slots
+        in_flight = self.lane_head - self.lane_tail
+        if not in_flight.any():
+            return
+        runs = np.asarray(ops.done_prefix_batch(
+            jnp.asarray(self.done_mask),
+            jnp.asarray((self.lane_tail % n).astype(np.int32)),
+            jnp.asarray(in_flight.astype(np.int32)),
+            impl="pallas", interpret=not ops.on_tpu(),
+        ))
+        for r in range(self.n_lanes):
+            run = int(runs[r])
+            if run:
+                for i in range(run):
+                    self.done_mask[r, (self.lane_tail[r] + i) % n] = False
+                self.lane_tail[r] += run
+                self.release_events.append(run)
 
     def _capacity_slots(self) -> List[int]:
-        B = self.ecfg.n_slots
         if self.ecfg.contiguous_release:
             self._release()
-            free = B - (self.head - self.tail)
-            return [(self.head + i) % B for i in range(free)]
-        return [i for i in range(B) if self.slot_req[i] is None]
+            n = self.lane_slots
+            slots = []
+            lane_free = n - (self.lane_head - self.lane_tail)
+            # round-robin over lanes so admissions spread the straggler risk
+            for i in range(n):
+                for r in range(self.n_lanes):
+                    if i < lane_free[r]:
+                        slots.append(r * n + int((self.lane_head[r] + i) % n))
+            return slots
+        return [i for i in range(self.ecfg.n_slots) if self.slot_req[i] is None]
 
     def _insert(self, slot: int, cache1, rr: RequestResult, budget: int):
         B = self.ecfg.n_slots
@@ -160,9 +194,10 @@ class InferenceEngine:
         self.cache = jax.tree_util.tree_map(put, self.cache, cache1)
         self.slot_req[slot] = rr
         self.slot_budget[slot] = budget
-        self.done_mask[slot] = False
+        lane, off = slot // self.lane_slots, slot % self.lane_slots
+        self.done_mask[lane, off] = False
         if self.ecfg.contiguous_release:
-            self.head += 1
+            self.lane_head[lane] += 1
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], rate: Optional[float] = None,
@@ -177,12 +212,29 @@ class InferenceEngine:
 
         def producer():
             interval = 1.0 / rate if rate else 0.0
-            for req in requests:
-                req.t_arrival = time.perf_counter()
-                while not self.sched.submit(req):
-                    time.sleep(0.0005)
-                if interval:
+            if interval:
+                for req in requests:
+                    req.t_arrival = time.perf_counter()
+                    while not self.sched.submit(req):
+                        time.sleep(0.0005)
                     time.sleep(interval)
+            else:
+                # burst mode: one descriptor burst + doorbell per chunk via
+                # the schedulers' batch surface (prefix-retry on full ring)
+                i = 0
+                stamped = 0  # t_arrival once, at FIRST offer: admission
+                # stalls must stay inside the measured request latency
+                while i < len(requests):
+                    chunk = requests[i : i + 64]
+                    if i + len(chunk) > stamped:
+                        now = time.perf_counter()
+                        for req in requests[stamped : i + len(chunk)]:
+                            req.t_arrival = now
+                        stamped = i + len(chunk)
+                    took = self.sched.submit_batch(chunk)
+                    i += took
+                    if took == 0:
+                        time.sleep(0.0005)
 
         prod = threading.Thread(target=producer, daemon=True)
         prod.start()
@@ -218,7 +270,7 @@ class InferenceEngine:
                     rr.t_done = now
                     self.results.append(rr)
                     self.slot_req[i] = None
-                    self.done_mask[i] = True
+                    self.done_mask[i // self.lane_slots, i % self.lane_slots] = True
         self._stop.set()
         self._release()  # hand back the trailing done-prefix (drain)
         for t in threads:

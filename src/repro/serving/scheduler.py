@@ -34,6 +34,11 @@ class CorecScheduler:
     def submit(self, req: Request) -> bool:
         return self.q.produce(req, req.session)
 
+    def submit_batch(self, reqs: List[Request]) -> int:
+        """Burst submission through the ring's batch surface (one DD-word
+        publish + one doorbell); returns the accepted prefix length."""
+        return self.q.produce_batch(reqs, [r.session for r in reqs])
+
     def claim(self, worker: int, max_batch: int = 8) -> Optional[Claim]:
         return self.q.claim(worker, max_batch)
 
@@ -57,6 +62,11 @@ class RssScheduler:
 
     def submit(self, req: Request) -> bool:
         return self.q.produce(req, req.session)
+
+    def submit_batch(self, reqs: List[Request]) -> int:
+        """Prefix-semantics burst across the per-worker rings (RSS runs
+        are bursted per ring; stops at the first full ring)."""
+        return self.q.produce_batch(reqs, [r.session for r in reqs])
 
     def claim(self, worker: int, max_batch: int = 8) -> Optional[Claim]:
         return self.q.claim(worker, max_batch)

@@ -200,3 +200,92 @@ def test_done_prefix_sweep(n):
         got = ops.done_prefix(done, start, limit, impl="pallas", interpret=True)
         want = ref.done_prefix_ref(done, start, limit)
         assert int(got) == int(want)
+
+
+def _done_prefix_oracle(done, start, limit):
+    """Plain-python contiguous-run oracle (wraps mod n, clamps at limit)."""
+    n = len(done)
+    run = 0
+    while run < min(limit, n) and done[(start + run) % n]:
+        run += 1
+    return min(run, limit)
+
+
+@pytest.mark.parametrize("n,block_n", [(64, 16), (128, 32), (256, 64), (512, 128)])
+def test_done_prefix_multiblock_sweep(n, block_n):
+    """Multi-block grid agrees with the oracle across random masks."""
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        done = rng.random(n) < 0.7
+        start = int(rng.integers(0, n))
+        limit = int(rng.integers(0, n + 1))
+        got = ops.done_prefix(
+            jnp.asarray(done), jnp.int32(start), jnp.int32(limit),
+            impl="pallas", block_n=block_n, interpret=True,
+        )
+        assert int(got) == _done_prefix_oracle(done, start, limit)
+
+
+@pytest.mark.parametrize("n", [64, 128])
+def test_done_prefix_edge_cases(n):
+    """Wrap/rotation edges: start near n-1, all-done, none-done, clamp."""
+    all_done = np.ones(n, bool)
+    none_done = np.zeros(n, bool)
+    for block_n in (None, n // 4):
+        for start in (0, 1, n - 1):
+            for done, limit, want in (
+                (all_done, n, n),            # full ring done
+                (all_done, 5, 5),            # limit clamp
+                (none_done, n, 0),           # nothing done
+            ):
+                got = ops.done_prefix(
+                    jnp.asarray(done), jnp.int32(start), jnp.int32(limit),
+                    impl="pallas", block_n=block_n, interpret=True,
+                )
+                assert int(got) == want
+        # run that wraps across the word/block boundary at n-1 -> 0
+        done = np.zeros(n, bool)
+        done[n - 1] = done[0] = done[1] = True
+        got = ops.done_prefix(
+            jnp.asarray(done), jnp.int32(n - 1), jnp.int32(n),
+            impl="pallas", block_n=block_n, interpret=True,
+        )
+        assert int(got) == 3
+
+
+@pytest.mark.parametrize("R,n,block_n", [(1, 64, None), (4, 128, 32), (7, 96, 40)])
+def test_done_prefix_batch_vs_oracle(R, n, block_n):
+    """[R, n] multi-ring variant: one pallas_call, per-row start/limit."""
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        done = rng.random((R, n)) < 0.6
+        starts = rng.integers(0, n, R).astype(np.int32)
+        limits = rng.integers(0, n + 1, R).astype(np.int32)
+        got = np.asarray(ops.done_prefix_batch(
+            jnp.asarray(done), jnp.asarray(starts), jnp.asarray(limits),
+            impl="pallas", block_n=block_n, interpret=True,
+        ))
+        want = np.array(
+            [_done_prefix_oracle(done[r], starts[r], limits[r]) for r in range(R)]
+        )
+        np.testing.assert_array_equal(got, want)
+        xla = np.asarray(ops.done_prefix_batch(
+            jnp.asarray(done), jnp.asarray(starts), jnp.asarray(limits), impl="xla",
+        ))
+        np.testing.assert_array_equal(xla, want)
+
+
+def test_done_prefix_batch_edge_rows():
+    """Per-row edges in one batch: all-done, none-done, wrap at n-1, clamp."""
+    n = 64
+    done = np.zeros((4, n), bool)
+    done[0, :] = True                     # all done
+    done[2, n - 1] = done[2, 0] = True    # wrapping run of 2 from n-1
+    done[3, :10] = True                   # clamped by limit
+    starts = np.array([3, 0, n - 1, 0], np.int32)
+    limits = np.array([n, n, n, 4], np.int32)
+    got = np.asarray(ops.done_prefix_batch(
+        jnp.asarray(done), jnp.asarray(starts), jnp.asarray(limits),
+        impl="pallas", interpret=True,
+    ))
+    np.testing.assert_array_equal(got, [n, 0, 2, 4])

@@ -6,18 +6,33 @@ the safety invariants asserted after EVERY step:
   * cursor order tail <= claim_head <= head, credit bound,
   * claims disjoint, payloads delivered exactly once, no phantoms,
   * tail only covers claimed-and-completed tickets.
+Both data planes are model-checked: the per-item reference path and the
+word-packed fast path (producer_packed/consumer_packed), plus
+observational-equivalence tests asserting the two planes agree — same
+claim intervals, same released set, tail only over the contiguous
+done-prefix — sequentially (exact) and under threaded schedules
+(exactly-once + disjoint covering intervals + full release).
 Plus threaded end-to-end runs of the real ring for liveness/accounting.
 """
 
 from __future__ import annotations
 
+import random
 import threading
+import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import CorecRing
-from repro.core.protocol_sim import SimState, consumer, producer, run_schedule
+from repro.core.protocol_sim import (
+    SimState,
+    consumer,
+    consumer_packed,
+    producer,
+    producer_packed,
+    run_schedule,
+)
 
 
 @settings(max_examples=200, deadline=None)
@@ -49,6 +64,198 @@ def test_random_long_schedules_drain(seed):
     run_schedule(st_, actors, schedule)
     # with a long fair-ish schedule everything produced must be delivered
     assert sorted(st_.delivered) == sorted(st_.produced_payloads)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    schedule=st.lists(st.integers(0, 3), min_size=50, max_size=600),
+    n_payloads=st.integers(1, 100),
+    max_batch=st.integers(1, 8),
+    burst=st.integers(1, 64),
+)
+def test_packed_interleavings_preserve_invariants(
+    schedule, n_payloads, max_batch, burst
+):
+    """The word-packed plane under arbitrary schedules: every DD-word
+    snapshot / word-span RMW / doorbell is one step, invariants after
+    each (including the head-clamped epoch-safety of the packed claim)."""
+    st_ = SimState(64)
+    actors = [producer_packed(st_, list(range(n_payloads)), burst=burst)] + [
+        consumer_packed(st_, wid, max_batch=max_batch, rounds=1000)
+        for wid in range(3)
+    ]
+    run_schedule(st_, actors, schedule)  # invariants checked inside
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_packed_random_long_schedules_drain(seed):
+    rnd = random.Random(seed)
+    st_ = SimState(64)
+    n = 200
+    actors = [producer_packed(st_, list(range(n)), burst=16)] + [
+        consumer_packed(st_, wid, max_batch=4, rounds=10_000) for wid in range(4)
+    ]
+    schedule = [rnd.randrange(len(actors)) for _ in range(40_000)]
+    run_schedule(st_, actors, schedule)
+    assert sorted(st_.delivered) == sorted(st_.produced_payloads)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_packed_sim_invariants_seeded(seed):
+    """Deterministic fallback for hosts without hypothesis: long random
+    schedules over the packed actors, invariants after every step."""
+    rnd = random.Random(seed)
+    st_ = SimState(64)
+    n = rnd.randrange(1, 150)
+    actors = [
+        producer_packed(st_, list(range(n)), burst=rnd.choice([1, 3, 16, 64]))
+    ] + [
+        consumer_packed(st_, wid, max_batch=rnd.choice([1, 4, 32]), rounds=10_000)
+        for wid in range(3)
+    ]
+    schedule = [rnd.randrange(len(actors)) for _ in range(30_000)]
+    run_schedule(st_, actors, schedule)
+    assert sorted(st_.delivered) == sorted(set(st_.delivered))
+
+
+def _drive_sequential(ring: CorecRing, ops):
+    """Apply a deterministic op sequence; return full observable trace."""
+    trace = []
+    held = []  # claims not yet completed (to exercise gaps)
+    for op, arg in ops:
+        if op == "produce":
+            trace.append(("produce", ring.produce_batch(list(arg))))
+        elif op == "claim":
+            c = ring.claim(max_batch=arg)
+            trace.append(
+                ("claim", None if c is None else (c.start, c.end, list(c.payloads)))
+            )
+            if c is not None:
+                held.append(c)
+        elif op == "complete":
+            # complete the oldest held claim (arg picks offset for variety)
+            if held:
+                c = held.pop(arg % len(held))
+                ring.complete(c)
+                trace.append(("complete", (c.start, c.end)))
+        elif op == "release":
+            trace.append(("release", ring.try_release()))
+        trace.append(("cursors", ring.head, ring.claim_head, ring.tail))
+    # drain: complete everything, release the rest
+    for c in held:
+        ring.complete(c)
+    while True:
+        c = ring.claim(max_batch=8)
+        if c is None:
+            break
+        ring.complete(c)
+        trace.append(("drain_claim", c.start, c.end, list(c.payloads)))
+    while ring.try_release():
+        pass
+    trace.append(("final", ring.head, ring.claim_head, ring.tail))
+    return trace
+
+
+def _check_equivalent_sequential(seed, size):
+    """Identical op sequences give IDENTICAL observables on both planes:
+    same claim intervals and payloads, same released counts, same cursor
+    trajectories — the word-packed paths are a pure optimisation."""
+    rnd = random.Random(seed)
+    ops = []
+    nxt = 0
+    for _ in range(rnd.randrange(5, 60)):
+        k = rnd.randrange(4)
+        if k == 0:
+            n = rnd.randrange(1, 2 * size)
+            ops.append(("produce", range(nxt, nxt + n)))
+            nxt += n
+        elif k == 1:
+            ops.append(("claim", rnd.randrange(1, size + 1)))
+        elif k == 2:
+            ops.append(("complete", rnd.randrange(8)))
+        else:
+            ops.append(("release", None))
+    t_packed = _drive_sequential(CorecRing(size, packed=True), ops)
+    t_peritem = _drive_sequential(CorecRing(size, packed=False), ops)
+    assert t_packed == t_peritem
+
+
+@settings(max_examples=150, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), size=st.sampled_from([8, 64, 128]))
+def test_packed_observationally_equivalent_sequential(seed, size):
+    _check_equivalent_sequential(seed, size)
+
+
+@pytest.mark.parametrize("size", [8, 64, 128])
+@pytest.mark.parametrize("seed", range(15))
+def test_packed_observationally_equivalent_sequential_seeded(seed, size):
+    """Deterministic fallback coverage for hosts without hypothesis."""
+    _check_equivalent_sequential(seed, size)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_packed_observationally_equivalent_threaded(seed):
+    """Same randomized multi-threaded workload on both planes: exactly-once
+    delivery, claim intervals disjoint and covering [0, N), the full set
+    released, and tail == head == N after the drain."""
+    rnd = random.Random(seed)
+    N = 4000
+    batches = []
+    i = 0
+    while i < N:
+        n = rnd.randrange(1, 48)
+        batches.append(list(range(i, min(i + n, N))))
+        i += n
+    results = {}
+    for packed in (True, False):
+        ring = CorecRing(128, packed=packed)
+        delivered = []
+        intervals = []
+        lock = threading.Lock()
+        stop = threading.Event()
+
+        def worker(ring=ring, delivered=delivered, intervals=intervals,
+                   lock=lock, stop=stop):
+            while not stop.is_set():
+                c = ring.claim(max_batch=16)
+                if c is None:
+                    ring.try_release()
+                    continue
+                ring.complete(c)
+                ring.try_release()
+                with lock:
+                    delivered.extend(c.payloads)
+                    intervals.append((c.start, c.end))
+
+        threads = [threading.Thread(target=worker, daemon=True) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for b in batches:
+            done = 0
+            while done < len(b):
+                done += ring.produce_batch(b[done:])
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            with lock:
+                if len(delivered) == N:
+                    break
+            time.sleep(0.001)
+        stop.set()
+        for t in threads:
+            t.join(timeout=2)
+        while ring.try_release():
+            pass
+        # observational contract, identical for both planes
+        assert sorted(delivered) == list(range(N))  # exactly once, no loss
+        ivs = sorted(intervals)
+        assert ivs[0][0] == 0 and ivs[-1][1] == N
+        for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+            assert e1 == s2  # disjoint AND covering
+        assert ring.tail == ring.head == N  # full contiguous release
+        assert ring.stats.released_items == N
+        results[packed] = (sorted(delivered), ring.tail)
+    assert results[True] == results[False]
 
 
 def test_sequential_consumer_matches_real_ring():
