@@ -10,6 +10,17 @@ from typing import Callable, List
 RESULTS = Path(__file__).resolve().parent / "results"
 
 
+def use_quick_results_dir() -> Path:
+    """Redirect ``save_json`` to results/quick/ for smoke passes.
+
+    ``run.py --quick`` shrinks every benchmark's size, so its JSONs must
+    never overwrite the tracked full-run artifacts under results/.
+    """
+    global RESULTS
+    RESULTS = Path(__file__).resolve().parent / "results" / "quick"
+    return RESULTS
+
+
 def timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:
     """Median wall-time of fn() in microseconds."""
     for _ in range(warmup):

@@ -62,11 +62,11 @@ def _measure(packed: bool, batch: int, n_items: int = N_ITEMS) -> dict:
     }
 
 
-def run() -> dict:
+def run(n_items: int = N_ITEMS) -> dict:
     out = {"ring_size": RING_SIZE, "configs": []}
     for batch in BATCHES:
-        peritem = _measure(packed=False, batch=batch)
-        packed = _measure(packed=True, batch=batch)
+        peritem = _measure(packed=False, batch=batch, n_items=n_items)
+        packed = _measure(packed=True, batch=batch, n_items=n_items)
         ops_ratio = peritem["atomic_ops_per_item"] / max(
             packed["atomic_ops_per_item"], 1e-12
         )

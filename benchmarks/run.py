@@ -4,18 +4,38 @@ Prints ``name,us_per_call,derived`` CSV lines (see common.emit) and stores
 full results under benchmarks/results/.  The dry-run/roofline cells are
 produced separately by ``python -m repro.launch.dryrun`` (512-device
 placeholder world); ``roofline.run`` here only aggregates their JSON.
+
+``--quick`` runs a smoke-test pass — shrunk packet counts / single rep
+for every DES + threaded benchmark, skipping the jax-heavy modules
+(kernels / serving / roofline) — and finishes in under a minute.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="shrunk sizes, skip jax-heavy modules; finishes in <1 min",
+    )
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        # Shrunk-size runs must never overwrite the tracked full-run
+        # artifacts under benchmarks/results/.
+        from .common import use_quick_results_dir
+
+        use_quick_results_dir()
+
     from . import (
         kernels_bench,
         latency_bench,
+        policy_sweep,
         queueing_bench,
         reorder_traces,
         reorder_udp,
@@ -26,25 +46,33 @@ def main() -> None:
         tcp_flows,
     )
 
+    # (module, full kwargs, quick kwargs or None to skip in --quick)
+    plan = [
+        (ring_ops_bench, {}, dict(n_items=4_096)),  # word-packed vs per-item ring
+        (queueing_bench, {}, dict(n_jobs=8_000)),  # Figs 3-4
+        (scalability, {}, dict(n_items=1_500, n_jobs=8_000)),  # Tables 2-3
+        (latency_bench, {}, dict(n_jobs=8_000)),  # Figs 5-6
+        (reorder_udp, {}, dict(n_packets=5_000)),  # Fig 7
+        (reorder_traces, {}, dict(n_packets=6_000)),  # Table 4
+        (tcp_flows, {}, dict(scale=30, nflows_list=(32,))),  # Table 5 + Figs 8-10
+        (policy_sweep, {}, dict(n_packets=8_000, n_tcp_flows=48)),  # registry sweep
+        (kernels_bench, {}, None),  # Pallas kernel analytics
+        (serving_bench, {}, None),  # framework-level COREC serving
+        (roofline, {}, None),  # dry-run aggregation (section Roofline)
+    ]
+
     print("name,us_per_call,derived")
     failures = []
-    for mod in (
-        ring_ops_bench,  # per-op cost: word-packed vs per-item ring
-        queueing_bench,  # Figs 3-4
-        scalability,  # Tables 2-3
-        latency_bench,  # Figs 5-6
-        reorder_udp,  # Fig 7
-        reorder_traces,  # Table 4
-        tcp_flows,  # Table 5 + Figs 8-10
-        kernels_bench,  # Pallas kernel analytics
-        serving_bench,  # framework-level COREC serving
-        roofline,  # dry-run aggregation (section Roofline)
-    ):
+    for mod, kwargs, quick_kwargs in plan:
+        if args.quick:
+            if quick_kwargs is None:
+                continue
+            kwargs = quick_kwargs
         try:
             if mod.__name__.endswith("roofline"):
                 mod.run_all_tags()
             else:
-                mod.run()
+                mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001
             failures.append((mod.__name__, e))
             traceback.print_exc()

@@ -38,6 +38,7 @@ def _ipsec(item) -> None:
 
 
 def _measure_threaded(policy: str, n_workers: int, work, n_items: int = 4000):
+    """Real threads through the registry-built queue (any policy name)."""
     q = make_queue(policy, n_workers, 1024)
     items = [Item(seqno=i, flow=i % 64) for i in range(n_items)]
     pool = WorkerPool(q, n_workers, work, max_batch=32)
@@ -54,15 +55,16 @@ def _measure_unit_cost(work, n: int = 20000) -> float:
     return (time.perf_counter() - t0) / n * 1e6  # us
 
 
-def run() -> dict:
+def run(n_items: int = 4000, n_jobs: int = 60_000) -> dict:
     out = {"threaded": {}, "model": {}}
     for nf_name, work in (("l3fwd", _l3fwd), ("ipsec", _ipsec)):
         svc_us = _measure_unit_cost(work)
         # 1) real threads (1-core box: expect flat scaling, no regression)
-        base = _measure_threaded("scaleout", 1, work)
+        base = _measure_threaded("scaleout", 1, work, n_items=n_items)
         rows = {"dpdk_1q": base}
         for k in (1, 2, 4):
-            rows[f"corec_{k}"] = _measure_threaded("corec", k, work)
+            rows[f"corec_{k}"] = _measure_threaded("corec", k, work,
+                                                   n_items=n_items)
         out["threaded"][nf_name] = rows
         # 2) simulated-time protocol model at measured costs (Tables 2-3)
         claim_us = 0.6  # measured CAS+scan cost per batch (threaded runs)
@@ -72,13 +74,13 @@ def run() -> dict:
         for k in (1, 2, 3, 4):
             r = simulate_protocol(
                 k, "corec", rate * k, svc_us, claim_us, cas_retry_cost=0.2,
-                batch=32, n_jobs=60_000, seed=5,
+                batch=32, n_jobs=n_jobs, seed=5,
             )
             # throughput at saturation ~ k / effective service
             tp = 1e6 / svc_us * k * min(1.0, r.util / 0.95)
             if base_tp is None:
                 so = simulate_protocol(1, "scaleout", rate, svc_us, claim_us,
-                                       batch=32, n_jobs=60_000, seed=5)
+                                       batch=32, n_jobs=n_jobs, seed=5)
                 base_tp = 1e6 / svc_us * min(1.0, so.util / 0.95)
                 model_rows["dpdk_1q_mpps"] = base_tp / 1e6
             model_rows[f"corec_{k}_mpps"] = tp / 1e6

@@ -19,7 +19,7 @@ def _fcts(res):
     return np.array([r.fct for r in res])
 
 
-def run(scale: int = 1) -> dict:
+def run(scale: int = 1, nflows_list=(64, 128)) -> dict:
     out = {}
 
     # --- Table 5: single huge flow, corec 1/2/4 workers ------------------
@@ -48,7 +48,7 @@ def run(scale: int = 1) -> dict:
 
     # --- Figs 8-10: medium/small/one-packet flows, corec vs scale-out ----
     for label, npkts in (("100KB", 69), ("10KB", 7), ("1KB", 1)):
-        for nflows in (64, 128):
+        for nflows in nflows_list:
             flows = [(i, npkts, i * 2.0) for i in range(nflows)]
             res = {}
             for pol in ("corec", "scaleout"):

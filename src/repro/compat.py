@@ -1,0 +1,54 @@
+"""JAX version-compat shims.
+
+The repo targets "current jax" across a drift window where several
+sharding entry points moved:
+
+* ``shard_map``: ``jax.experimental.shard_map.shard_map(check_rep=...)``
+  (<= 0.4.x) became ``jax.shard_map(check_vma=...)`` (the experimental
+  module is deprecated and later removed).
+* ``make_mesh``: ``jax.make_mesh`` appeared in 0.4.35; older versions
+  only have ``jax.sharding.Mesh`` over ``mesh_utils`` devices.
+
+All call sites (``optim/compress.py`` users, ``launch/mesh.py``,
+``train/trainer.py``, tests) route through here so a jax upgrade is a
+one-file fix.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+
+__all__ = ["shard_map", "make_mesh"]
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-portable ``shard_map``.
+
+    ``check_vma`` follows the new-API name; on old jax it is forwarded
+    as ``check_rep`` (same meaning: verify per-axis replication/varying
+    annotations, off by default here because the collectives in
+    ``optim/compress.py`` mix gathered and reduced outputs).
+    """
+    if hasattr(jax, "shard_map"):  # jax >= 0.6-ish: top-level API
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> Any:
+    """Version-portable ``jax.make_mesh``."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+    from jax.experimental import mesh_utils
+
+    devices = mesh_utils.create_device_mesh(tuple(shape))
+    return jax.sharding.Mesh(devices, tuple(axis_names))

@@ -1,22 +1,42 @@
 """COREC core: the paper's contribution (section 3) + its evaluation
 substrate (section 4) as reusable, framework-grade modules.
 
-Layout:
+Layout (see ROADMAP.md "Module map" for the full picture):
   atomics.py       RMW primitives (CAS / fetch_add / trylock) on CPython
   ring.py          CorecRing — the non-blocking single-queue protocol
-  baseline.py      ScaleOutDriver (RSS) and LockedSharedQueue baselines
-  dispatch.py      worker pools draining any queue policy
-  queueing.py      M/G/N vs N x M/G/1 discrete-event simulator (sec 3.2)
+  baseline.py      threaded queue drivers (RSS / locked / hybrid / ...)
+  dispatch.py      worker pools draining any registered queue policy
+  des.py           unified discrete-event core (event loop + worker plane)
+  policy.py        RxPolicy plugins + the registry both planes share
+  queueing.py      M/G/N vs N x M/G/1 scenario layer (sec 3.2)
+  forwarder.py     open-loop L3-forwarder scenario layer (sec 4.3.1)
+  tcp.py           TCP-over-forwarder scenario layer (sec 4.3.2)
   reorder.py       RFC 4737 reordering metrics (sec 4.3)
   traffic.py       UDP / MAWI-mix / flow traffic generators
-  tcp.py           TCP-over-forwarder DES (Table 5, Figs 8-10)
   protocol_sim.py  stepped interleaving model for property tests
 """
 
 from .atomics import AtomicU64, TryLock
-from .baseline import CorecSharedQueue, LockedSharedQueue, ScaleOutDriver, rss_hash
+from .baseline import (
+    AdaptiveBatchSharedQueue,
+    CorecSharedQueue,
+    HybridStealDriver,
+    LockedSharedQueue,
+    ScaleOutDriver,
+    rss_hash,
+)
+from .des import DesItem, EventLoop, PlaneStats, WorkerPlane
 from .dispatch import DispatchResult, Item, WorkerPool, make_queue
+from .policy import (
+    RxPolicy,
+    available_policies,
+    get_spec,
+    make_policy,
+    make_thread_queue,
+    register_policy,
+)
 from .queueing import (
+    simulate_policy,
     simulate_protocol,
     simulate_scale_out,
     simulate_scale_up,
@@ -30,8 +50,13 @@ from .traffic import MSS, FlowSpec, Packet, flow_packets, mawi_mix, udp_stream
 __all__ = [
     "AtomicU64", "TryLock", "Claim", "CorecRing", "RingStats",
     "CorecSharedQueue", "LockedSharedQueue", "ScaleOutDriver", "rss_hash",
+    "HybridStealDriver", "AdaptiveBatchSharedQueue",
+    "DesItem", "EventLoop", "PlaneStats", "WorkerPlane",
+    "RxPolicy", "available_policies", "get_spec", "make_policy",
+    "make_thread_queue", "register_policy",
     "DispatchResult", "Item", "WorkerPool", "make_queue",
-    "simulate_protocol", "simulate_scale_out", "simulate_scale_up", "sweep_load",
+    "simulate_policy", "simulate_protocol", "simulate_scale_out",
+    "simulate_scale_up", "sweep_load",
     "ReorderReport", "measure_reordering", "per_flow_reordering",
     "FlowResult", "TcpSimConfig", "simulate_tcp",
     "MSS", "FlowSpec", "Packet", "flow_packets", "mawi_mix", "udp_stream",

@@ -1,4 +1,4 @@
-"""The two comparison points the paper evaluates COREC against.
+"""Threaded-plane queue drivers: COREC's baselines + registry extras.
 
 * ``ScaleOutDriver`` — the state of the art (DPDK default): N independent
   rings, each owned by exactly one consumer thread; incoming items are
@@ -6,9 +6,17 @@
 * ``LockedSharedQueue`` — the Metronome-class alternative [12]: one ring
   shared by N threads, but the whole receive function is a critical
   section guarded by a mutex, so only one thread makes progress at a time.
+* ``HybridStealDriver`` — RSS rings plus work stealing: a consumer whose
+  own ring is empty claims from the longest peer ring.  Safe because
+  every ring is a full MPMC ``CorecRing`` (the claim CAS is exactly the
+  COREC protocol), so "foreign" consumers need no extra coordination.
+* ``AdaptiveBatchSharedQueue`` — the COREC shared ring with a
+  backlog-scaled claim size in ``[min_batch, max_batch]``.
 
-Both expose the same claim/complete/release surface as ``CorecRing`` so the
-dispatcher and the benchmarks can swap policies freely.
+All expose the same claim/complete/release surface as ``CorecRing`` so
+the dispatcher and the benchmarks can swap policies freely; the string
+registry in :mod:`repro.core.policy` maps policy names to these classes
+(threaded plane) and to their DES twins (simulated plane).
 """
 
 from __future__ import annotations
@@ -18,7 +26,14 @@ from typing import Any, List, Optional, Sequence
 
 from .ring import Claim, CorecRing, RingStats
 
-__all__ = ["ScaleOutDriver", "LockedSharedQueue", "rss_hash"]
+__all__ = [
+    "ScaleOutDriver",
+    "LockedSharedQueue",
+    "CorecSharedQueue",
+    "HybridStealDriver",
+    "AdaptiveBatchSharedQueue",
+    "rss_hash",
+]
 
 
 def rss_hash(key: int, n_queues: int) -> int:
@@ -156,3 +171,83 @@ class CorecSharedQueue:
 
     def backlog(self) -> int:
         return self.ring.backlog()
+
+
+class HybridStealDriver(ScaleOutDriver):
+    """RSS rings + work stealing from the longest backlog.
+
+    Consumer ``w`` claims from ring ``w`` first; if that comes back
+    empty it claims from the ring with the largest backlog.  Because
+    every ring is an MPMC ``CorecRing``, a foreign claim is just another
+    COREC consumer on that ring — the CAS ticket protocol already makes
+    it safe, and the victim's owner keeps claiming concurrently.  The
+    stolen ring is remembered per worker so ``complete``/``try_release``
+    reach the right ring (releases are trylock-protected, so the thief
+    and the owner can both attempt them).
+    """
+
+    def __init__(self, n_queues: int, size: int):
+        super().__init__(n_queues, size)
+        self._steal_src = [-1] * n_queues  # last foreign ring per worker
+        self.steals = 0  # diagnostic only (benign count race)
+
+    def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
+        c = self.rings[worker].claim(max_batch)
+        if c is not None:
+            c._ring_idx = worker
+            return c
+        victim = max(range(self.n_queues), key=lambda i: self.rings[i].backlog())
+        if victim == worker or self.rings[victim].backlog() == 0:
+            return None
+        c = self.rings[victim].claim(max_batch)
+        if c is not None:
+            c._ring_idx = victim
+            self._steal_src[worker] = victim
+            self.steals += 1
+        return c
+
+    def complete(self, worker: int, claim: Claim) -> None:
+        self.rings[getattr(claim, "_ring_idx", worker)].complete(claim)
+
+    def try_release(self, worker: int) -> int:
+        n = self.rings[worker].try_release()
+        src = self._steal_src[worker]
+        if src >= 0:
+            # One release attempt per steal, then forget the victim:
+            # anything not yet releasable (older claim still in flight)
+            # is picked up by the victim owner's own polling.
+            self._steal_src[worker] = -1
+            n += self.rings[src].try_release()
+        return n
+
+
+class AdaptiveBatchSharedQueue(CorecSharedQueue):
+    """COREC shared ring whose claim size scales with the backlog.
+
+    Effective claim size is ``clip(ceil(backlog / n_workers), min_batch,
+    min(max_batch, caller's max_batch))`` — per-packet claims when the
+    ring is nearly empty (lowest added latency), fair-shared amortizing
+    batches under bursts.  The DES twin is
+    :class:`repro.core.policy.AdaptiveBatchPolicy`.
+    """
+
+    def __init__(
+        self,
+        size: int,
+        n_workers: int,
+        min_batch: int = 1,
+        max_batch: Optional[int] = None,
+    ):
+        super().__init__(size)
+        self.n_workers = max(1, n_workers)
+        self.min_batch = max(1, min_batch)
+        self.max_batch = max_batch
+
+    def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
+        backlog = self.ring.backlog()
+        if backlog == 0:
+            return None
+        cap = max_batch if self.max_batch is None else min(max_batch, self.max_batch)
+        share = -(-backlog // self.n_workers)  # ceil
+        eff = min(cap, max(self.min_batch, share))
+        return self.ring.claim(eff)

@@ -1,0 +1,228 @@
+"""Unified discrete-event simulation core for every simulator in the repo.
+
+This is the single event engine behind the three scenario layers that
+used to hand-roll their own heapq loops:
+
+* ``core/queueing.py``  — M/G/N vs N x M/G/1 and the protocol-cost model
+  (paper section 3.2, Figs 3-4; Tables 2-3 extrapolation),
+* ``core/forwarder.py`` — the open-loop L3-forwarder reordering DES
+  (section 4.3.1, Fig 7 and Table 4),
+* ``core/tcp.py``       — TCP flows over the forwarder (section 4.3.2,
+  Table 5 and Figs 8-10).
+
+The split of responsibilities:
+
+``EventLoop``
+    A bare (time, tiebreak, kind, payload) heap with named handlers.
+    Scenario layers register their own kinds ("arrive", "deliver",
+    "ack", ...); the worker plane registers exactly one private kind for
+    worker-free events.
+
+``WorkerPlane``
+    The paper's receive side: ``n_workers`` batch-claiming workers
+    draining the queues owned by an :class:`repro.core.policy.RxPolicy`.
+    On every enqueue or worker-free event it sweeps the workers in index
+    order and, for each free worker, asks the policy for a batch
+    (``next_batch``), charges the batch claim overhead (section 3.4's
+    DD-scan + CAS cost, plus the policy's serialization hook — the lock
+    horizon of the Metronome-class 'locked' baseline), samples a rare
+    deschedule stall (section 3.3's preemption pathology), then runs the
+    per-item service times and reports each completion to the scenario.
+
+The plane draws from its RNG in a fixed order per claimed batch — one
+uniform for the deschedule Bernoulli (always drawn, hit or not), one
+exponential on a hit, then one service sample per item — which is
+exactly the draw order of the seed implementations, so the refactored
+simulators reproduce the pre-refactor statistics draw-for-draw (see
+``tests/test_des_parity.py``).
+
+Policies come from :mod:`repro.core.policy`; anything registered there
+(corec / scaleout / locked / hybrid / adaptive-batch / ...) runs on this
+plane unchanged, and the same registry also builds the threaded-plane
+queue objects (``core/dispatch.make_queue``), so a policy written once
+is measurable in simulated time and on real threads alike.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+__all__ = ["DesItem", "EventLoop", "PlaneStats", "WorkerPlane"]
+
+
+@dataclass(slots=True)
+class DesItem:
+    """A unit of work flowing through the plane.
+
+    ``flow`` feeds hash-steering policies; ``queue_hint`` (when set)
+    overrides steering with a precomputed queue id — the scenario-level
+    equivalent of a NIC indirection table, used by the queueing layer to
+    reproduce the seed's uniform-random / round-robin assignments.
+    """
+
+    flow: int = 0
+    payload: Any = None
+    queue_hint: Optional[int] = None
+
+
+class EventLoop:
+    """Heap of (t, tiebreak, kind, payload) with per-kind handlers."""
+
+    def __init__(self) -> None:
+        self._heap: list = []
+        self._counter = itertools.count()
+        self._handlers: dict = {}
+
+    def on(self, kind: str, fn: Callable[[float, Any], None]) -> None:
+        self._handlers[kind] = fn
+
+    def schedule(self, t: float, kind: str, payload: Any = None) -> None:
+        heapq.heappush(self._heap, (t, next(self._counter), kind, payload))
+
+    def run(self, on_idle: Optional[Callable[[float], None]] = None) -> None:
+        """Pump events until the heap is empty.
+
+        ``on_idle(t)`` fires whenever the heap drains (after the event
+        that emptied it); it may schedule more events, in which case the
+        loop continues — the TCP layer uses this for its coarse RTO
+        sweep.
+        """
+        heap = self._heap
+        handlers = self._handlers
+        while heap:
+            t, _, kind, payload = heapq.heappop(heap)
+            handlers[kind](t, payload)
+            if on_idle is not None and not heap:
+                on_idle(t)
+
+
+@dataclass
+class PlaneStats:
+    """Batch-claim accounting for one simulation run."""
+
+    batches: int = 0
+    items: int = 0
+    deschedules: int = 0
+    idle_with_backlog: int = 0  # dispatch sweeps that left a free worker
+    # while some queue was non-empty (0 for any work-conserving policy)
+    per_worker_items: List[int] = field(default_factory=list)
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class WorkerPlane:
+    """N batch-claiming workers draining an RxPolicy's queues.
+
+    Parameters
+    ----------
+    loop, policy, n_workers : the event loop, a bound
+        :class:`~repro.core.policy.RxPolicy`, and the worker count
+        (must equal ``policy.n_workers``).
+    service_fn : item -> service time.  Scenario-owned so each layer
+        keeps its own cost model (per-size forwarding cost, lognormal
+        jitter, pre-drawn M/D/LN samples, ...).
+    on_complete : (t_done, item) -> None, called once per item in
+        completion order within the batch.
+    rng : numpy Generator used for the deschedule draws (shared with the
+        scenario's service sampling so draw order is well defined).
+    claim_overhead : per-batch claim cost (DD scan + CAS, or the
+        seed-calibrated effective overhead including CAS retries).
+    deschedule_prob / deschedule_mean : per-batch Bernoulli stall with
+        exponential length.  The Bernoulli uniform is drawn for every
+        batch even when the probability is 0 — keeping the RNG stream
+        identical across policy/overhead configurations (and to the seed
+        implementations).
+    """
+
+    _FREE = "_worker_free"
+    _RETRY = "_worker_lock_retry"
+
+    def __init__(
+        self,
+        loop: EventLoop,
+        policy,
+        n_workers: int,
+        service_fn: Callable[[DesItem], float],
+        on_complete: Callable[[float, DesItem], None],
+        rng,
+        claim_overhead: float = 0.0,
+        deschedule_prob: float = 0.0,
+        deschedule_mean: float = 0.0,
+    ):
+        if getattr(policy, "n_workers", n_workers) != n_workers:
+            raise ValueError(
+                f"policy bound for {policy.n_workers} workers, plane has {n_workers}"
+            )
+        self.loop = loop
+        self.policy = policy
+        self.n_workers = n_workers
+        self.service_fn = service_fn
+        self.on_complete = on_complete
+        self.rng = rng
+        self.claim_overhead = claim_overhead
+        self.deschedule_prob = deschedule_prob
+        self.deschedule_mean = deschedule_mean
+        self.free = [True] * n_workers
+        self.stats = PlaneStats(per_worker_items=[0] * n_workers)
+        loop.on(self._FREE, self._on_free)
+        loop.on(self._RETRY, self._on_free)
+
+    # ------------------------------------------------------------------
+    def enqueue(self, t: float, item: DesItem) -> None:
+        self.policy.enqueue(item)
+        self.dispatch(t)
+
+    def _on_free(self, t: float, worker: int) -> None:
+        self.free[worker] = True
+        self.dispatch(t)
+
+    # ------------------------------------------------------------------
+    def dispatch(self, t: float) -> None:
+        """Sweep workers in index order; hand each free one a batch."""
+        free = self.free
+        policy = self.policy
+        rng = self.rng
+        stats = self.stats
+        for w in range(self.n_workers):
+            if not free[w]:
+                continue
+            # claim_start is the policy's serialization hook: identity
+            # for lock-free policies, the lock-horizon wait for 'locked'.
+            # A held lock means the batch cannot be formed yet (the real
+            # driver claims *under* the mutex, so arrivals during the
+            # wait join the batch): park the worker until the horizon
+            # and pop the queue state as of lock-grant time instead.
+            start = policy.claim_start(w, t)
+            if start > t:
+                if not policy.backlog():
+                    continue
+                free[w] = False
+                self.loop.schedule(start, self._RETRY, w)
+                continue
+            batch = policy.next_batch(w)
+            if not batch:
+                continue
+            free[w] = False
+            tt = start + self.claim_overhead
+            if rng.random() < self.deschedule_prob:
+                tt += float(rng.exponential(self.deschedule_mean))
+                stats.deschedules += 1
+            # The lock (if any) covers claim + any stall while holding
+            # it — a descheduled lock holder blocks every peer, the
+            # paper's case against Metronome-class designs.
+            policy.claim_release(w, tt)
+            service_fn = self.service_fn
+            on_complete = self.on_complete
+            for item in batch:
+                tt += service_fn(item)
+                on_complete(tt, item)
+            self.loop.schedule(tt, self._FREE, w)
+            stats.batches += 1
+            stats.items += len(batch)
+            stats.per_worker_items[w] += len(batch)
+        if policy.backlog() and any(free):
+            stats.idle_with_backlog += 1

@@ -1,10 +1,12 @@
 """Work-conserving dispatcher: worker threads around a claim/release queue.
 
 This is the paper's "driver threads" layer: each worker loops
-``claim -> process -> complete -> try_release`` (Listing 2), against any of
-the three queue policies (COREC / scale-out / locked).  Used by the
-protocol tests and the threaded benchmarks; the serving engine has its own
-specialised copy of this loop (repro/serving/scheduler.py).
+``claim -> process -> complete -> try_release`` (Listing 2), against any
+queue policy resolved from the shared registry in
+``repro/core/policy.py`` (corec / scaleout / locked / hybrid /
+adaptive-batch / ...).  Used by the protocol tests and the threaded
+benchmarks; the serving engine has its own specialised copy of this loop
+(repro/serving/scheduler.py).
 
 Timing: items carry their enqueue timestamp; the dispatcher records
 per-item sojourn latency (enqueue -> processing complete) so mean/p99 can
@@ -19,7 +21,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional
 
-from .baseline import CorecSharedQueue, LockedSharedQueue, ScaleOutDriver
+from .policy import available_policies, make_thread_queue
 
 __all__ = ["Item", "DispatchResult", "WorkerPool", "make_queue"]
 
@@ -51,15 +53,15 @@ class DispatchResult:
         return [it.seqno for it in sorted(self.items, key=lambda i: i.t_done)]
 
 
-def make_queue(policy: str, n_workers: int, size: int):
-    """policy in {'corec', 'scaleout', 'locked'}."""
-    if policy == "corec":
-        return CorecSharedQueue(size)
-    if policy == "scaleout":
-        return ScaleOutDriver(n_workers, size)
-    if policy == "locked":
-        return LockedSharedQueue(size)
-    raise ValueError(f"unknown queue policy {policy!r}")
+def make_queue(policy: str, n_workers: int, size: int, **kwargs):
+    """Build the threaded queue for any registered rx policy name.
+
+    Resolves through the shared registry (:mod:`repro.core.policy`), so
+    the same names the DES simulators accept — 'corec', 'scaleout',
+    'locked', 'hybrid', 'adaptive-batch', ... (see
+    ``available_policies()``) — work on real threads too.
+    """
+    return make_thread_queue(policy, n_workers, size, **kwargs)
 
 
 class WorkerPool:

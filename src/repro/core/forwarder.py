@@ -1,10 +1,17 @@
-"""Open-loop L3-forwarder DES: packets -> k workers -> completion order.
+"""Open-loop L3-forwarder scenario layer: packets -> k workers -> order.
 
-Shared by the UDP-reordering (Fig 7) and real-trace (Table 4) benchmarks:
-models the COREC driver's batch-claim pipeline on simulated time (the
-reordering mechanics — batch boundaries across workers + service jitter +
-rare descheduling — are the same ones the threaded ring exhibits, but the
-DES gives deterministic, load-controllable measurements on a 1-core box).
+Shared by the UDP-reordering (Fig 7), real-trace (Table 4) and
+policy-sweep benchmarks: models the COREC driver's batch-claim pipeline
+on simulated time (the reordering mechanics — batch boundaries across
+workers + service jitter + rare descheduling — are the same ones the
+threaded ring exhibits, but the DES gives deterministic,
+load-controllable measurements on a 1-core box).
+
+This layer owns only the traffic/cost model; the event heap, worker
+lifecycle, deschedule sampling and batch-claim accounting come from the
+unified DES core (:mod:`repro.core.des`), and ``cfg.policy`` may be any
+name in the shared registry (:mod:`repro.core.policy`): 'corec',
+'scaleout', 'locked', 'hybrid', 'adaptive-batch', ...
 
 Service time is a fixed per-packet CPU cost (+ a tiny per-byte cache
 term); wire serialization is the *arrival* process (line-rate caps pps by
@@ -16,14 +23,13 @@ the paper's Fig 7 shape.
 
 from __future__ import annotations
 
-import heapq
-import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Tuple
 
 import numpy as np
 
-from .baseline import rss_hash
+from .des import DesItem, EventLoop, WorkerPlane
+from .policy import make_policy
 from .traffic import Packet
 
 __all__ = ["ForwarderConfig", "simulate_forwarder"]
@@ -31,7 +37,7 @@ __all__ = ["ForwarderConfig", "simulate_forwarder"]
 
 @dataclass
 class ForwarderConfig:
-    policy: str = "corec"  # corec | scaleout
+    policy: str = "corec"  # any registered rx policy name
     n_workers: int = 4
     batch: int = 32
     base_service: float = 0.07  # us per packet (l3fwd lookup + desc swap)
@@ -42,6 +48,7 @@ class ForwarderConfig:
     deschedule_prob: float = 5e-4
     deschedule_mean: float = 30.0  # us
     seed: int = 0
+    policy_kwargs: dict = field(default_factory=dict)
 
 
 def simulate_forwarder(
@@ -49,54 +56,31 @@ def simulate_forwarder(
 ) -> List[Tuple[float, Packet]]:
     """Returns [(completion_time, packet)] in completion order."""
     rng = np.random.default_rng(cfg.seed)
-    counter = itertools.count()
-    events: list = []  # (t, tiebreak, kind, payload)
     out: List[Tuple[float, Packet]] = []
-    from collections import deque
 
-    shared: deque = deque()
-    perq = [deque() for _ in range(cfg.n_workers)]
-    free = [True] * cfg.n_workers
-
-    def push(t, kind, payload):
-        heapq.heappush(events, (t, next(counter), kind, payload))
-
-    def svc(p: Packet) -> float:
-        mean = cfg.base_service + cfg.per_byte * p.size
+    def svc(item: DesItem) -> float:
+        mean = cfg.base_service + cfg.per_byte * item.payload.size
         mu = np.log(mean) - cfg.service_jitter**2 / 2
         return float(rng.lognormal(mu, cfg.service_jitter))
 
-    def dispatch(t):
-        for w in range(cfg.n_workers):
-            if not free[w]:
-                continue
-            q = shared if cfg.policy == "corec" else perq[w]
-            if not q:
-                continue
-            batch = [q.popleft() for _ in range(min(cfg.batch, len(q)))]
-            free[w] = False
-            tt = t + cfg.claim_overhead
-            if rng.random() < cfg.deschedule_prob:
-                tt += float(rng.exponential(cfg.deschedule_mean))
-            for p in batch:
-                tt += svc(p)
-                push(tt, "done", p)
-            push(tt, "free", w)
-
+    loop = EventLoop()
+    plane = WorkerPlane(
+        loop,
+        make_policy(cfg.policy, cfg.n_workers, cfg.batch, **cfg.policy_kwargs),
+        cfg.n_workers,
+        service_fn=svc,
+        on_complete=lambda t, item: out.append((t, item.payload)),
+        rng=rng,
+        claim_overhead=cfg.claim_overhead,
+        deschedule_prob=cfg.deschedule_prob,
+        deschedule_mean=cfg.deschedule_mean,
+    )
+    loop.on("arrive", plane.enqueue)
     for p in packets:
-        push(p.t_arrival, "arrive", p)
-    while events:
-        t, _, kind, payload = heapq.heappop(events)
-        if kind == "arrive":
-            if cfg.policy == "corec":
-                shared.append(payload)
-            else:
-                perq[rss_hash(payload.flow, cfg.n_workers)].append(payload)
-            dispatch(t)
-        elif kind == "free":
-            free[payload] = True
-            dispatch(t)
-        else:
-            out.append((t, payload))
+        loop.schedule(p.t_arrival, "arrive", DesItem(flow=p.flow, payload=p))
+    loop.run()
+    # Completions are appended in claim order; a stable sort by time
+    # yields the same global completion order the seed's (t, tiebreak)
+    # "done"-event heap produced.
     out.sort(key=lambda x: x[0])
     return out

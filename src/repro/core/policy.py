@@ -1,0 +1,335 @@
+"""Pluggable Rx scheduling policies + the one registry both planes share.
+
+The paper's thesis (sections 3.1-3.2) is that the *policy* — who may
+serve which packet — not raw queue speed, drives tail latency.  This
+module makes the policy a first-class plugin: an :class:`RxPolicy` is
+``select_queue(item)`` on enqueue plus ``next_batch(worker)`` on drain,
+and a string registry resolves the same names for
+
+* the DES plane (:mod:`repro.core.des`, via :func:`make_policy`) used by
+  ``queueing.py`` / ``forwarder.py`` / ``tcp.py``, and
+* the threaded plane (:mod:`repro.core.dispatch`'s ``make_queue``, via
+  :func:`make_thread_queue`) built on the real ``CorecRing`` /
+  ``ScaleOutDriver`` / ``LockedSharedQueue`` objects,
+
+so a discipline written once is measurable in simulated time across
+UDP / MAWI-mix / TCP workloads and on real threads alike
+(``benchmarks/policy_sweep.py`` sweeps the whole registry).
+
+Built-in policies and their paper anchors:
+
+==============  ========================================================
+``corec``       one shared queue, any worker claims a batch — the work-
+                conserving M/G/N discipline of section 3.2 / Listing 2.
+``scaleout``    RSS: per-flow hash pins each packet to one worker's
+                queue (N x M/G/1, the DPDK default the paper baselines
+                against; also Flow-Director-style per-flow pinning).
+``locked``      one shared queue behind a big lock (the Metronome-class
+                baseline [12]): work-conserving but *blocking* — claims
+                serialize on a lock horizon, and a descheduled claim
+                holder stalls every peer (section 3.3).
+``hybrid``      RSS steering for per-flow order, plus work-stealing from
+                the longest backlog when a worker's own queue is empty —
+                Virtual-Link-style MPMC steering; work-conserving like
+                corec, in-order like scaleout whenever load is balanced.
+``adaptive-batch``
+                the corec shared queue with the paper's batch-vs-latency
+                knob (section 4.2) made dynamic: claim size grows with
+                the instantaneous backlog (fair-shared across workers)
+                and is clamped to [min_batch, max_batch], so light load
+                gets per-packet latency and bursts get amortization.
+==============  ========================================================
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+from .baseline import (
+    AdaptiveBatchSharedQueue,
+    CorecSharedQueue,
+    HybridStealDriver,
+    LockedSharedQueue,
+    ScaleOutDriver,
+    rss_hash,
+)
+from .des import DesItem
+
+__all__ = [
+    "RxPolicy",
+    "SharedQueuePolicy",
+    "RssPolicy",
+    "LockedPolicy",
+    "HybridStealPolicy",
+    "AdaptiveBatchPolicy",
+    "PolicySpec",
+    "register_policy",
+    "get_spec",
+    "available_policies",
+    "make_policy",
+    "make_thread_queue",
+]
+
+
+class RxPolicy:
+    """Base class: a set of FIFO queues + the two policy decisions.
+
+    ``select_queue(item)`` — which queue an arriving item joins (the
+    NIC-side steering decision); ``next_batch(worker)`` — which items a
+    free worker drains (the driver-side claim decision).  Timing hooks
+    ``claim_start`` / ``claim_release`` let blocking policies model
+    serialization; lock-free policies leave them as identities.
+    """
+
+    #: registry name, set by the subclass
+    name: str = "?"
+
+    def __init__(self, n_workers: int, batch: int = 32, n_queues: int = 1):
+        self.n_workers = n_workers
+        self.batch = batch
+        self.queues: List[deque] = [deque() for _ in range(n_queues)]
+
+    # -- enqueue side ---------------------------------------------------
+    def select_queue(self, item: DesItem) -> int:
+        raise NotImplementedError
+
+    def enqueue(self, item: DesItem) -> None:
+        self.queues[self.select_queue(item)].append(item)
+
+    # -- drain side -----------------------------------------------------
+    def next_batch(self, worker: int) -> List[DesItem]:
+        raise NotImplementedError
+
+    def backlog(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+    # -- serialization hooks (blocking policies only) -------------------
+    def claim_start(self, worker: int, t: float) -> float:
+        return t
+
+    def claim_release(self, worker: int, t: float) -> None:
+        return None
+
+    # -- helpers --------------------------------------------------------
+    def _pop(self, q: deque, k: int) -> List[DesItem]:
+        return [q.popleft() for _ in range(min(k, len(q)))]
+
+
+class SharedQueuePolicy(RxPolicy):
+    """``corec``: one shared FIFO, any free worker claims up to batch."""
+
+    name = "corec"
+
+    def __init__(self, n_workers: int, batch: int = 32):
+        super().__init__(n_workers, batch, n_queues=1)
+
+    def select_queue(self, item: DesItem) -> int:
+        return 0
+
+    def next_batch(self, worker: int) -> List[DesItem]:
+        return self._pop(self.queues[0], self.batch)
+
+
+class RssPolicy(RxPolicy):
+    """``scaleout``: per-flow hash pins items to one worker's queue.
+
+    ``item.queue_hint`` (when set) bypasses the hash — the indirection-
+    table override the queueing layer uses for uniform-random and
+    round-robin assignment.
+    """
+
+    name = "scaleout"
+
+    def __init__(self, n_workers: int, batch: int = 32):
+        super().__init__(n_workers, batch, n_queues=n_workers)
+
+    def select_queue(self, item: DesItem) -> int:
+        if item.queue_hint is not None:
+            return item.queue_hint
+        return rss_hash(item.flow, self.n_workers)
+
+    def next_batch(self, worker: int) -> List[DesItem]:
+        return self._pop(self.queues[worker], self.batch)
+
+
+class LockedPolicy(SharedQueuePolicy):
+    """``locked``: the shared queue behind one big lock (Metronome-class).
+
+    Claims serialize on a lock horizon; the lock is held through the
+    claim overhead *and* any deschedule stall, so a preempted holder
+    blocks all peers — the blocking pathology of paper section 3.3.
+    Service itself runs outside the lock (the threaded
+    ``LockedSharedQueue`` releases the mutex after claim+copy too).
+    """
+
+    name = "locked"
+
+    def __init__(self, n_workers: int, batch: int = 32):
+        super().__init__(n_workers, batch)
+        self._lock_free_t = 0.0
+
+    def claim_start(self, worker: int, t: float) -> float:
+        return t if t > self._lock_free_t else self._lock_free_t
+
+    def claim_release(self, worker: int, t: float) -> None:
+        self._lock_free_t = t
+
+
+class HybridStealPolicy(RxPolicy):
+    """``hybrid``: RSS steering + work stealing from the longest backlog.
+
+    A worker drains its own hash-pinned queue (per-flow in-order, like
+    scaleout) but when that queue is empty it claims a batch from the
+    head of the currently longest peer queue — restoring work
+    conservation under skew (Zipf elephants, bursts) at the price of
+    corec-style cross-worker reordering only for stolen batches.
+    """
+
+    name = "hybrid"
+
+    def __init__(self, n_workers: int, batch: int = 32):
+        super().__init__(n_workers, batch, n_queues=n_workers)
+        self.steals = 0
+        self.stolen_items = 0
+
+    def select_queue(self, item: DesItem) -> int:
+        if item.queue_hint is not None:
+            return item.queue_hint
+        return rss_hash(item.flow, self.n_workers)
+
+    def next_batch(self, worker: int) -> List[DesItem]:
+        own = self.queues[worker]
+        if own:
+            return self._pop(own, self.batch)
+        victim = max(range(self.n_workers), key=lambda i: len(self.queues[i]))
+        if not self.queues[victim]:
+            return []
+        got = self._pop(self.queues[victim], self.batch)
+        self.steals += 1
+        self.stolen_items += len(got)
+        return got
+
+
+class AdaptiveBatchPolicy(SharedQueuePolicy):
+    """``adaptive-batch``: shared queue, claim size scales with backlog.
+
+    Effective claim size is ``clip(ceil(backlog / n_workers),
+    min_batch, max_batch)`` — light load degenerates to per-packet
+    claims (minimum added latency), bursts fair-share across workers
+    with amortized claim overhead.
+    """
+
+    name = "adaptive-batch"
+
+    def __init__(
+        self,
+        n_workers: int,
+        batch: int = 32,
+        min_batch: int = 1,
+        max_batch: Optional[int] = None,
+    ):
+        super().__init__(n_workers, batch)
+        if min_batch < 1:
+            raise ValueError("min_batch must be >= 1")
+        self.min_batch = min_batch
+        self.max_batch = batch if max_batch is None else max_batch
+        if self.max_batch < self.min_batch:
+            raise ValueError("max_batch must be >= min_batch")
+
+    def effective_batch(self, backlog: int) -> int:
+        share = -(-backlog // self.n_workers)  # ceil
+        return min(self.max_batch, max(self.min_batch, share))
+
+    def next_batch(self, worker: int) -> List[DesItem]:
+        q = self.queues[0]
+        if not q:
+            return []
+        return self._pop(q, self.effective_batch(len(q)))
+
+
+# ----------------------------------------------------------------------
+# Registry: one name -> DES policy factory + threaded queue factory
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class PolicySpec:
+    name: str
+    des_factory: Callable[..., RxPolicy]  # (n_workers, batch, **kw)
+    thread_factory: Callable[..., Any]  # (n_workers, size, **kw)
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, PolicySpec] = {}
+
+
+def register_policy(spec: PolicySpec) -> PolicySpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"policy {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_spec(name: str) -> PolicySpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown rx policy {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_policies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def make_policy(name: str, n_workers: int, batch: int = 32, **kw) -> RxPolicy:
+    """Build a DES-plane policy instance from its registry name."""
+    return get_spec(name).des_factory(n_workers, batch, **kw)
+
+
+def make_thread_queue(name: str, n_workers: int, size: int, **kw):
+    """Build a threaded-plane queue object from the same registry name."""
+    return get_spec(name).thread_factory(n_workers, size, **kw)
+
+
+register_policy(
+    PolicySpec(
+        name="corec",
+        des_factory=SharedQueuePolicy,
+        thread_factory=lambda n, size, **kw: CorecSharedQueue(size, **kw),
+        doc="one shared non-blocking queue, batch claims (the paper)",
+    )
+)
+register_policy(
+    PolicySpec(
+        name="scaleout",
+        des_factory=RssPolicy,
+        thread_factory=lambda n, size, **kw: ScaleOutDriver(n, size, **kw),
+        doc="RSS: N per-worker queues, per-flow hash pinning (DPDK default)",
+    )
+)
+register_policy(
+    PolicySpec(
+        name="locked",
+        des_factory=LockedPolicy,
+        thread_factory=lambda n, size, **kw: LockedSharedQueue(size, **kw),
+        doc="one shared queue behind a mutex (Metronome-class baseline)",
+    )
+)
+register_policy(
+    PolicySpec(
+        name="hybrid",
+        des_factory=HybridStealPolicy,
+        thread_factory=lambda n, size, **kw: HybridStealDriver(n, size, **kw),
+        doc="RSS steering + work stealing from the longest backlog",
+    )
+)
+register_policy(
+    PolicySpec(
+        name="adaptive-batch",
+        des_factory=AdaptiveBatchPolicy,
+        thread_factory=lambda n, size, **kw: AdaptiveBatchSharedQueue(size, n, **kw),
+        doc="shared queue, claim size scales with backlog in [min,max]",
+    )
+)

@@ -1,33 +1,42 @@
-"""Discrete-event queueing simulator — reproduces paper section 3.2.
+"""Queueing-theory scenario layer — reproduces paper section 3.2.
 
-Compares the two disciplines of Figure 2:
+Compares the disciplines of Figure 2 on the unified DES core
+(:mod:`repro.core.des`) with policies resolved from the shared registry
+(:mod:`repro.core.policy`):
 
 * scale-up  (COREC):  one shared queue, N servers        ->  M/G/N
 * scale-out (RSS):    N queues, one server each          ->  N x M/G/1
 
-with Markovian arrivals and either Markovian ('M') or Deterministic ('D')
-service times, for 4 and 8 servers (Figures 3 and 4).  The simulator is a
-plain FCFS event engine; the *policy* (who may serve which job) is the only
-thing that differs — exactly the paper's claim that work conservation, not
-raw speed, is the source of the win.
+with Markovian arrivals and either Markovian ('M'), Deterministic ('D')
+or lognormal ('LN') service times, for 4 and 8 servers (Figures 3-4).
+This layer owns nothing but the arrival/service sampling and the result
+statistics; the event heap, worker lifecycle and batch-claim accounting
+live in the core, and the *policy* (who may serve which job) is an
+``RxPolicy`` plugin — exactly the paper's claim that work conservation,
+not raw speed, is the source of the win.  Any registered policy name
+('corec', 'scaleout', 'locked', 'hybrid', 'adaptive-batch', ...) can be
+simulated via :func:`simulate_policy`.
 
-Also provides ``simulate_protocol`` — a simulated-time model of the COREC
-claim/release protocol with explicit per-batch overheads, used by the
-scalability benchmark to extrapolate thread-scaling beyond what a 1-core
-CPython host can physically exhibit (calibrated against measured costs).
+Also provides ``simulate_protocol`` — the COREC claim/release protocol
+with explicit per-batch overheads, used by the scalability benchmark to
+extrapolate thread-scaling beyond what a 1-core CPython host can
+physically exhibit (calibrated against measured costs).
 """
 
 from __future__ import annotations
 
-import heapq
 import math
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
+from .des import DesItem, EventLoop, WorkerPlane
+from .policy import make_policy
+
 __all__ = [
     "QueueSimResult",
+    "simulate_policy",
     "simulate_scale_up",
     "simulate_scale_out",
     "sweep_load",
@@ -66,6 +75,79 @@ def _arrivals(rng: np.random.Generator, n: int, rate: float) -> np.ndarray:
     return np.cumsum(rng.exponential(1.0 / rate, size=n))
 
 
+def _run_jobs(
+    arr: np.ndarray,
+    svc: np.ndarray,
+    n_workers: int,
+    policy: str,
+    batch: int,
+    rng: np.random.Generator,
+    claim_overhead: float = 0.0,
+    hints: Optional[np.ndarray] = None,
+    policy_kwargs: Optional[dict] = None,
+) -> np.ndarray:
+    """Drive pre-drawn (arrival, service) jobs through the DES plane.
+
+    Returns per-job completion times indexed like ``arr``.  Service
+    samples are pre-drawn (indexed by job id) so results are invariant
+    to which worker serves which job.
+    """
+    n_jobs = len(arr)
+    done = np.empty(n_jobs)
+    loop = EventLoop()
+    pol = make_policy(policy, n_workers, batch, **(policy_kwargs or {}))
+
+    def on_complete(t: float, item: DesItem) -> None:
+        done[item.payload] = t
+
+    plane = WorkerPlane(
+        loop,
+        pol,
+        n_workers,
+        service_fn=lambda item: svc[item.payload],
+        on_complete=on_complete,
+        rng=rng,
+        claim_overhead=claim_overhead,
+    )
+    loop.on("arrive", plane.enqueue)
+    if hints is None:
+        for i in range(n_jobs):
+            loop.schedule(arr[i], "arrive", DesItem(flow=i, payload=i))
+    else:
+        for i in range(n_jobs):
+            loop.schedule(
+                arr[i], "arrive", DesItem(flow=i, payload=i, queue_hint=int(hints[i]))
+            )
+    loop.run()
+    return done
+
+
+def simulate_policy(
+    policy: str,
+    rate: float,
+    mean_service: float,
+    n_workers: int,
+    n_jobs: int = 200_000,
+    service: str = "M",
+    seed: int = 0,
+    batch: int = 1,
+    claim_overhead: float = 0.0,
+    policy_kwargs: Optional[dict] = None,
+) -> QueueSimResult:
+    """M/G/system under any registered RxPolicy (batch=1, zero overhead
+    by default — the pure queueing-theory view of the discipline)."""
+    rng = np.random.default_rng(seed)
+    arr = _arrivals(rng, n_jobs, rate)
+    svc = _service_samples(rng, n_jobs, mean_service, service)
+    done = _run_jobs(
+        arr, svc, n_workers, policy, batch, rng,
+        claim_overhead=claim_overhead, policy_kwargs=policy_kwargs,
+    )
+    return QueueSimResult(
+        sojourn=done - arr, util=float(np.sum(svc) / (n_workers * done.max()))
+    )
+
+
 def simulate_scale_up(
     rate: float,
     mean_service: float,
@@ -75,21 +157,9 @@ def simulate_scale_up(
     seed: int = 0,
 ) -> QueueSimResult:
     """M/G/N: one FCFS queue, any idle server takes the next job."""
-    rng = np.random.default_rng(seed)
-    arr = _arrivals(rng, n_jobs, rate)
-    svc = _service_samples(rng, n_jobs, mean_service, service)
-    free = [0.0] * n_servers  # heap of server-free times
-    heapq.heapify(free)
-    done = np.empty(n_jobs)
-    for i in range(n_jobs):
-        t_free = heapq.heappop(free)
-        start = arr[i] if arr[i] > t_free else t_free
-        end = start + svc[i]
-        done[i] = end
-        heapq.heappush(free, end)
-    sojourn = done - arr
-    util = float(np.sum(svc) / (n_servers * done.max()))
-    return QueueSimResult(sojourn=sojourn, util=util)
+    return simulate_policy(
+        "corec", rate, mean_service, n_servers, n_jobs, service, seed
+    )
 
 
 def simulate_scale_out(
@@ -106,7 +176,8 @@ def simulate_scale_out(
     ``assign='hash'`` models RSS on uniformly random flow keys (uniform
     random queue per job — the paper's 'traffic flow distribution is equal
     among cores' case); 'rr' is deterministic round-robin (best case for
-    scale-out, zero skew).
+    scale-out, zero skew).  The assignment is passed to the 'scaleout'
+    policy as a per-job ``queue_hint`` (an indirection-table override).
     """
     rng = np.random.default_rng(seed)
     arr = _arrivals(rng, n_jobs, rate)
@@ -117,18 +188,10 @@ def simulate_scale_out(
         q = np.arange(n_jobs) % n_servers
     else:
         raise ValueError(assign)
-    done = np.empty(n_jobs)
-    # Per-queue FCFS single server: completion = max(arrival, prev) + svc.
-    prev = np.zeros(n_servers)
-    for i in range(n_jobs):
-        k = q[i]
-        start = arr[i] if arr[i] > prev[k] else prev[k]
-        end = start + svc[i]
-        prev[k] = end
-        done[i] = end
-    sojourn = done - arr
-    util = float(np.sum(svc) / (n_servers * done.max()))
-    return QueueSimResult(sojourn=sojourn, util=util)
+    done = _run_jobs(arr, svc, n_servers, "scaleout", 1, rng, hints=q)
+    return QueueSimResult(
+        sojourn=done - arr, util=float(np.sum(svc) / (n_servers * done.max()))
+    )
 
 
 def sweep_load(
@@ -170,62 +233,42 @@ def simulate_protocol(
     n_jobs: int = 100_000,
     service: str = "M",
     seed: int = 0,
+    policy_kwargs: Optional[dict] = None,
 ) -> QueueSimResult:
     """COREC protocol on simulated time.
 
     Like ``simulate_scale_up`` but jobs are taken in *batches* (up to
-    ``batch`` of whatever is queued — the DD-bit scan) and each batch costs
-    ``claim_overhead`` plus an expected CAS-retry penalty that grows with
-    contention (p_fail ~ (k-1)/k per concurrent claimant, geometric
-    retries).  For 'scaleout' the batch overhead is paid too (scan + tail
-    write) but there is never CAS contention and each worker owns 1/N of
-    the arrivals (uniform hash).
+    ``batch`` of whatever is queued — the DD-bit scan) and each batch
+    costs ``claim_overhead`` plus an expected CAS-retry penalty that
+    grows with contention (p_fail ~ (k-1)/k per concurrent claimant,
+    geometric retries) for the contended shared-queue policies.  For
+    'scaleout' there is never CAS contention, so each batch pays the
+    plain overhead (scan + tail write) on its own hash-pinned queue;
+    batches form from whatever has queued by claim time, same as every
+    other policy (the seed implementation amortized scale-out overhead
+    by job *count* instead — the unified model charges both disciplines
+    identically, which is slightly more faithful and marginally kinder
+    to scale-out at low load).
+
+    Any registered policy name is accepted; CAS contention is charged to
+    every shared-queue policy (all but 'scaleout' / 'hybrid').
     """
     rng = np.random.default_rng(seed)
     arr = _arrivals(rng, n_jobs, rate)
     svc = _service_samples(rng, n_jobs, mean_service, service)
-    done = np.empty(n_jobs)
-
-    if policy == "scaleout":
-        q = rng.integers(0, n_workers, size=n_jobs)
-        prev = np.zeros(n_workers)
-        # batched FCFS per queue: overhead amortised over jobs ready at
-        # claim time; conservatively charge per-batch overhead each batch.
-        counts = np.zeros(n_workers, dtype=int)
-        for i in range(n_jobs):
-            k = q[i]
-            if counts[k] % batch == 0:
-                prev[k] += claim_overhead
-            start = arr[i] if arr[i] > prev[k] else prev[k]
-            end = start + svc[i]
-            prev[k] = end
-            done[i] = end
-            counts[k] += 1
-        sojourn = done - arr
-        return QueueSimResult(sojourn, float(np.sum(svc) / (n_workers * done.max())))
-
-    if policy != "corec":
-        raise ValueError(policy)
-
-    # COREC: shared FCFS, batch claims, contention-scaled CAS retries.
-    free = [(0.0, w) for w in range(n_workers)]
-    heapq.heapify(free)
-    p_fail = (n_workers - 1) / max(n_workers, 1) * 0.5  # calibrated upper bound
-    expected_retries = p_fail / (1 - p_fail) if p_fail < 1 else 0.0
-    i = 0
-    while i < n_jobs:
-        t_free, w = heapq.heappop(free)
-        t = t_free if t_free > arr[i] else arr[i]
-        # claim the batch available at time t (>=1 job: job i has arrived)
-        j = i
-        while j < n_jobs - 1 and (j - i) < batch - 1 and arr[j + 1] <= t:
-            j += 1
-        t += claim_overhead + cas_retry_cost * expected_retries
-        for k in range(i, j + 1):
-            t += svc[k]
-            done[k] = t
-        heapq.heappush(free, (t, w))
-        i = j + 1
-    sojourn = done - arr
-    util = float(np.sum(svc) / (n_workers * done.max()))
-    return QueueSimResult(sojourn, util)
+    hints = None
+    if policy in ("scaleout", "hybrid"):
+        overhead = claim_overhead
+        if policy == "scaleout":
+            hints = rng.integers(0, n_workers, size=n_jobs)
+    else:
+        p_fail = (n_workers - 1) / max(n_workers, 1) * 0.5  # calibrated upper bound
+        expected_retries = p_fail / (1 - p_fail) if p_fail < 1 else 0.0
+        overhead = claim_overhead + cas_retry_cost * expected_retries
+    done = _run_jobs(
+        arr, svc, n_workers, policy, batch, rng,
+        claim_overhead=overhead, hints=hints, policy_kwargs=policy_kwargs,
+    )
+    return QueueSimResult(
+        sojourn=done - arr, util=float(np.sum(svc) / (n_workers * done.max()))
+    )

@@ -1,10 +1,15 @@
-"""TCP flow model over a COREC / scale-out forwarder (paper section 4.3.2).
+"""TCP flow scenario layer over a policy-driven forwarder (section 4.3.2).
 
 End-to-end discrete-event simulation of:  senders --> access link -->
 L3 forwarder (the device under test) --> receiver --> ACKs --> senders.
-The forwarder is k workers draining either one shared COREC queue (batch
-claims, natural cross-worker reordering) or k RSS-hashed per-worker queues
-(per-flow in-order, but no work conservation).
+The forwarder is the unified DES worker plane (:mod:`repro.core.des`):
+k workers draining the queues of any registered ``RxPolicy``
+(:mod:`repro.core.policy`) — the COREC shared queue (batch claims,
+natural cross-worker reordering), k RSS-hashed per-worker queues
+(per-flow in-order, but no work conservation), the locked shared queue,
+hybrid stealing, adaptive batching, ...  This layer owns only the TCP
+endpoints and the access link; the event heap and worker lifecycle are
+the core's.
 
 TCP is CUBIC-flavoured NewReno with the two Linux-5.13 behaviours that
 matter for reordering tolerance (the paper runs stock CUBIC on 5.13):
@@ -24,22 +29,21 @@ hurt via reordering, reproducing Table 5's percent-level FCT deltas.
 
 from __future__ import annotations
 
-import heapq
-import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .baseline import rss_hash
+from .des import DesItem, EventLoop, WorkerPlane
+from .policy import make_policy
 
 __all__ = ["TcpSimConfig", "FlowResult", "simulate_tcp"]
 
 
 @dataclass
 class TcpSimConfig:
-    policy: str = "corec"  # 'corec' | 'scaleout'
+    policy: str = "corec"  # any registered rx policy name
     n_workers: int = 4
     batch: int = 32
     service_mean: float = 1.0  # per-packet forwarding cost (us)
@@ -56,6 +60,7 @@ class TcpSimConfig:
     max_reorder_thresh: int = 300  # Linux sysctl tcp_max_reordering
     rto: float = 5_000.0  # coarse retransmission timer (us)
     seed: int = 0
+    policy_kwargs: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -107,22 +112,29 @@ def simulate_tcp(
         for fid, n, t0 in flows
     }
 
-    # ---- forwarder + link state ----------------------------------------
-    shared: deque = deque()  # corec: one queue of (fid, seq)
-    perq: List[deque] = [deque() for _ in range(cfg.n_workers)]
-    worker_free = [True] * cfg.n_workers
-    counter = itertools.count()  # heap tiebreaker
+    # ---- forwarder (the unified DES worker plane) + link state ---------
+    loop = EventLoop()
     link_free = [0.0]  # sender NIC serialization horizon
     spacing = 1.0 / cfg.link_pps
 
-    events: list = []  # (t, tiebreak, kind, data)
-
-    def push(t: float, kind: str, data) -> None:
-        heapq.heappush(events, (t, next(counter), kind, data))
-
-    def service_sample() -> float:
+    def service_sample(item: DesItem) -> float:
         mu = np.log(cfg.service_mean) - cfg.service_jitter**2 / 2
         return float(rng.lognormal(mu, cfg.service_jitter))
+
+    plane = WorkerPlane(
+        loop,
+        make_policy(cfg.policy, cfg.n_workers, cfg.batch, **cfg.policy_kwargs),
+        cfg.n_workers,
+        service_fn=service_sample,
+        # forwarded packet -> receiver after propagation
+        on_complete=lambda tt, item: loop.schedule(
+            tt + cfg.prop_delay, "deliver", item.payload
+        ),
+        rng=rng,
+        claim_overhead=cfg.claim_overhead,
+        deschedule_prob=cfg.deschedule_prob,
+        deschedule_mean=cfg.deschedule_mean,
+    )
 
     # ---- sender ---------------------------------------------------------
     def try_send(f: _Flow, t: float) -> None:
@@ -138,35 +150,11 @@ def simulate_tcp(
             f.in_flight += 1
             depart = max(t, link_free[0]) + spacing  # NIC serialization
             link_free[0] = depart
-            push(depart + cfg.prop_delay, "arrive", (f.fid, seq))
-
-    # ---- forwarder ------------------------------------------------------
-    def dispatch(t: float) -> None:
-        """Give every free worker a batch.  COREC: any worker claims from
-        the shared queue (work conserving).  Scale-out: worker w only
-        drains perq[w]."""
-        for w in range(cfg.n_workers):
-            if not worker_free[w]:
-                continue
-            if cfg.policy == "corec":
-                if not shared:
-                    continue
-                batch = [shared.popleft() for _ in range(min(cfg.batch, len(shared)))]
-            else:
-                if not perq[w]:
-                    continue
-                batch = [perq[w].popleft() for _ in range(min(cfg.batch, len(perq[w])))]
-            worker_free[w] = False
-            tt = t + cfg.claim_overhead
-            if rng.random() < cfg.deschedule_prob:
-                tt += float(rng.exponential(cfg.deschedule_mean))
-            for fid, seq in batch:
-                tt += service_sample()
-                push(tt + cfg.prop_delay, "deliver", (fid, seq))
-            push(tt, "worker_free", w)
+            loop.schedule(depart + cfg.prop_delay, "arrive", (f.fid, seq))
 
     # ---- receiver ---------------------------------------------------------
-    def deliver(t: float, fid: int, seq: int) -> None:
+    def deliver(t: float, data) -> None:
+        fid, seq = data
         f = fl[fid]
         dup = seq < f.recv_next or seq in f.recv_buf  # DSACK condition
         if not dup:
@@ -174,10 +162,11 @@ def simulate_tcp(
             while f.recv_next in f.recv_buf:
                 f.recv_buf.discard(f.recv_next)
                 f.recv_next += 1
-        push(t + cfg.prop_delay, "ack", (fid, f.recv_next - 1, dup))
+        loop.schedule(t + cfg.prop_delay, "ack", (fid, f.recv_next - 1, dup))
 
     # ---- sender ACK processing -------------------------------------------
-    def on_ack(t: float, fid: int, ackno: int, dsack: bool) -> None:
+    def on_ack(t: float, data) -> None:
+        fid, ackno, dsack = data
         f = fl[fid]
         if f.done:
             return
@@ -220,42 +209,34 @@ def simulate_tcp(
                 f.dup_acks = 0
         try_send(f, t)
 
-    # ---- main loop ---------------------------------------------------------
-    for f in fl.values():
-        push(f.t_start, "start", f.fid)
-    while events:
-        t, _, kind, data = heapq.heappop(events)
-        if kind == "start":
-            try_send(fl[data], t)
-        elif kind == "arrive":
-            fid, seq = data
-            if cfg.policy == "corec":
-                shared.append((fid, seq))
-            else:
-                perq[rss_hash(fid, cfg.n_workers)].append((fid, seq))
-            dispatch(t)
-        elif kind == "worker_free":
-            worker_free[data] = True
-            dispatch(t)
-        elif kind == "deliver":
-            deliver(t, *data)
-        elif kind == "ack":
-            on_ack(t, *data)
+    # ---- event wiring + RTO safety ---------------------------------------
+    loop.on("start", lambda t, fid: try_send(fl[fid], t))
+    loop.on(
+        "arrive",
+        lambda t, data: plane.enqueue(t, DesItem(flow=data[0], payload=data)),
+    )
+    loop.on("deliver", deliver)
+    loop.on("ack", on_ack)
+
+    def rto_sweep(t: float) -> None:
         # RTO safety: if everything stalls (in-flight accounting drift can
         # strand a window), coarse timeout: reset and resend from the hole.
-        if not events:
-            for f in fl.values():
-                if not f.done:
-                    f.in_flight = 0
-                    f.dup_acks = 0
-                    f.ssthresh = max(2.0, f.cwnd * cfg.cubic_beta)
-                    f.cwnd = float(cfg.init_cwnd)
-                    missing = f.highest_acked + 1
-                    if missing < f.n_packets and missing not in f.retx_queue:
-                        f.retx_queue.appendleft(missing)
-                        f.retx += 1
-                        f.last_retx_seq = missing
-                    try_send(f, t + cfg.rto)
+        for f in fl.values():
+            if not f.done:
+                f.in_flight = 0
+                f.dup_acks = 0
+                f.ssthresh = max(2.0, f.cwnd * cfg.cubic_beta)
+                f.cwnd = float(cfg.init_cwnd)
+                missing = f.highest_acked + 1
+                if missing < f.n_packets and missing not in f.retx_queue:
+                    f.retx_queue.appendleft(missing)
+                    f.retx += 1
+                    f.last_retx_seq = missing
+                try_send(f, t + cfg.rto)
+
+    for f in fl.values():
+        loop.schedule(f.t_start, "start", f.fid)
+    loop.run(on_idle=rto_sweep)
 
     return [
         FlowResult(

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
@@ -15,10 +17,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """Whatever devices exist, as a (data, model) mesh — smoke tests."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    return make_mesh((n, 1), ("data", "model"))

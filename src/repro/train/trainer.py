@@ -48,8 +48,10 @@ class Trainer:
         self.cfg = cfg
         self.tcfg = tcfg
         if mesh is None:
+            from repro.compat import make_mesh
+
             n = len(jax.devices())
-            mesh = jax.make_mesh((n, 1), ("data", "model"))
+            mesh = make_mesh((n, 1), ("data", "model"))
         self.mesh = mesh
         sched = (
             wsd_schedule(tcfg.lr, tcfg.warmup, tcfg.steps // 2, tcfg.steps // 4)

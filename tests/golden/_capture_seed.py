@@ -1,0 +1,136 @@
+"""Golden-value capture for the DES-parity regression tests.
+
+This script was run ONCE against the *seed* implementations (commit
+b3e4d28: the hand-rolled heapq loops in ``core/queueing.py``,
+``core/forwarder.py`` and ``core/tcp.py``) to freeze their summary
+statistics into ``des_parity.json`` before those loops were replaced by
+the unified DES core (``core/des.py`` + ``core/policy.py``).
+
+``tests/test_des_parity.py`` replays the same configurations through the
+refactored simulators and checks the statistics match to tight
+tolerance.  Re-running this script against the refactored code simply
+regenerates the same numbers (the refactor is RNG-draw-for-draw
+compatible); it is kept for provenance and so the goldens can be
+re-derived if the capture configs ever change.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+
+def order_crc(seqs) -> list:
+    """Order-sensitive checksum of a completion sequence."""
+    m = (1 << 61) - 1
+    acc = 0
+    for i, s in enumerate(seqs):
+        acc = (acc + (i + 1) * (int(s) + 7)) % m
+    return [len(list(seqs)) if not isinstance(seqs, list) else len(seqs), acc]
+
+
+def main() -> None:
+    from repro.core.forwarder import ForwarderConfig, simulate_forwarder
+    from repro.core.queueing import (
+        simulate_protocol,
+        simulate_scale_out,
+        simulate_scale_up,
+    )
+    from repro.core.reorder import measure_reordering, per_flow_reordering
+    from repro.core.tcp import TcpSimConfig, simulate_tcp
+    from repro.core.traffic import mawi_mix, udp_stream
+
+    g: dict = {}
+
+    # ---- queueing.py ------------------------------------------------
+    def qstats(r):
+        return {"mean": r.mean, "p99": r.percentile(99), "util": r.util}
+
+    g["su_m_n4"] = qstats(simulate_scale_up(3.4, 1.0, 4, 20_000, "M", seed=1))
+    g["su_d_n8"] = qstats(simulate_scale_up(6.8, 1.0, 8, 20_000, "D", seed=2))
+    g["su_ln_n4"] = qstats(simulate_scale_up(3.0, 1.0, 4, 15_000, "LN", seed=5))
+    g["so_hash_n4"] = qstats(
+        simulate_scale_out(3.4, 1.0, 4, 20_000, "M", seed=1, assign="hash")
+    )
+    g["so_rr_n8"] = qstats(
+        simulate_scale_out(6.4, 1.0, 8, 20_000, "M", seed=3, assign="rr")
+    )
+    g["proto_corec_n4"] = qstats(
+        simulate_protocol(
+            4, "corec", 3.5, 1.0, claim_overhead=0.1, cas_retry_cost=0.2,
+            batch=16, n_jobs=20_000, service="M", seed=5,
+        )
+    )
+
+    # ---- forwarder.py -----------------------------------------------
+    def fstats(done, pkts, per_flow=False):
+        arr = {p.seqno: p.t_arrival for p in pkts}
+        soj = np.array([t - arr[p.seqno] for t, p in done])
+        seqs = [p.seqno for _, p in done]
+        rep = measure_reordering(seqs)
+        out = {
+            "n": len(done),
+            "mean_sojourn": float(soj.mean()),
+            "p99_sojourn": float(np.percentile(soj, 99)),
+            "reorder_pct": rep.pct,
+            "max_distance": rep.max_distance,
+            "order_crc": order_crc(seqs),
+        }
+        if per_flow:
+            agg = per_flow_reordering((p.flow, p.flow_seq) for _, p in done)
+            out["flow_reorder_pct"] = agg["__all__"].pct
+        return out
+
+    udp = udp_stream(6000, rate_pps=12.0, size=64, seed=3)
+    g["fwd_corec_udp"] = fstats(
+        simulate_forwarder(udp, ForwarderConfig(policy="corec", n_workers=4, seed=4)),
+        udp,
+    )
+    g["fwd_scaleout_udp"] = fstats(
+        simulate_forwarder(
+            udp, ForwarderConfig(policy="scaleout", n_workers=4, seed=4)
+        ),
+        udp,
+    )
+    mawi = mawi_mix(6000, mean_rate_pps=2.5, seed=22)
+    g["fwd_corec_mawi"] = fstats(
+        simulate_forwarder(
+            mawi, ForwarderConfig(policy="corec", n_workers=8, seed=154)
+        ),
+        mawi,
+        per_flow=True,
+    )
+
+    # ---- tcp.py ------------------------------------------------------
+    r = simulate_tcp(
+        [(0, 6000, 0.0)],
+        TcpSimConfig(policy="corec", n_workers=4, seed=1, deschedule_prob=1e-3),
+    )[0]
+    g["tcp_corec_single"] = {
+        "fct": r.fct, "retx": r.retransmissions, "spurious": r.spurious,
+    }
+    flows = [(i, 7, i * 1.5) for i in range(48)]
+    for pol in ("corec", "scaleout"):
+        res = simulate_tcp(
+            flows,
+            TcpSimConfig(policy=pol, n_workers=4, service_mean=3.0, seed=3),
+        )
+        f = np.array([x.fct for x in res])
+        g[f"tcp_{pol}_small"] = {
+            "mean_fct": float(f.mean()),
+            "p95_fct": float(np.percentile(f, 95)),
+            "retx": int(sum(x.retransmissions for x in res)),
+            "spurious": int(sum(x.spurious for x in res)),
+        }
+
+    out = Path(__file__).parent / "des_parity.json"
+    out.write_text(json.dumps(g, indent=2))
+    print(f"wrote {out}")
+    for k, v in g.items():
+        print(k, v)
+
+
+if __name__ == "__main__":
+    main()

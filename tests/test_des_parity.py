@@ -1,0 +1,173 @@
+"""DES-parity regression: the unified core reproduces the seed sims.
+
+``tests/golden/des_parity.json`` holds summary statistics captured from
+the seed implementations (hand-rolled heapq loops in ``queueing.py`` /
+``forwarder.py`` / ``tcp.py``, commit b3e4d28) by
+``tests/golden/_capture_seed.py``.  The refactored simulators — thin
+scenario layers over ``core/des.py`` + ``core/policy.py`` — must
+reproduce them to tight tolerance.  The worker plane was built to be
+RNG-draw-for-draw compatible with the seed loops, so in practice the
+match is bit-exact (including the order-sensitive completion CRCs and
+integer retransmission counts); the float comparisons still allow 1e-9
+relative slack so a benign FP-reassociation doesn't mask a real
+regression signal with noise.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.forwarder import ForwarderConfig, simulate_forwarder
+from repro.core.queueing import (
+    simulate_protocol,
+    simulate_scale_out,
+    simulate_scale_up,
+)
+from repro.core.reorder import measure_reordering, per_flow_reordering
+from repro.core.tcp import TcpSimConfig, simulate_tcp
+from repro.core.traffic import mawi_mix, udp_stream
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden" / "des_parity.json").read_text()
+)
+RTOL = 1e-9
+
+
+def _close(got: dict, key: str) -> None:
+    want = GOLDEN[key]
+    assert set(got) == set(want), (key, sorted(got), sorted(want))
+    for field, w in want.items():
+        g = got[field]
+        if isinstance(w, (int, list)) and not isinstance(w, bool):
+            assert g == w, (key, field, g, w)
+        else:
+            np.testing.assert_allclose(g, w, rtol=RTOL, err_msg=f"{key}.{field}")
+
+
+def _qstats(r) -> dict:
+    return {"mean": r.mean, "p99": r.percentile(99), "util": r.util}
+
+
+def _order_crc(seqs: list) -> list:
+    m = (1 << 61) - 1
+    acc = 0
+    for i, s in enumerate(seqs):
+        acc = (acc + (i + 1) * (int(s) + 7)) % m
+    return [len(seqs), acc]
+
+
+def _fstats(done, pkts, per_flow: bool = False) -> dict:
+    arr = {p.seqno: p.t_arrival for p in pkts}
+    soj = np.array([t - arr[p.seqno] for t, p in done])
+    seqs = [p.seqno for _, p in done]
+    rep = measure_reordering(seqs)
+    out = {
+        "n": len(done),
+        "mean_sojourn": float(soj.mean()),
+        "p99_sojourn": float(np.percentile(soj, 99)),
+        "reorder_pct": rep.pct,
+        "max_distance": rep.max_distance,
+        "order_crc": _order_crc(seqs),
+    }
+    if per_flow:
+        agg = per_flow_reordering((p.flow, p.flow_seq) for _, p in done)
+        out["flow_reorder_pct"] = agg["__all__"].pct
+    return out
+
+
+# ---------------------------------------------------------------------
+# queueing.py
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "key,kwargs",
+    [
+        ("su_m_n4", dict(rate=3.4, n=4, n_jobs=20_000, service="M", seed=1)),
+        ("su_d_n8", dict(rate=6.8, n=8, n_jobs=20_000, service="D", seed=2)),
+        ("su_ln_n4", dict(rate=3.0, n=4, n_jobs=15_000, service="LN", seed=5)),
+    ],
+)
+def test_scale_up_parity(key, kwargs):
+    r = simulate_scale_up(
+        kwargs["rate"], 1.0, kwargs["n"], kwargs["n_jobs"],
+        kwargs["service"], seed=kwargs["seed"],
+    )
+    _close(_qstats(r), key)
+
+
+@pytest.mark.parametrize(
+    "key,kwargs",
+    [
+        ("so_hash_n4", dict(rate=3.4, n=4, seed=1, assign="hash")),
+        ("so_rr_n8", dict(rate=6.4, n=8, seed=3, assign="rr")),
+    ],
+)
+def test_scale_out_parity(key, kwargs):
+    r = simulate_scale_out(
+        kwargs["rate"], 1.0, kwargs["n"], 20_000, "M",
+        seed=kwargs["seed"], assign=kwargs["assign"],
+    )
+    _close(_qstats(r), key)
+
+
+def test_protocol_corec_parity():
+    r = simulate_protocol(
+        4, "corec", 3.5, 1.0, claim_overhead=0.1, cas_retry_cost=0.2,
+        batch=16, n_jobs=20_000, service="M", seed=5,
+    )
+    _close(_qstats(r), "proto_corec_n4")
+
+
+# ---------------------------------------------------------------------
+# forwarder.py
+# ---------------------------------------------------------------------
+def test_forwarder_udp_parity():
+    udp = udp_stream(6000, rate_pps=12.0, size=64, seed=3)
+    for pol in ("corec", "scaleout"):
+        done = simulate_forwarder(
+            udp, ForwarderConfig(policy=pol, n_workers=4, seed=4)
+        )
+        _close(_fstats(done, udp), f"fwd_{pol}_udp")
+
+
+def test_forwarder_mawi_parity():
+    mawi = mawi_mix(6000, mean_rate_pps=2.5, seed=22)
+    done = simulate_forwarder(
+        mawi, ForwarderConfig(policy="corec", n_workers=8, seed=154)
+    )
+    _close(_fstats(done, mawi, per_flow=True), "fwd_corec_mawi")
+
+
+# ---------------------------------------------------------------------
+# tcp.py
+# ---------------------------------------------------------------------
+def test_tcp_single_flow_parity():
+    r = simulate_tcp(
+        [(0, 6000, 0.0)],
+        TcpSimConfig(policy="corec", n_workers=4, seed=1, deschedule_prob=1e-3),
+    )[0]
+    _close(
+        {"fct": r.fct, "retx": r.retransmissions, "spurious": r.spurious},
+        "tcp_corec_single",
+    )
+
+
+@pytest.mark.parametrize("pol", ["corec", "scaleout"])
+def test_tcp_small_flows_parity(pol):
+    flows = [(i, 7, i * 1.5) for i in range(48)]
+    res = simulate_tcp(
+        flows, TcpSimConfig(policy=pol, n_workers=4, service_mean=3.0, seed=3)
+    )
+    f = np.array([x.fct for x in res])
+    _close(
+        {
+            "mean_fct": float(f.mean()),
+            "p95_fct": float(np.percentile(f, 95)),
+            "retx": int(sum(x.retransmissions for x in res)),
+            "spurious": int(sum(x.spurious for x in res)),
+        },
+        f"tcp_{pol}_small",
+    )

@@ -68,15 +68,17 @@ def test_compressed_allreduce_with_error_feedback():
     per step and error feedback keeps the *accumulated* bias near zero."""
     from jax.sharding import Mesh, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("pod",))
+    from repro.compat import make_mesh, shard_map
+
+    mesh = make_mesh((1,), ("pod",))
     g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(128,)))}
     e = error_feedback_init(g)
 
     def f(g, e):
         return compressed_pod_allreduce(g, e, "pod")
 
-    fm = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
-                       out_specs=(P(), P()), check_vma=False)
+    fm = shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                   out_specs=(P(), P()), check_vma=False)
     red, e2 = fm(g, e)
     # single pod: reduction == dequant(quant(g)); residual = g - that
     np.testing.assert_allclose(np.asarray(red["w"] + e2["w"]),

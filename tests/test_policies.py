@@ -1,0 +1,208 @@
+"""RxPolicy registry + new-policy behaviour, on both planes.
+
+Covers the tentpole guarantees:
+* every registered policy resolves for the DES plane (``make_policy``)
+  AND the threaded plane (``make_queue``) from the same name,
+* a generic exactly-once / no-loss property over the whole registry on
+  both planes,
+* hybrid work-stealing is work-conserving (no idle worker while any
+  backlog is non-empty) and actually steals under skew,
+* adaptive-batch claim sizes respect the [min_batch, max_batch] bounds
+  while scaling with backlog.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    available_policies,
+    make_policy,
+    make_queue,
+    rss_hash,
+)
+from repro.core.des import DesItem, EventLoop, WorkerPlane
+from repro.core.dispatch import Item, WorkerPool
+from repro.core.policy import AdaptiveBatchPolicy, HybridStealPolicy
+
+ALL_POLICIES = available_policies()
+N_WORKERS = 4
+
+
+def _run_des(policy_name: str, n_items: int = 800, seed: int = 0, skew: bool = False):
+    """Drive n_items through the DES worker plane; return (done, plane)."""
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(0.3, size=n_items))  # rho ~ 0.83 on 4 workers
+    flows = (
+        np.zeros(n_items, dtype=int)
+        if skew
+        else rng.integers(0, 64, size=n_items)
+    )
+    done: list = []
+    loop = EventLoop()
+    plane = WorkerPlane(
+        loop,
+        make_policy(policy_name, N_WORKERS, batch=8),
+        N_WORKERS,
+        service_fn=lambda item: float(rng.exponential(1.0)),
+        on_complete=lambda t, item: done.append((t, item.payload)),
+        rng=rng,
+        claim_overhead=0.05,
+    )
+    loop.on("arrive", plane.enqueue)
+    for i in range(n_items):
+        loop.schedule(float(arr[i]), "arrive", DesItem(flow=int(flows[i]), payload=i))
+    loop.run()
+    return done, plane
+
+
+# ---------------------------------------------------------------------
+# Registry resolution
+# ---------------------------------------------------------------------
+def test_registry_has_the_five_core_policies():
+    for name in ("corec", "scaleout", "locked", "hybrid", "adaptive-batch"):
+        assert name in ALL_POLICIES
+
+
+def test_unknown_policy_raises_with_catalog():
+    with pytest.raises(ValueError, match="corec"):
+        make_policy("nope", 4)
+    with pytest.raises(ValueError, match="corec"):
+        make_queue("nope", 4, 64)
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_both_planes_resolve(name):
+    pol = make_policy(name, N_WORKERS, batch=8)
+    assert pol.n_workers == N_WORKERS
+    q = make_queue(name, N_WORKERS, 64)
+    for surface in ("produce", "produce_batch", "claim", "complete",
+                    "try_release", "backlog"):
+        assert callable(getattr(q, surface)), (name, surface)
+
+
+# ---------------------------------------------------------------------
+# Generic exactly-once / no-loss property over the registry
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_des_exactly_once_no_loss(name):
+    n = 800
+    done, _ = _run_des(name, n_items=n, seed=7)
+    got = Counter(p for _, p in done)
+    assert len(done) == n
+    assert got == Counter(range(n)), f"{name}: lost/duplicated items"
+    # completion times never precede arrivals
+    assert min(t for t, _ in done) > 0
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_threaded_exactly_once_no_loss(name):
+    n = 600
+    q = make_queue(name, 3, 128)
+    items = [Item(seqno=i, flow=i % 32) for i in range(n)]
+    pool = WorkerPool(q, 3, work_fn=lambda it: None, max_batch=8)
+    res = pool.run_open_loop(items, rate=None, drain_timeout=30)
+    got = Counter(it.seqno for it in res.items)
+    assert got == Counter(range(n)), f"{name}: lost/duplicated items"
+
+
+# ---------------------------------------------------------------------
+# Hybrid: work conservation + stealing
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["corec", "hybrid", "adaptive-batch", "locked"])
+def test_work_conserving_policies_never_idle_with_backlog(name):
+    _, plane = _run_des(name, n_items=1200, seed=11, skew=True)
+    assert plane.stats.idle_with_backlog == 0
+
+
+def test_scaleout_is_not_work_conserving_under_skew():
+    # The contrast case: every flow pinned to one queue leaves the other
+    # three workers idle while the backlog grows.
+    _, plane = _run_des("scaleout", n_items=1200, seed=11, skew=True)
+    assert plane.stats.idle_with_backlog > 0
+
+
+def test_hybrid_steals_under_skew_and_spreads_work():
+    done, plane = _run_des("hybrid", n_items=1200, seed=11, skew=True)
+    pol = plane.policy
+    assert pol.steals > 0 and pol.stolen_items > 0
+    busy = [w for w in plane.stats.per_worker_items if w > 0]
+    assert len(busy) > 1, "stealing should engage more than the pinned worker"
+
+
+def test_hybrid_unit_steal_from_longest_backlog():
+    pol = HybridStealPolicy(n_workers=2, batch=4)
+    # pin everything to queue 0 via hint
+    for i in range(6):
+        pol.enqueue(DesItem(flow=0, payload=i, queue_hint=0))
+    got = pol.next_batch(1)  # own queue empty -> steal from queue 0 head
+    assert [it.payload for it in got] == [0, 1, 2, 3]
+    assert pol.steals == 1 and pol.stolen_items == 4
+    assert [it.payload for it in pol.next_batch(0)] == [4, 5]
+
+
+def test_hybrid_threaded_steal():
+    q = make_queue("hybrid", 2, 64)
+    # flow key that RSS-hashes to ring 0
+    key0 = next(k for k in range(64) if rss_hash(k, 2) == 0)
+    for i in range(8):
+        assert q.produce(i, flow_key=key0)
+    c = q.claim(1, max_batch=4)  # worker 1's own ring is empty -> steal
+    assert c is not None and len(c.payloads) == 4
+    assert q.steals == 1
+    q.complete(1, c)
+    assert q.try_release(1) >= 4
+
+
+# ---------------------------------------------------------------------
+# Adaptive batch: bounds + scaling
+# ---------------------------------------------------------------------
+def test_adaptive_batch_respects_bounds():
+    pol = AdaptiveBatchPolicy(n_workers=4, batch=8, min_batch=2, max_batch=8)
+    for backlog in range(0, 200):
+        eff = pol.effective_batch(backlog)
+        assert 2 <= eff <= 8
+    assert pol.effective_batch(1) == 2  # clamped up to min
+    assert pol.effective_batch(12) == 3  # ceil(12/4)
+    assert pol.effective_batch(1000) == 8  # clamped down to max
+
+
+def test_adaptive_batch_claim_sizes_scale_with_backlog():
+    pol = AdaptiveBatchPolicy(n_workers=2, batch=16, min_batch=1, max_batch=16)
+    for i in range(6):
+        pol.enqueue(DesItem(payload=i))
+    assert len(pol.next_batch(0)) == 3  # ceil(6/2)
+    assert len(pol.next_batch(0)) == 2  # ceil(3/2)
+    assert len(pol.next_batch(0)) == 1
+    assert pol.next_batch(0) == []
+
+
+def test_adaptive_batch_bad_bounds_rejected():
+    with pytest.raises(ValueError):
+        AdaptiveBatchPolicy(n_workers=4, batch=8, min_batch=0)
+    with pytest.raises(ValueError):
+        AdaptiveBatchPolicy(n_workers=4, batch=8, min_batch=4, max_batch=2)
+
+
+def test_adaptive_batch_threaded_bounds():
+    q = make_queue("adaptive-batch", 4, 64, min_batch=1, max_batch=4)
+    for i in range(32):
+        assert q.produce(i)
+    c = q.claim(0, max_batch=32)
+    assert c is not None and 1 <= len(c.payloads) <= 4
+    q.complete(0, c)
+    q.try_release(0)
+
+
+# ---------------------------------------------------------------------
+# Locked: serialization hook
+# ---------------------------------------------------------------------
+def test_locked_policy_serializes_claims():
+    pol = make_policy("locked", 2, batch=4)
+    assert pol.claim_start(0, 5.0) == 5.0
+    pol.claim_release(0, 9.0)  # lock held until t=9
+    assert pol.claim_start(1, 5.0) == 9.0  # peer waits on the horizon
+    assert pol.claim_start(1, 12.0) == 12.0  # free lock: no wait
