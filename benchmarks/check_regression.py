@@ -1,0 +1,121 @@
+"""CI benchmark-regression guard for the ``--quick`` smoke pass.
+
+Compares the per-policy latency metrics of a fresh
+``benchmarks/run.py --quick`` run (``results/quick/``) against the
+tracked baselines in ``benchmarks/regression_baselines.json`` with a
+generous tolerance (default 2x — quick sizes on shared CI runners are
+noisy; the guard exists to catch order-of-magnitude breakage like an
+accidentally-serialized plane or a policy that stopped batching, not
+1.1x drift).
+
+A metric regresses when ``observed > baseline * tolerance``; the guard
+fails the workflow naming every offending (source, policy, metric)
+triple.  Metrics that *improve* never fail (a lower p99 is progress,
+and quick-size variance would make a two-sided check flap).  Missing
+files, policies or metrics fail too — a benchmark silently dropping a
+policy is exactly the kind of breakage this guard is for.
+
+Usage (CI):
+    python -m benchmarks.check_regression \
+        --results benchmarks/results/quick \
+        --baselines benchmarks/regression_baselines.json \
+        --tolerance 2.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+
+
+def _load(path: Path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def collect_metrics(results_dir: Path) -> dict:
+    """Flatten the quick-run JSONs into {source/policy: {metric: value}}."""
+    out: dict = {}
+    ps = results_dir / "policy_sweep.json"
+    if ps.exists():
+        sweep = _load(ps)
+        for wl in ("udp", "mawi"):
+            rows = sweep.get("workloads", {}).get(wl, {})
+            for pol, row in rows.items():
+                key = f"policy_sweep/{wl}/{pol}"
+                out[key] = {
+                    "p50_us": row["p50_us"],
+                    "p99_us": row["p99_us"],
+                }
+    js = results_dir / "jax_sweep.json"
+    if js.exists():
+        sweep = _load(js)
+        for pol, row in sweep.get("policies", {}).items():
+            out[f"jax_sweep/{pol}"] = {
+                "p50_median": row["p50_median"],
+                "p99_median": row["p99_median"],
+            }
+    return out
+
+
+def check(results_dir: Path, baselines_path: Path, tolerance: float) -> list:
+    """Returns a list of human-readable failure strings (empty = pass)."""
+    failures = []
+    if not results_dir.exists():
+        return [f"results dir missing: {results_dir} (did --quick run?)"]
+    observed = collect_metrics(results_dir)
+    baselines = _load(baselines_path)["metrics"]
+    if not observed:
+        return [f"no quick metrics found under {results_dir}"]
+    for key, metrics in sorted(baselines.items()):
+        got_row = observed.get(key)
+        if got_row is None:
+            failures.append(f"{key}: missing from quick results")
+            continue
+        for metric, base in sorted(metrics.items()):
+            got = got_row.get(metric)
+            if got is None:
+                failures.append(f"{key}: metric {metric} missing")
+            elif not got <= base * tolerance:  # NaN fails too, on purpose
+                failures.append(
+                    f"{key}: {metric} regressed {got:.3f} > "
+                    f"{base:.3f} * {tolerance:g} (baseline)"
+                )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--results",
+        type=Path,
+        default=HERE / "results" / "quick",
+        help="directory holding the --quick run JSONs",
+    )
+    ap.add_argument(
+        "--baselines",
+        type=Path,
+        default=HERE / "regression_baselines.json",
+    )
+    ap.add_argument("--tolerance", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    failures = check(args.results, args.baselines, args.tolerance)
+    if failures:
+        print(f"REGRESSION GUARD FAILED ({len(failures)}):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    n = len(_load(args.baselines)["metrics"])
+    print(
+        f"regression guard: {n} policy rows within {args.tolerance:g}x "
+        f"of baselines"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

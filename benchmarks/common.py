@@ -5,7 +5,7 @@ from __future__ import annotations
 import json
 import time
 from pathlib import Path
-from typing import Callable, List
+from typing import Callable
 
 RESULTS = Path(__file__).resolve().parent / "results"
 

@@ -1,0 +1,133 @@
+"""Registry-wide vectorized sweep on the jax plane (one jit per policy).
+
+The payoff of :mod:`repro.core.jaxplane`: where ``policy_sweep.py``
+evaluates one (policy, config, seed) point per Python event loop, this
+benchmark evaluates the whole parameter grid of every jax-capable
+policy — claim batch x offered rate x deschedule probability x seeds,
+>= 1000 lanes per policy — in a SINGLE jitted ``lax.scan``/``vmap``
+call per policy, with latency percentiles and RFC-4737 reordering
+computed in-graph and the exactly-once invariant checked from the
+packed claim bitmaps (multi-ring done-prefix kernel).
+
+Skips with a named notice (not a crash) on hosts without jax.
+
+Results land in ``benchmarks/results/jax_sweep.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit, save_json
+
+N_WORKERS = 4
+MAX_BATCH = 64
+
+#: the sweep grid: 6 x 4 x 3 = 72 configs; x 14 seeds = 1008 lanes/policy
+AXES = {
+    "batch": [1, 2, 4, 8, 16, 32],
+    "rate": [20.0, 30.0, 40.0, 50.0],
+    "deschedule_prob": [0.0, 5e-4, 5e-3],
+}
+N_SEEDS = 14
+
+
+def run(n_packets: int = 2000, n_seeds: int = N_SEEDS, workload: str = "udp"):
+    try:
+        import jax  # noqa: F401
+    except Exception as e:  # pragma: no cover - exercised on bare hosts
+        notice = f"jax unavailable ({e.__class__.__name__}: {e})"
+        emit("jax_sweep/SKIPPED", 0.0, notice)
+        return {"skipped": notice}
+
+    from repro.core import jax_policies
+    from repro.core.jaxplane import LaneParams, TrafficParams, lane_grid, run_lanes
+
+    lanes_arrays, points = lane_grid(AXES, np.arange(n_seeds))
+    seeds = lanes_arrays.pop("__seeds__")
+    lanes = seeds.shape[0]
+    n_cfg = lanes // n_seeds
+    lane_kw_base = {k: v for k, v in lanes_arrays.items() if k in LaneParams._fields}
+    traffic_kw = {k: v for k, v in lanes_arrays.items() if k in TrafficParams._fields}
+
+    out: dict = {
+        "workload": workload,
+        "n_workers": N_WORKERS,
+        "n_packets": n_packets,
+        "lanes_per_policy": int(lanes),
+        "axes": {k: list(map(float, v)) for k, v in AXES.items()},
+        "n_seeds": int(n_seeds),
+        "policies": {},
+    }
+    for pol in jax_policies():
+        lane_kw = dict(lane_kw_base)
+        if pol == "adaptive-batch":
+            # the swept knob is the adaptive clamp, not a fixed size
+            lane_kw["max_batch"] = lane_kw["batch"]
+        t0 = time.perf_counter()
+        res = run_lanes(
+            pol,
+            seeds,
+            lane_params=lane_kw,
+            traffic_params=traffic_kw,
+            workload=workload,
+            n_packets=n_packets,
+            n_workers=N_WORKERS,
+            max_batch=MAX_BATCH,
+        )
+        p50 = np.asarray(res.p50)  # blocks until the device is done
+        wall = time.perf_counter() - t0
+        p99 = np.asarray(res.p99)
+        pop = np.asarray(res.claimed_popcount)
+        pref = np.asarray(res.claimed_prefix)
+        items = np.asarray(res.items)
+        ok_pop = bool((pop == n_packets).all())
+        ok_pref = bool((pref == n_packets).all())
+        ok_items = bool((items == n_packets).all())
+        lossless = ok_pop and ok_pref and ok_items
+        # median across seeds within each config -> per-config rows
+        p50_cfg = np.median(p50.reshape(n_cfg, n_seeds), axis=1)
+        p99_cfg = np.median(p99.reshape(n_cfg, n_seeds), axis=1)
+        reorder_cfg = np.median(
+            np.asarray(res.reorder_pct).reshape(n_cfg, n_seeds), axis=1
+        )
+        configs = []
+        for c in range(n_cfg):
+            cfg = dict(points[c * n_seeds][0])
+            cfg["p50"] = float(p50_cfg[c])
+            cfg["p99"] = float(p99_cfg[c])
+            cfg["reorder_pct"] = float(reorder_cfg[c])
+            configs.append(cfg)
+        row = {
+            "lanes": int(lanes),
+            "lossless": lossless,
+            "wall_s": wall,
+            "lane_points_per_s": lanes / wall,
+            "p50_median": float(np.median(p50)),
+            "p99_median": float(np.median(p99)),
+            "p99_best": float(p99_cfg.min()),
+            "p99_worst": float(p99_cfg.max()),
+            "configs": configs,
+        }
+        out["policies"][pol] = row
+        emit(
+            f"jax_sweep/{pol}",
+            wall * 1e6,
+            f"{lanes} lanes x {n_packets} pkts in one jit "
+            f"({lanes / wall:.0f} lanes/s), p99 med "
+            f"{row['p99_median']:.3f} best {row['p99_best']:.3f}, "
+            f"lossless={lossless}",
+        )
+        if not lossless:
+            raise AssertionError(
+                f"jax_sweep: {pol} violated exactly-once "
+                f"(popcount/prefix/items mismatch)"
+            )
+    save_json("jax_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -54,7 +54,7 @@ def run() -> dict:
     kc = jax.random.normal(ks[1], (8, 4096, Hkv, D), jnp.float32)
     vc = jax.random.normal(ks[2], (8, 4096, Hkv, D), jnp.float32)
     lengths = jnp.full((8,), 4096, jnp.int32)
-    g = jax.jit(lambda a, b, c, l: ops.decode_attention(a, b, c, l, impl="xla"))
+    g = jax.jit(lambda a, b, c, ln: ops.decode_attention(a, b, c, ln, impl="xla"))
     g(q1, kc, vc, lengths).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(5):

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import simulate_scale_out, simulate_scale_up
 

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import mawi_mix, per_flow_reordering
 from repro.core.forwarder import ForwarderConfig, simulate_forwarder

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import measure_reordering, udp_stream
 from repro.core.forwarder import ForwarderConfig, simulate_forwarder

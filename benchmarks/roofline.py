@@ -6,7 +6,6 @@ useful-FLOPs fraction.  Writes benchmarks/results/roofline.md."""
 from __future__ import annotations
 
 import json
-from pathlib import Path
 
 from .common import RESULTS, emit
 

@@ -15,7 +15,6 @@ from __future__ import annotations
 import hashlib
 import time
 
-import numpy as np
 
 from repro.core import simulate_protocol
 from repro.core.dispatch import Item, WorkerPool, make_queue

@@ -12,7 +12,7 @@ decode / long-context-decode).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 __all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "shape_by_name"]

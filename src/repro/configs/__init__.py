@@ -7,7 +7,7 @@ config for CPU smoke tests; ``ALL_ARCHS`` lists the 10 assigned ids.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from ..config import ArchConfig
 

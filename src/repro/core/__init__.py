@@ -7,7 +7,8 @@ Layout (see ROADMAP.md "Module map" for the full picture):
   baseline.py      threaded queue drivers (RSS / locked / hybrid / ...)
   dispatch.py      worker pools draining any registered queue policy
   des.py           unified discrete-event core (event loop + worker plane)
-  policy.py        RxPolicy plugins + the registry both planes share
+  policy.py        RxPolicy plugins + the registry all planes share
+  jaxplane.py      vectorized jax plane (lax.scan step fn, vmap lanes)
   queueing.py      M/G/N vs N x M/G/1 scenario layer (sec 3.2)
   forwarder.py     open-loop L3-forwarder scenario layer (sec 4.3.1)
   tcp.py           TCP-over-forwarder scenario layer (sec 4.3.2)
@@ -31,6 +32,8 @@ from .policy import (
     RxPolicy,
     available_policies,
     get_spec,
+    jax_policies,
+    make_jax_policy,
     make_policy,
     make_thread_queue,
     register_policy,
@@ -41,6 +44,7 @@ from .queueing import (
     simulate_scale_out,
     simulate_scale_up,
     sweep_load,
+    sweep_policy_jax,
 )
 from .reorder import ReorderReport, measure_reordering, per_flow_reordering
 from .ring import Claim, CorecRing, RingStats
@@ -53,10 +57,11 @@ __all__ = [
     "HybridStealDriver", "AdaptiveBatchSharedQueue",
     "DesItem", "EventLoop", "PlaneStats", "WorkerPlane",
     "RxPolicy", "available_policies", "get_spec", "make_policy",
-    "make_thread_queue", "register_policy",
+    "make_thread_queue", "register_policy", "jax_policies",
+    "make_jax_policy",
     "DispatchResult", "Item", "WorkerPool", "make_queue",
     "simulate_policy", "simulate_protocol", "simulate_scale_out",
-    "simulate_scale_up", "sweep_load",
+    "simulate_scale_up", "sweep_load", "sweep_policy_jax",
     "ReorderReport", "measure_reordering", "per_flow_reordering",
     "FlowResult", "TcpSimConfig", "simulate_tcp",
     "MSS", "FlowSpec", "Packet", "flow_packets", "mawi_mix", "udp_stream",

@@ -18,10 +18,10 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, List, Optional
 
-from .policy import available_policies, make_thread_queue
+from .policy import make_thread_queue
 
 __all__ = ["Item", "DispatchResult", "WorkerPool", "make_queue"]
 

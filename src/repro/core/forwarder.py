@@ -32,7 +32,7 @@ from .des import DesItem, EventLoop, WorkerPlane
 from .policy import make_policy
 from .traffic import Packet
 
-__all__ = ["ForwarderConfig", "simulate_forwarder"]
+__all__ = ["ForwarderConfig", "simulate_forwarder", "sweep_forwarder_jax"]
 
 
 @dataclass
@@ -84,3 +84,41 @@ def simulate_forwarder(
     # "done"-event heap produced.
     out.sort(key=lambda x: x[0])
     return out
+
+
+def sweep_forwarder_jax(
+    policy: str,
+    seeds,
+    workload: str = "udp",
+    n_packets: int = 2000,
+    n_workers: int = 4,
+    n_flows: int = 256,
+    lane_params: dict | None = None,
+    traffic_params: dict | None = None,
+    **kw,
+):
+    """Vectorized counterpart of :func:`simulate_forwarder` sweeps.
+
+    Evaluates one forwarder configuration per (lane-param, seed) lane —
+    all lanes in a single jitted scan on the jax plane
+    (:mod:`repro.core.jaxplane`) with the same per-size lognormal cost
+    model, returning per-lane p50/p99/mean sojourn and RFC-4737
+    reordering computed in-graph.  ``workload`` is ``'udp'`` (Fig 7
+    regime) or ``'mawi'`` (Table 4 regime); scalars in ``lane_params``
+    / ``traffic_params`` broadcast, arrays sweep.  Requires jax; import
+    is deferred so this module stays importable without it.
+    """
+    from . import jaxplane
+
+    return jaxplane.run_lanes(
+        policy,
+        seeds,
+        lane_params=lane_params,
+        traffic_params=traffic_params,
+        workload=workload,
+        service="fwd",
+        n_packets=n_packets,
+        n_workers=n_workers,
+        n_flows=n_flows,
+        **kw,
+    )

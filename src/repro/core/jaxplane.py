@@ -1,0 +1,585 @@
+"""Vectorized JAX execution plane: the registry's third simulator.
+
+The DES plane (:mod:`repro.core.des`) evaluates one (policy, config,
+seed) point per Python event loop — minutes of wall clock for a
+registry-wide sweep.  This module re-states the same receive-side model
+as a pure JAX program: a queueing/forwarder **step function** advanced
+by ``lax.scan`` over claim events and ``vmap``-ed over a
+(policy-param, seed) **lane** axis, so thousands of sweep points
+evaluate in ONE jitted call (``benchmarks/jax_sweep.py``).
+
+Model (matches the DES plane's dynamics, not its RNG stream — parity is
+distributional, see ``tests/test_jaxplane.py``):
+
+* Packets are pre-drawn per lane (arrivals sorted, per-packet service
+  times, flow keys) exactly like the scenario layers pre-draw them.
+* State per lane: per-queue claim pointers, per-worker free times, a
+  lock horizon (``locked`` only) and a **word-packed claim bitmap** in
+  the AtomicBitmap layout of ``core/ring.py`` — one bit per packet, set
+  when its batch is claimed.
+* One scan step = one batch claim: the worker with the earliest
+  feasible claim time takes ``next_batch(backlog)`` packets from its
+  queue, pays the claim overhead (+ a rare deschedule stall), and its
+  per-packet completions are scattered into the completion-time vector.
+  N steps drain N packets (every active step claims >= 1).
+
+Policies plug in as :class:`JaxPolicy` — pure-function analogues of
+:class:`repro.core.policy.RxPolicy`'s two decisions over arrays:
+``select_queue`` (steering, vectorized over flow keys) and
+``next_batch`` (claim sizing from the instantaneous backlog).  The
+registry's ``PolicySpec.jax_factory`` resolves the same names
+(``corec`` / ``scaleout`` / ``locked`` / ``adaptive-batch``) to these;
+``hybrid`` has no vectorized analogue yet (stealing couples queues
+through the argmax of backlogs — see ROADMAP open items).
+
+Latency and RFC-4737 reordering accounting run **in-graph**: sojourn
+percentiles, the Type-P-Reordered ratio (NextExp via a running max over
+the completion order) and the max reordering distance are computed per
+lane inside the jit, and the exactly-once invariant is checked from the
+packed claim bitmaps with the multi-ring done-prefix kernel
+(:func:`repro.kernels.ops.done_prefix_packed` — Pallas fast path on
+TPU, interpret/XLA fallback on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kernel_ops
+
+__all__ = [
+    "JaxPolicy",
+    "LaneParams",
+    "TrafficParams",
+    "LaneResult",
+    "JAX_POLICIES",
+    "jax_policy_names",
+    "build_policy",
+    "rss_hash32",
+    "reorder_metrics",
+    "lane_grid",
+    "run_lanes",
+]
+
+_MAWI_SIZES = np.array([40, 64, 120, 576, 1420, 1500], dtype=np.float32)
+_MAWI_WEIGHTS = np.array([0.28, 0.12, 0.08, 0.10, 0.12, 0.30])
+_MAWI_WEIGHTS = _MAWI_WEIGHTS / _MAWI_WEIGHTS.sum()
+
+
+# ----------------------------------------------------------------------
+# Parameter pytrees: one leaf value per lane (vmap axis 0)
+# ----------------------------------------------------------------------
+class LaneParams(NamedTuple):
+    """Per-lane policy knobs (each field is a scalar or a [lanes] array)."""
+
+    batch: jnp.ndarray  # claim-size cap (corec/scaleout/locked)
+    min_batch: jnp.ndarray  # adaptive-batch lower clamp
+    max_batch: jnp.ndarray  # adaptive-batch upper clamp
+    claim_overhead: jnp.ndarray  # per-batch claim cost (DD scan + CAS)
+    deschedule_prob: jnp.ndarray  # per-batch Bernoulli stall probability
+    deschedule_mean: jnp.ndarray  # exponential stall length
+
+
+class TrafficParams(NamedTuple):
+    """Per-lane workload knobs (forwarder cost model + arrival process)."""
+
+    rate: jnp.ndarray  # packets per unit time
+    pkt_size: jnp.ndarray  # bytes (udp workload)
+    burstiness: jnp.ndarray  # lognormal sigma of mawi gaps
+    base_service: jnp.ndarray  # per-packet CPU cost
+    per_byte: jnp.ndarray  # per-byte cache-touch cost
+    service_jitter: jnp.ndarray  # lognormal sigma of service times
+    mean_service: jnp.ndarray  # mean for the M/D/LN service kinds
+
+
+def default_lane_params(**kw) -> dict:
+    d = dict(
+        batch=32,
+        min_batch=1,
+        max_batch=32,
+        claim_overhead=0.05,
+        deschedule_prob=0.0,
+        deschedule_mean=30.0,
+    )
+    d.update(kw)
+    return d
+
+
+def default_traffic_params(**kw) -> dict:
+    d = dict(
+        rate=40.0,
+        pkt_size=64.0,
+        burstiness=0.9,
+        base_service=0.07,
+        per_byte=1e-5,
+        service_jitter=0.25,
+        mean_service=1.0,
+    )
+    d.update(kw)
+    return d
+
+
+class LaneResult(NamedTuple):
+    """Per-lane outputs of :func:`run_lanes` (each field is [lanes])."""
+
+    p50: jnp.ndarray
+    p99: jnp.ndarray
+    mean: jnp.ndarray
+    reorder_pct: jnp.ndarray  # RFC 4737 Type-P-Reordered ratio * 100
+    max_distance: jnp.ndarray  # RFC 4737 max reordering distance
+    throughput: jnp.ndarray  # packets per unit time over the busy span
+    batches: jnp.ndarray  # claims issued
+    items: jnp.ndarray  # packets claimed (== n_packets when lossless)
+    deschedules: jnp.ndarray
+    claimed_popcount: jnp.ndarray  # set bits in the packed claim bitmap
+    claimed_prefix: jnp.ndarray  # contiguous done prefix of that bitmap
+    sojourn: jnp.ndarray  # [lanes, n] per-packet latency, or [lanes, 0]
+
+
+# ----------------------------------------------------------------------
+# JaxPolicy: pure-function analogues of RxPolicy's two decisions
+# ----------------------------------------------------------------------
+class JaxPolicy(NamedTuple):
+    """A scheduling discipline as pure functions over arrays.
+
+    ``select_queue(flows, n_workers) -> int32[n]`` is the NIC-side
+    steering decision (vectorized over all packets up front);
+    ``next_batch(backlog, params, n_workers) -> int32`` is the
+    driver-side claim-size decision from the instantaneous backlog.
+    ``shared`` means every worker drains queue 0 (single-queue
+    disciplines); ``uses_lock`` serializes claims on a lock horizon
+    (the Metronome-class baseline).
+    """
+
+    name: str
+    shared: bool
+    uses_lock: bool
+    select_queue: object
+    next_batch: object
+
+
+def _fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer on uint32 — the plane's RSS hash stand-in."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def rss_hash32(key, n_queues: int):
+    """Host-side mirror of the plane's steering hash (numpy, vectorized).
+
+    The DES/threaded planes hash with 64-bit murmur mixing
+    (``baseline.rss_hash``); jax's default x32 mode has no uint64, so
+    the jax plane uses the murmur3 32-bit finalizer instead.  Parity
+    tests feed these values to the DES plane as ``queue_hint`` so both
+    planes steer identically.
+    """
+    h = np.asarray(key, dtype=np.uint32)
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> np.uint32(16))
+    return h % np.uint32(n_queues)
+
+
+def _select_shared(flows, n_workers):
+    return jnp.zeros_like(flows, dtype=jnp.int32)
+
+
+def _select_rss(flows, n_workers):
+    h = _fmix32(flows.astype(jnp.uint32))
+    return (h % jnp.uint32(n_workers)).astype(jnp.int32)
+
+
+def _next_batch_cap(backlog, params, n_workers):
+    return jnp.minimum(params.batch.astype(jnp.int32), backlog)
+
+
+def _next_batch_adaptive(backlog, params, n_workers):
+    share = (backlog + n_workers - 1) // n_workers
+    return jnp.clip(
+        share,
+        params.min_batch.astype(jnp.int32),
+        params.max_batch.astype(jnp.int32),
+    )
+
+
+# Built-in vectorized analogues.  Keep in sync with the jax_factory
+# entries registered in repro.core.policy (pinned by
+# tests/test_jaxplane.py::test_registry_and_jaxplane_catalogs_agree).
+JAX_POLICIES = {
+    "corec": JaxPolicy("corec", True, False, _select_shared, _next_batch_cap),
+    "scaleout": JaxPolicy("scaleout", False, False, _select_rss, _next_batch_cap),
+    "locked": JaxPolicy("locked", True, True, _select_shared, _next_batch_cap),
+    "adaptive-batch": JaxPolicy(
+        "adaptive-batch", True, False, _select_shared, _next_batch_adaptive
+    ),
+}
+
+
+def jax_policy_names() -> list:
+    return sorted(JAX_POLICIES)
+
+
+def build_policy(name: str) -> JaxPolicy:
+    """Resolve a registry policy name to its vectorized analogue."""
+    try:
+        return JAX_POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"policy {name!r} has no jax-plane analogue; "
+            f"vectorized: {jax_policy_names()}"
+        ) from None
+
+
+# ----------------------------------------------------------------------
+# Traffic generation (in-graph, per lane)
+# ----------------------------------------------------------------------
+def _gen_traffic(
+    key, tp: TrafficParams, workload: str, service: str, n: int, n_flows: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    kg, kf, ks, kv = jax.random.split(key, 4)
+    if workload == "udp":
+        gaps = jax.random.exponential(kg, (n,)) / tp.rate
+        sizes = jnp.full((n,), tp.pkt_size, dtype=jnp.float32)
+        flows = jax.random.randint(kf, (n,), 0, n_flows)
+    elif workload == "mawi":
+        sigma = tp.burstiness
+        mu = jnp.log(1.0 / tp.rate) - sigma**2 / 2
+        gaps = jnp.exp(jax.random.normal(kg, (n,)) * sigma + mu)
+        sizes = jax.random.choice(
+            ks, jnp.asarray(_MAWI_SIZES), (n,), p=jnp.asarray(_MAWI_WEIGHTS)
+        )
+        zipf = 1.0 / np.arange(1, n_flows + 1) ** 1.1
+        zipf = jnp.asarray(zipf / zipf.sum())
+        flows = jax.random.choice(kf, n_flows, (n,), p=zipf)
+    else:
+        raise ValueError(f"unknown workload {workload!r}")
+    arr = jnp.cumsum(gaps)
+    if service == "fwd":  # the forwarder's per-size lognormal cost model
+        mean = tp.base_service + tp.per_byte * sizes
+        sj = tp.service_jitter
+        svc = jnp.exp(jax.random.normal(kv, (n,)) * sj + jnp.log(mean) - sj**2 / 2)
+    elif service == "M":
+        svc = jax.random.exponential(kv, (n,)) * tp.mean_service
+    elif service == "D":
+        svc = jnp.full((n,), tp.mean_service, dtype=jnp.float32)
+    elif service == "LN":
+        sigma = 0.8
+        mu = jnp.log(tp.mean_service) - sigma**2 / 2
+        svc = jnp.exp(jax.random.normal(kv, (n,)) * sigma + mu)
+    else:
+        raise ValueError(f"unknown service kind {service!r}")
+    return arr.astype(jnp.float32), svc.astype(jnp.float32), flows
+
+
+def reorder_metrics(done_times: jnp.ndarray):
+    """RFC 4737 NextExp metrics, in-graph, from completion times.
+
+    Packet i's sequence number is its generation index (arrivals are
+    generated in seqno order), so the completion order is
+    ``argsort(done_times)`` and a packet is Type-P-Reordered iff its
+    seqno is below the running max of seqnos completed before it.
+    Returns ``(reordered_ratio, max_distance)`` — the packet-flavour
+    reordering distance of RFC 4737 section 4.4 (displacement of a
+    reordered packet past its in-order slot), matching
+    :func:`repro.core.reorder.measure_reordering` on the same stream.
+    """
+    n = done_times.shape[0]
+    order = jnp.argsort(done_times)  # completion order -> seqnos
+    comp_seq = order.astype(jnp.int32)
+    cummax = jax.lax.cummax(comp_seq)
+    reordered = comp_seq < cummax  # NextExp: below the running max
+    pos_of = jnp.argsort(order).astype(jnp.int32)  # seqno -> position
+    disp = pos_of - jnp.arange(n, dtype=jnp.int32)
+    dist = jnp.where((disp > 0) & reordered[pos_of], disp, 0)
+    return jnp.mean(reordered.astype(jnp.float32)), jnp.max(dist)
+
+
+# ----------------------------------------------------------------------
+# The step function: one batch claim per scan step
+# ----------------------------------------------------------------------
+def _simulate_lane(
+    policy: JaxPolicy,
+    params: LaneParams,
+    arr: jnp.ndarray,  # [n] sorted arrival times
+    svc: jnp.ndarray,  # [n] per-packet service times
+    flows: jnp.ndarray,  # [n] flow keys
+    key,  # PRNG key for the deschedule draws
+    n_workers: int,
+    max_batch: int,
+):
+    n = arr.shape[0]
+    w_count = n_workers
+    mb = max_batch
+    n_words = (n + 31) // 32
+
+    qid = policy.select_queue(flows, w_count)  # [n] in [0, W)
+    # rank of each packet within its queue (arrival order is global order)
+    rank = jnp.zeros(n, dtype=jnp.int32)
+    for w in range(w_count):
+        m = qid == w
+        rank = jnp.where(m, jnp.cumsum(m.astype(jnp.int32)) - 1, rank)
+    # q_idx[w, r] = global index of queue w's r-th packet (pad: n)
+    q_idx = jnp.full((w_count, n + mb), n, dtype=jnp.int32)
+    q_idx = q_idx.at[qid, rank].set(jnp.arange(n, dtype=jnp.int32))
+    # q_arr[w, r] = its arrival time (pad: +inf, keeps rows sorted)
+    q_arr = jnp.full((w_count, n + 1), jnp.inf, dtype=jnp.float32)
+    q_arr = q_arr.at[qid, rank].set(arr)
+    svc_pad = jnp.concatenate([svc, jnp.zeros(1, dtype=jnp.float32)])
+
+    # every worker drains queue 0 (shared) or its own queue (per-flow)
+    if policy.shared:
+        worker_queue = jnp.zeros(w_count, dtype=jnp.int32)
+    else:
+        worker_queue = jnp.arange(w_count, dtype=jnp.int32)
+
+    ku, ke = jax.random.split(key)
+    u_desch = jax.random.uniform(ku, (n,))
+    stalls = jax.random.exponential(ke, (n,)).astype(jnp.float32)
+
+    def step(state, xs):
+        qptr, free_t, lock_t, done_t, words, batches, items, deschs = state
+        u, stall = xs
+        ptr_w = qptr[worker_queue]  # [W]
+        arr_next = q_arr[worker_queue, jnp.minimum(ptr_w, n)]  # [W]
+        t_cand = jnp.maximum(free_t, arr_next)
+        if policy.uses_lock:
+            t_cand = jnp.maximum(t_cand, lock_t)
+        w = jnp.argmin(t_cand)
+        t0 = t_cand[w]
+        active = jnp.isfinite(t0)
+        q = worker_queue[w]
+        # backlog at claim time: arrivals <= t0 minus already-claimed
+        row_arr = jnp.take(q_arr, q, axis=0)
+        n_arrived = jnp.searchsorted(row_arr, t0, side="right")
+        backlog = n_arrived.astype(jnp.int32) - qptr[q]
+        k = policy.next_batch(backlog, params, w_count)
+        k = jnp.clip(k, 1, jnp.minimum(backlog, mb))
+        k = jnp.where(active, k, 0)
+        desch = active & (u < params.deschedule_prob)
+        stall_t = jnp.where(desch, stall * params.deschedule_mean, 0.0)
+        t1 = t0 + params.claim_overhead + stall_t
+        # the claimed window: global packet ids, then per-item service
+        row_idx = jnp.take(q_idx, q, axis=0)
+        g = jax.lax.dynamic_slice(row_idx, (qptr[q],), (mb,))
+        valid = jnp.arange(mb) < k
+        gi = jnp.where(valid, g, n)
+        s = jnp.where(valid, svc_pad[gi], 0.0)
+        comp = t1 + jnp.cumsum(s)
+        done_t = done_t.at[gi].set(jnp.where(valid, comp, jnp.inf))
+        t_end = t1 + jnp.sum(s)
+        free_t = free_t.at[w].set(jnp.where(active, t_end, free_t[w]))
+        if policy.uses_lock:
+            # lock held through claim + stall; service runs outside it
+            lock_t = jnp.where(active, t1, lock_t)
+        qptr = qptr.at[q].add(k)
+        # packed claim bitmap: OR this batch's bits into its words
+        widx = jnp.where(valid, gi >> 5, n_words)
+        bit = jnp.left_shift(jnp.uint32(1), (gi & 31).astype(jnp.uint32))
+        delta = jnp.zeros(n_words + 1, dtype=jnp.uint32).at[widx].add(
+            jnp.where(valid, bit, jnp.uint32(0))
+        )
+        words = words | delta[:n_words]
+        batches = batches + active.astype(jnp.int32)
+        items = items + k
+        deschs = deschs + desch.astype(jnp.int32)
+        return (qptr, free_t, lock_t, done_t, words, batches, items, deschs), None
+
+    zero = jnp.int32(0)
+    state0 = (
+        jnp.zeros(w_count, dtype=jnp.int32),  # qptr
+        jnp.zeros(w_count, dtype=jnp.float32),  # free_t
+        jnp.float32(0.0),  # lock horizon
+        jnp.full(n + 1, jnp.inf, dtype=jnp.float32),  # done_t (+dump slot)
+        jnp.zeros(n_words, dtype=jnp.uint32),  # claim bitmap words
+        zero,
+        zero,
+        zero,
+    )
+    state, _ = jax.lax.scan(step, state0, (u_desch, stalls))
+    _, _, _, done_t, words, batches, items, deschs = state
+    done = done_t[:n]
+
+    # ---- in-graph latency + RFC 4737 accounting -----------------------
+    sojourn = done - arr
+    reorder_ratio, max_dist = reorder_metrics(done)
+    q50, q99 = jnp.percentile(sojourn, jnp.asarray([50.0, 99.0]))
+    span = jnp.max(done) - jnp.min(arr)
+    return dict(
+        p50=q50,
+        p99=q99,
+        mean=jnp.mean(sojourn),
+        reorder_pct=100.0 * reorder_ratio,
+        max_distance=max_dist,
+        throughput=n / span,
+        batches=batches,
+        items=items,
+        deschedules=deschs,
+        claimed_popcount=jnp.sum(jax.lax.population_count(words)).astype(jnp.int32),
+        words=words,
+        sojourn=sojourn,
+    )
+
+
+# ----------------------------------------------------------------------
+# Public entry: one jitted scan over all (policy-param, seed) lanes
+# ----------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "policy",
+        "workload",
+        "service",
+        "n_packets",
+        "n_workers",
+        "max_batch",
+        "n_flows",
+        "prefix_impl",
+        "prefix_interpret",
+        "return_times",
+    ),
+)
+def _run_lanes_jit(
+    params: LaneParams,
+    traffic: TrafficParams,
+    seeds: jnp.ndarray,
+    policy: str,
+    workload: str,
+    service: str,
+    n_packets: int,
+    n_workers: int,
+    max_batch: int,
+    n_flows: int,
+    prefix_impl: str,
+    prefix_interpret: bool,
+    return_times: bool,
+) -> LaneResult:
+    pol = build_policy(policy)
+
+    def one_lane(p, tp, seed):
+        key = jax.random.PRNGKey(seed)
+        kt, kd = jax.random.split(key)
+        arr, svc, flows = _gen_traffic(kt, tp, workload, service, n_packets, n_flows)
+        return _simulate_lane(pol, p, arr, svc, flows, kd, n_workers, max_batch)
+
+    out = jax.vmap(one_lane)(params, traffic, seeds)
+    lanes = seeds.shape[0]
+    # exactly-once, on the packed words, via the multi-ring prefix kernel
+    prefix = kernel_ops.done_prefix_packed(
+        out["words"],
+        jnp.full((lanes,), n_packets, dtype=jnp.int32),
+        n_bits=n_packets,
+        impl=prefix_impl,
+        interpret=prefix_interpret,
+    )
+    sojourn = out["sojourn"] if return_times else out["sojourn"][:, :0]
+    return LaneResult(
+        p50=out["p50"],
+        p99=out["p99"],
+        mean=out["mean"],
+        reorder_pct=out["reorder_pct"],
+        max_distance=out["max_distance"],
+        throughput=out["throughput"],
+        batches=out["batches"],
+        items=out["items"],
+        deschedules=out["deschedules"],
+        claimed_popcount=out["claimed_popcount"],
+        claimed_prefix=prefix,
+        sojourn=sojourn,
+    )
+
+
+def _broadcast_lanes(d: dict, fields, lanes: int, dtype=jnp.float32):
+    vals = []
+    for f in fields:
+        v = jnp.asarray(d[f], dtype=dtype)
+        if v.ndim == 0:
+            v = jnp.full((lanes,), v, dtype=dtype)
+        if v.shape[0] != lanes:
+            raise ValueError(f"param {f!r} has {v.shape[0]} lanes, want {lanes}")
+        vals.append(v)
+    return vals
+
+
+def run_lanes(
+    policy: str,
+    seeds,
+    lane_params: dict | None = None,
+    traffic_params: dict | None = None,
+    workload: str = "udp",
+    service: str = "fwd",
+    n_packets: int = 2000,
+    n_workers: int = 4,
+    max_batch: int = 64,
+    n_flows: int = 256,
+    prefix_impl: str = "auto",
+    prefix_interpret: bool = False,
+    return_times: bool = False,
+) -> LaneResult:
+    """Simulate every lane of a (policy-param, seed) batch in one jit.
+
+    ``lane_params`` / ``traffic_params`` map knob names to scalars (all
+    lanes share the value) or [lanes] arrays (a sweep axis); unknown
+    knobs raise.  ``seeds`` defines the lane count.  Per-batch claim
+    sizes are capped by the static ``max_batch`` (the scan's claimed
+    window width).
+    """
+    seeds = jnp.asarray(seeds, dtype=jnp.uint32)
+    lanes = seeds.shape[0]
+    lp = default_lane_params(**(lane_params or {}))
+    tp = default_traffic_params(**(traffic_params or {}))
+    unknown = set(lp) - set(LaneParams._fields)
+    unknown |= set(tp) - set(TrafficParams._fields)
+    if unknown:
+        raise ValueError(f"unknown sweep knobs: {sorted(unknown)}")
+    params = LaneParams(*_broadcast_lanes(lp, LaneParams._fields, lanes))
+    traffic = TrafficParams(*_broadcast_lanes(tp, TrafficParams._fields, lanes))
+    return _run_lanes_jit(
+        params,
+        traffic,
+        seeds,
+        policy=policy,
+        workload=workload,
+        service=service,
+        n_packets=n_packets,
+        n_workers=n_workers,
+        max_batch=max_batch,
+        n_flows=n_flows,
+        prefix_impl=prefix_impl,
+        prefix_interpret=prefix_interpret,
+        return_times=return_times,
+    )
+
+
+def lane_grid(axes: dict, seeds) -> Tuple[dict, list]:
+    """Cartesian sweep helper: {knob: values} x seeds -> per-lane arrays.
+
+    Returns ``(lane_arrays, points)`` where ``lane_arrays`` maps each
+    knob to a [n_configs * n_seeds] array (seed-major within each
+    config) ready for :func:`run_lanes`, and ``points`` lists one
+    (config dict, seed) pair per lane for labelling results.
+    """
+    names = sorted(axes)
+    grids = np.meshgrid(*[np.asarray(axes[k]) for k in names], indexing="ij")
+    flat = [g.reshape(-1) for g in grids]
+    n_cfg = flat[0].shape[0] if flat else 1
+    seeds = np.asarray(seeds)
+    lane_arrays = {k: np.repeat(v, seeds.shape[0]) for k, v in zip(names, flat)}
+    seed_lanes = np.tile(seeds, n_cfg)
+    points = []
+    for c in range(n_cfg):
+        cfg = {k: flat[i][c].item() for i, k in enumerate(names)}
+        for s in seeds:
+            points.append((cfg, int(s)))
+    lane_arrays["__seeds__"] = seed_lanes
+    return lane_arrays, points

@@ -10,11 +10,18 @@ and a string registry resolves the same names for
   ``queueing.py`` / ``forwarder.py`` / ``tcp.py``, and
 * the threaded plane (:mod:`repro.core.dispatch`'s ``make_queue``, via
   :func:`make_thread_queue`) built on the real ``CorecRing`` /
-  ``ScaleOutDriver`` / ``LockedSharedQueue`` objects,
+  ``ScaleOutDriver`` / ``LockedSharedQueue`` objects, and
+* the vectorized jax plane (:mod:`repro.core.jaxplane`, via
+  :func:`make_jax_policy`): pure-function ``select_queue`` /
+  ``next_batch`` analogues over arrays, evaluated for thousands of
+  (policy-param, seed) lanes in one jitted ``lax.scan``
+  (``benchmarks/jax_sweep.py``),
 
 so a discipline written once is measurable in simulated time across
-UDP / MAWI-mix / TCP workloads and on real threads alike
-(``benchmarks/policy_sweep.py`` sweeps the whole registry).
+UDP / MAWI-mix / TCP workloads, on real threads, and across whole
+parameter sweeps in a single device call
+(``benchmarks/policy_sweep.py`` sweeps the whole registry point-wise;
+``benchmarks/jax_sweep.py`` sweeps it lane-parallel).
 
 Built-in policies and their paper anchors:
 
@@ -68,8 +75,10 @@ __all__ = [
     "register_policy",
     "get_spec",
     "available_policies",
+    "jax_policies",
     "make_policy",
     "make_thread_queue",
+    "make_jax_policy",
 ]
 
 
@@ -258,6 +267,11 @@ class PolicySpec:
     des_factory: Callable[..., RxPolicy]  # (n_workers, batch, **kw)
     thread_factory: Callable[..., Any]  # (n_workers, size, **kw)
     doc: str = ""
+    #: () -> repro.core.jaxplane.JaxPolicy — the policy's pure-function
+    #: analogue for the vectorized jax plane, or None when the
+    #: discipline has no array formulation yet (e.g. hybrid's stealing).
+    #: Kept lazy so the registry imports without jax installed.
+    jax_factory: Optional[Callable[[], Any]] = None
 
 
 _REGISTRY: Dict[str, PolicySpec] = {}
@@ -293,12 +307,45 @@ def make_thread_queue(name: str, n_workers: int, size: int, **kw):
     return get_spec(name).thread_factory(n_workers, size, **kw)
 
 
+def make_jax_policy(name: str):
+    """Resolve a registry name to its vectorized jax-plane analogue.
+
+    Raises ``ValueError`` (naming the policy and the vectorizable set)
+    for registered policies without a jax formulation, so sweeps can
+    catch and skip them by name.
+    """
+    spec = get_spec(name)
+    if spec.jax_factory is None:
+        raise ValueError(
+            f"policy {name!r} has no jax-plane analogue; "
+            f"vectorized: {jax_policies()}"
+        )
+    return spec.jax_factory()
+
+
+def jax_policies() -> List[str]:
+    """Registered policy names that resolve on the jax plane."""
+    return sorted(n for n, s in _REGISTRY.items() if s.jax_factory is not None)
+
+
+def _jax_factory(name: str) -> Callable[[], Any]:
+    # Lazy import: the registry must resolve DES/threaded policies on
+    # hosts without jax; only touching the jax plane requires it.
+    def factory():
+        from . import jaxplane
+
+        return jaxplane.build_policy(name)
+
+    return factory
+
+
 register_policy(
     PolicySpec(
         name="corec",
         des_factory=SharedQueuePolicy,
         thread_factory=lambda n, size, **kw: CorecSharedQueue(size, **kw),
         doc="one shared non-blocking queue, batch claims (the paper)",
+        jax_factory=_jax_factory("corec"),
     )
 )
 register_policy(
@@ -307,6 +354,7 @@ register_policy(
         des_factory=RssPolicy,
         thread_factory=lambda n, size, **kw: ScaleOutDriver(n, size, **kw),
         doc="RSS: N per-worker queues, per-flow hash pinning (DPDK default)",
+        jax_factory=_jax_factory("scaleout"),
     )
 )
 register_policy(
@@ -315,6 +363,7 @@ register_policy(
         des_factory=LockedPolicy,
         thread_factory=lambda n, size, **kw: LockedSharedQueue(size, **kw),
         doc="one shared queue behind a mutex (Metronome-class baseline)",
+        jax_factory=_jax_factory("locked"),
     )
 )
 register_policy(
@@ -331,5 +380,6 @@ register_policy(
         des_factory=AdaptiveBatchPolicy,
         thread_factory=lambda n, size, **kw: AdaptiveBatchSharedQueue(size, n, **kw),
         doc="shared queue, claim size scales with backlog in [min,max]",
+        jax_factory=_jax_factory("adaptive-batch"),
     )
 )

@@ -41,6 +41,7 @@ __all__ = [
     "simulate_scale_out",
     "sweep_load",
     "simulate_protocol",
+    "sweep_policy_jax",
 ]
 
 
@@ -217,6 +218,47 @@ def sweep_load(
         out["scale_up"].append({"mean": up.mean, "p99": up.percentile(99)})
         out["scale_out"].append({"mean": down.mean, "p99": down.percentile(99)})
     return out
+
+
+def sweep_policy_jax(
+    policy: str,
+    seeds,
+    rate: float = 3.2,
+    mean_service: float = 1.0,
+    n_workers: int = 4,
+    n_jobs: int = 2000,
+    service: str = "M",
+    batch=1,
+    claim_overhead=0.0,
+    lane_params: dict | None = None,
+    **kw,
+):
+    """Vectorized counterpart of :func:`simulate_policy`.
+
+    One M/G/system configuration per (lane-param, seed) lane, all lanes
+    in a single jitted scan on the jax plane — the sweep-scale view of
+    the section 3.2 discipline comparison.  ``service`` is 'M'/'D'/'LN'
+    as in :func:`_service_samples`; ``rate``/``batch``/
+    ``claim_overhead`` may be scalars or per-lane arrays.  Requires
+    jax; the import is deferred so this module stays importable
+    without it.
+    """
+    from . import jaxplane
+
+    lp = dict(lane_params or {})
+    lp.setdefault("batch", batch)
+    lp.setdefault("claim_overhead", claim_overhead)
+    return jaxplane.run_lanes(
+        policy,
+        seeds,
+        lane_params=lp,
+        traffic_params=dict(rate=rate, mean_service=mean_service),
+        workload="udp",
+        service=service,
+        n_packets=n_jobs,
+        n_workers=n_workers,
+        **kw,
+    )
 
 
 # ----------------------------------------------------------------------

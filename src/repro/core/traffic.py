@@ -14,8 +14,8 @@ rescale to wall-clock microseconds, the DES benchmarks consume them as-is.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import List
 
 import numpy as np
 

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional
 
 import numpy as np

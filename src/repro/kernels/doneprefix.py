@@ -20,6 +20,16 @@ Two entry points over one kernel:
   in ONE ``pallas_call`` (grid ``(R, n/block_n)``), which is how the
   serving engine releases every lane per step with a single kernel
   launch instead of R.
+* ``done_prefix_packed_pallas`` — ``[R, n_words]`` *word-packed* uint32
+  bitmaps (bit b of word j = slot ``32*j + b``, the AtomicBitmap layout
+  of ``core/ring.py`` and the claim bitmaps of the vectorized jax plane,
+  :mod:`repro.core.jaxplane`).  The prefix is computed without ever
+  unpacking to a bool mask: per word, the trailing-ones count is
+  ``popcount((~w & -~w) - 1)`` (32 for an all-ones word), and the global
+  prefix is the same masked-min reduction as above, over words instead
+  of bits.  Sequence space is linear (no TAIL rotation) — the jax
+  plane's claim bitmaps never wrap; ring-style rotation stays with the
+  bool-mask kernels.
 
 The rotation by ``start`` is done with an index comparison instead of a
 gather (TPU-friendly), and the contiguous run length is a masked min:
@@ -36,7 +46,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["done_prefix_pallas", "done_prefix_batch_pallas"]
+__all__ = [
+    "done_prefix_pallas",
+    "done_prefix_batch_pallas",
+    "done_prefix_packed_pallas",
+]
 
 _DEFAULT_BLOCK = 512
 
@@ -86,6 +100,65 @@ def done_prefix_batch_pallas(
         out_shape=jax.ShapeDtypeStruct((R, 1), jnp.int32),
         interpret=interpret,
     )(se, done)
+    return out[:, 0]
+
+
+def _done_prefix_packed_kernel(
+    lim_ref, words_ref, out_ref, *, n_bits: int, nw: int, bw: int
+):
+    r = pl.program_id(0)
+    i = pl.program_id(1)
+    limit = lim_ref[0, r]
+    w = words_ref[...]  # [1, bw] uint32 tile of bitmap r
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, bw), 1) + i * bw
+    # Trailing-ones count per word without unpacking: the first zero bit
+    # of w is the lowest set bit of ~w; popcount of (lowbit - 1) counts
+    # the ones below it.  All-ones words give ~w == 0 -> popcount of
+    # 0xFFFFFFFF == 32 (no constraint from this word).
+    x = ~w
+    low = x & (jnp.uint32(0) - x)
+    to = jax.lax.population_count(low - jnp.uint32(1)).astype(jnp.int32)
+    cand = idx * 32 + to
+    local = jnp.min(jnp.where((to < 32) & (idx < nw), cand, n_bits))
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = jnp.int32(n_bits)
+
+    cur = jnp.minimum(out_ref[0, 0], local)
+    is_last = i == pl.num_programs(1) - 1
+    out_ref[0, 0] = jnp.where(is_last, jnp.minimum(cur, limit), cur)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "block_w", "interpret")
+)
+def done_prefix_packed_pallas(
+    words: jax.Array,  # [R, n_words] uint32 — packed done/claim bitmaps
+    limit: jax.Array,  # [R] int32 — cap per bitmap
+    n_bits: int | None = None,  # logical bit count (default 32 * n_words)
+    block_w: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:  # [R] int32
+    R, nw = words.shape
+    if n_bits is None:
+        n_bits = 32 * nw
+    bw = min(nw, block_w or _DEFAULT_BLOCK)
+    lim = limit.astype(jnp.int32)[None, :]  # [1, R]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R, pl.cdiv(nw, bw)),
+        in_specs=[pl.BlockSpec((1, bw), lambda r, i, *_: (r, i))],
+        out_specs=pl.BlockSpec((1, 1), lambda r, i, *_: (r, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _done_prefix_packed_kernel, n_bits=n_bits, nw=nw, bw=bw
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        interpret=interpret,
+    )(lim, words)
     return out[:, 0]
 
 

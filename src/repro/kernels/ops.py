@@ -24,7 +24,11 @@ import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention_pallas
-from .doneprefix import done_prefix_batch_pallas, done_prefix_pallas
+from .doneprefix import (
+    done_prefix_batch_pallas,
+    done_prefix_packed_pallas,
+    done_prefix_pallas,
+)
 from .flash_attention import flash_attention_pallas
 from .rmsnorm import rmsnorm_pallas
 from .rwkv6 import rwkv6_pallas
@@ -40,6 +44,7 @@ __all__ = [
     "ssd_step",
     "done_prefix",
     "done_prefix_batch",
+    "done_prefix_packed",
     "on_tpu",
 ]
 
@@ -147,7 +152,9 @@ def rwkv6(
         state = jnp.zeros((B, H, N, N), jnp.float32)
     pad = (-T) % chunk
     if pad and impl != "naive":
-        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        def zpad(a):
+            return jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
         # pad with w=1 (no decay) and k=0 (no contribution)
         r2, k2, v2 = zpad(r), zpad(k), zpad(v)
         w2 = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
@@ -173,7 +180,9 @@ def rwkv6(
         o, s = fn(r2, k2, v2, w2, u, state)
         return o[:, :T], s
     # pallas: fold (B, H) -> BH rows
-    fold = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, Tp, N)
+    def fold(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, Tp, N)
+
     uu = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
     o, s = rwkv6_pallas(
         fold(r2), fold(k2), fold(v2), fold(w2), uu,
@@ -227,7 +236,9 @@ def ssd(
         state = jnp.zeros((Bb, H, P, N), jnp.float32)
     pad = (-T) % chunk
     if pad and impl != "naive":
-        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        def zp(a):
+            return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
         x2, dt2, Bh2, Ch2 = zp(x), zp(dt), zp(Bh), zp(Ch)
     else:
         x2, dt2, Bh2, Ch2 = x, dt, Bh, Ch
@@ -245,7 +256,9 @@ def ssd(
         y, s = fn(x2, dt2, A, Bh2, Ch2, D, state)
         return y[:, :T], s
     # pallas
-    fold3 = lambda a: a.transpose(0, 2, 1, 3).reshape(Bb * H, Tp, a.shape[-1])
+    def fold3(a):
+        return a.transpose(0, 2, 1, 3).reshape(Bb * H, Tp, a.shape[-1])
+
     xk = fold3(x2)
     dtk = dt2.transpose(0, 2, 1).reshape(Bb * H, Tp)
     Ak = jnp.broadcast_to(A[None], (Bb, H)).reshape(Bb * H)
@@ -314,4 +327,25 @@ def done_prefix_batch(
         return ref.done_prefix_batch_ref(done, start, limit)
     return done_prefix_batch_pallas(
         done, start, limit, block_n=block_n, interpret=interpret
+    )
+
+
+def done_prefix_packed(
+    words: jax.Array,  # [R, n_words] uint32 — packed bitmaps (bit b of
+    limit: jax.Array,  # word j = slot 32*j + b), one row per lane/ring
+    n_bits: Optional[int] = None,
+    impl: str = "auto",
+    block_w: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Contiguous done prefix of R word-packed bitmaps in one launch.
+
+    The packed counterpart of :func:`done_prefix_batch`: consumes the
+    AtomicBitmap word layout directly (as kept by the vectorized jax
+    plane's claim accounting) instead of a bool-per-slot mask."""
+    impl = _resolve(impl)
+    if impl in ("naive", "xla"):
+        return ref.done_prefix_packed_ref(words, limit, n_bits=n_bits)
+    return done_prefix_packed_pallas(
+        words, limit, n_bits=n_bits, block_w=block_w, interpret=interpret
     )

@@ -10,7 +10,6 @@ vmaps / reshapes model-layer layouts onto them.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -27,6 +26,7 @@ __all__ = [
     "ssd_chunk_ref",
     "done_prefix_ref",
     "done_prefix_batch_ref",
+    "done_prefix_packed_ref",
 ]
 
 
@@ -109,7 +109,7 @@ def flash_attention_ref(
     qpos = jnp.arange(Sq) + q_offset
 
     def body(carry, blk):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kc, vc, j = blk  # kc: [B, bk, Hkv, D]
         s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kc.astype(jnp.float32))
         kpos = j * block_k + jnp.arange(block_k)
@@ -125,7 +125,7 @@ def flash_attention_ref(
         p = jnp.exp(s - m_safe[..., None])
         p = jnp.where(jnp.isfinite(s), p, 0.0)
         alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
-        l_new = l * alpha + p.sum(axis=-1)
+        l_new = lsum * alpha + p.sum(axis=-1)
         o = jnp.einsum("bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
         acc_new = acc * alpha[..., None] + o
         return (m_new, l_new, acc_new), None
@@ -135,8 +135,8 @@ def flash_attention_ref(
     a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
     kbt = jnp.moveaxis(kb, 1, 0)
     vbt = jnp.moveaxis(vb, 1, 0)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kbt, vbt, jnp.arange(nblk)))
-    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    (m, lsum, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kbt, vbt, jnp.arange(nblk)))
+    out = acc / jnp.maximum(lsum, 1e-37)[..., None]
     return out.reshape(B, Sq, H, D).astype(q.dtype)
 
 
@@ -356,3 +356,21 @@ def done_prefix_batch_ref(
     """Row-wise ``done_prefix_ref`` over ``[R, n]`` masks with per-row
     start/limit — the oracle for the multi-ring Pallas variant."""
     return jax.vmap(done_prefix_ref)(done, start, limit)
+
+
+def done_prefix_packed_ref(
+    words: jax.Array,  # [R, n_words] uint32 — packed bitmaps, bit b of
+    limit: jax.Array,  # word j is slot 32*j + b (AtomicBitmap layout)
+    n_bits: int | None = None,
+) -> jax.Array:
+    """Contiguous set-bit run from bit 0 of word-packed bitmaps, capped
+    at per-row ``limit`` — the pure-jnp oracle for the packed Pallas
+    variant (unpacks to bools; linear sequence space, no rotation)."""
+    r, nw = words.shape
+    if n_bits is None:
+        n_bits = 32 * nw
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)  # [R, nw, 32]
+    flat = bits.reshape(r, nw * 32)[:, :n_bits].astype(jnp.int32)
+    run = jnp.cumprod(flat, axis=1)
+    return jnp.minimum(run.sum(axis=1), limit).astype(jnp.int32)

@@ -35,7 +35,6 @@ import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from .. import configs
 from ..config import SHAPES, ArchConfig, ShapeConfig, cell_is_applicable, shape_by_name

@@ -10,15 +10,14 @@ microbatch k's gradient collectives.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..config import ArchConfig, ShapeConfig
+from ..config import ArchConfig
 from ..models.api import build_model
 from ..models.spec import abstract_params
 from ..optim import AdamW, OptState, apply_updates

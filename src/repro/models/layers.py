@@ -8,7 +8,6 @@ ArchConfig.  Heavy math dispatches through repro.kernels.ops.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -13,8 +13,7 @@ two token-shift vectors.  This is the arch that OWNS the long_500k shape.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,7 @@ from ..config import ArchConfig
 from ..kernels import ops
 from .layers import cdtype, embed_specs, embed_tokens, norm_specs, apply_norm, label_logprobs, unembed, use_weight
 from .spec import ParamSpec, abstract_params, init_params
-from .transformer import _remat, _stack, scan_stack
+from .transformer import _stack, scan_stack
 
 __all__ = ["Rwkv6LM"]
 

@@ -21,7 +21,6 @@ The logical-axis vocabulary (resolved by repro/sharding.py):
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Tuple

@@ -16,7 +16,7 @@ API (shared by all families, see models/api.py):
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -318,9 +318,9 @@ class DecoderLM:
             def group_fn(x, sl):
                 gp, kc, vc, ck, cv = sl
 
-                def inner(carry, l):
+                def inner(carry, step_sl):
                     x = carry
-                    lp, kcl, vcl = l
+                    lp, kcl, vcl = step_sl
                     x, kcl, vcl = self._decode_self_layer(rules, lengths, lp, kcl, vcl, x)
                     return x, (kcl, vcl)
 

@@ -15,9 +15,8 @@ unchanged.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from ..config import ArchConfig
@@ -38,7 +37,7 @@ from .layers import (
     unembed,
 )
 from .spec import ParamSpec, abstract_params, init_params
-from .transformer import _remat, _stack, _update_cache, scan_stack
+from .transformer import _stack, _update_cache, scan_stack
 
 __all__ = ["EncDecLM"]
 

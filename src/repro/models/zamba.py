@@ -17,8 +17,7 @@ caches this arch runs the long_500k shape (sub-quadratic).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ from ..config import ArchConfig
 from ..kernels import ops
 from .layers import apply_norm, cdtype, embed_specs, embed_tokens, label_logprobs, norm_specs, rope, unembed, use_weight
 from .spec import ParamSpec, abstract_params, init_params
-from .transformer import _remat, _stack, _update_cache, scan_stack
+from .transformer import _stack, _update_cache, scan_stack
 
 __all__ = ["ZambaLM"]
 
@@ -347,8 +346,8 @@ class ZambaLM:
         def group_fn(x, sl):
             gp, lora, ssm, conv, kc, vc = sl
 
-            def inner(x, l):
-                lp, ssm_l, conv_l = l
+            def inner(x, step_sl):
+                lp, ssm_l, conv_l = step_sl
                 x, conv_new, ssm_new = self._mamba_step(lp, x, conv_l, ssm_l, dt, rules)
                 return x, (ssm_new, conv_new)
 
@@ -365,8 +364,8 @@ class ZambaLM:
         new_cache = dict(cache, ssm_g=ssm_g, conv_g=conv_g, attn_k=k, attn_v=v,
                          lengths=lengths + 1)
         if self.n_extra:
-            def inner_x(x, l):
-                lp, ssm_l, conv_l = l
+            def inner_x(x, step_sl):
+                lp, ssm_l, conv_l = step_sl
                 x, conv_new, ssm_new = self._mamba_step(lp, x, conv_l, ssm_l, dt, rules)
                 return x, (ssm_new, conv_new)
 

@@ -9,7 +9,7 @@ scalar so one compiled step serves the whole schedule.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,9 @@ class AdamW:
     clip_norm: Optional[float] = 1.0
 
     def init(self, params) -> OptState:
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return OptState(
             m=jax.tree_util.tree_map(zeros, params),
             v=jax.tree_util.tree_map(zeros, params),

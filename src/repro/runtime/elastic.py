@@ -11,7 +11,7 @@ arbitrary re-sharding).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 __all__ = ["ElasticPlan", "plan_elastic_mesh"]
 

@@ -27,11 +27,10 @@ from __future__ import annotations
 from typing import Dict, Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .config import ArchConfig
-from .models.spec import ParamSpec, spec_map
+from .models.spec import spec_map
 
 __all__ = [
     "LogicalRules",

@@ -11,7 +11,7 @@ crash — the restart path the runtime's failure detector triggers.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import pytest
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

@@ -95,7 +95,7 @@ def test_arch_full_config_shapes(arch):
     import math
 
     abstract = model.abstract_params()
-    n = sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(abstract))
+    n = sum(math.prod(leaf.shape) for leaf in jax.tree_util.tree_leaves(abstract))
     # within 25% of the analytic count (analytic skips small fudge terms)
     assert abs(n - cfg.n_params()) / cfg.n_params() < 0.25, (n, cfg.n_params())
     cache = model.cache_specs(4, 64)

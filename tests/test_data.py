@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.data import CorecDataPipeline, SyntheticLMSource

@@ -1,0 +1,263 @@
+"""Vectorized jax plane vs the DES plane, and its packed-bitmap kernel.
+
+Covers the tentpole guarantees of the third execution plane:
+
+* the registry resolves the same names on the jax plane
+  (``make_jax_policy``) and refuses non-vectorizable ones by name,
+* exactly-once / no-loss on the vectorized state: the word-packed claim
+  bitmap of every lane ends with popcount == prefix == n_packets,
+* distributional parity with the DES plane: per-policy p50/p99 on
+  matched configs within stated tolerance (P50_RTOL / P99_RTOL below),
+* the in-graph RFC-4737 accounting equals ``reorder.measure_reordering``
+  on the same completion stream,
+* the packed done-prefix Pallas kernel equals its pure-jnp fallback in
+  interpret mode (the CPU path CI exercises).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import jax_policies, make_jax_policy, make_policy  # noqa: E402
+from repro.core import jaxplane as jp  # noqa: E402
+from repro.core.des import DesItem, EventLoop, WorkerPlane  # noqa: E402
+from repro.core.forwarder import sweep_forwarder_jax  # noqa: E402
+from repro.core.queueing import sweep_policy_jax  # noqa: E402
+from repro.core.reorder import measure_reordering  # noqa: E402
+from repro.kernels import ops, ref  # noqa: E402
+
+JAX_POLS = jax_policies()
+N_WORKERS = 4
+
+# stated parity tolerance: medians over seeds, relative error
+P50_RTOL = 0.15
+P99_RTOL = 0.35
+
+
+# ---------------------------------------------------------------------
+# Registry resolution
+# ---------------------------------------------------------------------
+def test_registry_exposes_the_four_vectorized_policies():
+    for name in ("corec", "scaleout", "locked", "adaptive-batch"):
+        assert name in JAX_POLS
+        pol = make_jax_policy(name)
+        assert pol.name == name
+
+
+def test_non_vectorizable_policy_raises_with_catalog():
+    with pytest.raises(ValueError, match="hybrid.*corec"):
+        make_jax_policy("hybrid")
+
+
+def test_registry_and_jaxplane_catalogs_agree():
+    # The registry's jax_factory entries (policy.py) and the plane's
+    # built-in table (jaxplane.JAX_POLICIES) must name the same set —
+    # adding a vectorized policy requires touching both, and this pins
+    # them together.
+    assert set(JAX_POLS) == set(jp.jax_policy_names())
+
+
+# ---------------------------------------------------------------------
+# Exactly-once / no-loss on the vectorized state
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("name", JAX_POLS)
+def test_exactly_once_no_loss_vectorized(name):
+    n = 300
+    batches = np.array([1, 2, 8, 32, 8, 1], dtype=np.float32)
+    res = jp.run_lanes(
+        name,
+        np.arange(6),
+        lane_params=dict(batch=batches, max_batch=batches),
+        n_packets=n,
+        n_workers=N_WORKERS,
+        return_times=True,
+    )
+    assert (np.asarray(res.items) == n).all()
+    assert (np.asarray(res.claimed_popcount) == n).all()
+    assert (np.asarray(res.claimed_prefix) == n).all()
+    soj = np.asarray(res.sojourn)
+    assert np.isfinite(soj).all() and (soj > 0).all()
+    assert (np.asarray(res.batches) >= 1).all()
+
+
+def test_batch_knob_changes_claim_counts():
+    n = 400
+    res1 = jp.run_lanes("corec", np.arange(3), lane_params=dict(batch=1), n_packets=n)
+    # batch=1 means one claim per packet, exactly
+    assert (np.asarray(res1.batches) == n).all()
+    res32 = jp.run_lanes("corec", np.arange(3), lane_params=dict(batch=32), n_packets=n)
+    assert (np.asarray(res32.batches) < n).all()
+
+
+def test_adaptive_clamp_max_one_degenerates_to_per_packet():
+    n = 300
+    res = jp.run_lanes(
+        "adaptive-batch",
+        np.arange(3),
+        lane_params=dict(min_batch=1, max_batch=1),
+        n_packets=n,
+    )
+    assert (np.asarray(res.batches) == n).all()
+
+
+# ---------------------------------------------------------------------
+# In-graph RFC 4737 accounting vs the host-side reference
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_reorder_metrics_match_host_reference(seed):
+    rng = np.random.default_rng(seed)
+    n = 400
+    # jittered completion times -> a realistically reordered stream
+    times = np.arange(n) + rng.normal(0.0, 5.0, size=n)
+    ratio, maxd = jax.jit(jp.reorder_metrics)(np.asarray(times, np.float32))
+    order = np.argsort(times, kind="stable")
+    rep = measure_reordering(list(order))
+    assert float(ratio) == pytest.approx(rep.ratio, abs=1e-6)
+    assert int(maxd) == rep.max_distance
+
+
+# ---------------------------------------------------------------------
+# Packed done-prefix kernel: Pallas (interpret) vs pure-jnp fallback
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("n,block_w", [(64, 2), (200, 4), (1024, 32)])
+def test_packed_prefix_pallas_interpret_equals_ref(n, block_w):
+    rng = np.random.default_rng(n)
+    r = 6
+    nw = (n + 31) // 32
+    masks = rng.random((r, n)) < 0.8
+    masks[0] = True  # full bitmap
+    masks[1] = False  # empty bitmap
+    masks[2, : n // 2] = True  # exact half prefix
+    masks[2, n // 2] = False
+    words = np.zeros((r, nw), dtype=np.uint32)
+    set_bits = np.nonzero(masks)
+    for row, i in zip(*set_bits):
+        words[row, i >> 5] |= np.uint32(1) << np.uint32(i & 31)
+    limits = np.array([n, n, n, n, 7, 0], dtype=np.int32)
+
+    got_ref = np.asarray(ref.done_prefix_packed_ref(words, limits, n_bits=n))
+    got_pl = np.asarray(
+        ops.done_prefix_packed(
+            words,
+            limits,
+            n_bits=n,
+            impl="pallas",
+            interpret=True,
+            block_w=block_w,
+        )
+    )
+    # the bool-mask batch kernel's pure ref is the oracle
+    want = np.asarray(ref.done_prefix_batch_ref(masks, np.zeros(r, np.int32), limits))
+    np.testing.assert_array_equal(got_ref, want)
+    np.testing.assert_array_equal(got_pl, want)
+
+
+# ---------------------------------------------------------------------
+# Distributional parity vs the DES plane on matched forwarder configs
+# ---------------------------------------------------------------------
+def _des_forwarder_pcts(name, n, seeds, batch, overhead):
+    """DES percentiles with jax-plane-matched steering (hint override)."""
+    p50s, p99s = [], []
+    for seed in seeds:
+        rng = np.random.default_rng(1000 + seed)
+        arr = np.cumsum(rng.exponential(1.0 / 40.0, size=n))
+        flows = rng.integers(0, 256, size=n)
+        hints = jp.rss_hash32(flows, N_WORKERS).astype(int)
+        mean = 0.07 + 1e-5 * 64.0
+        sigma = 0.25
+        done = np.empty(n)
+
+        def svc(item, rng=rng, mean=mean, sigma=sigma):
+            mu = np.log(mean) - sigma**2 / 2
+            return float(rng.lognormal(mu, sigma))
+
+        loop = EventLoop()
+        plane = WorkerPlane(
+            loop,
+            make_policy(name, N_WORKERS, batch=batch),
+            N_WORKERS,
+            service_fn=svc,
+            on_complete=lambda t, item: done.__setitem__(item.payload, t),
+            rng=rng,
+            claim_overhead=overhead,
+        )
+        loop.on("arrive", plane.enqueue)
+        for i in range(n):
+            loop.schedule(
+                float(arr[i]),
+                "arrive",
+                DesItem(flow=int(flows[i]), payload=i, queue_hint=int(hints[i])),
+            )
+        loop.run()
+        soj = done - arr
+        p50s.append(np.percentile(soj, 50))
+        p99s.append(np.percentile(soj, 99))
+    return float(np.mean(p50s)), float(np.mean(p99s))
+
+
+@pytest.mark.parametrize("name", JAX_POLS)
+def test_distributional_parity_with_des_plane(name):
+    n, batch, overhead = 2000, 8, 0.05
+    res = jp.run_lanes(
+        name,
+        np.arange(10),
+        lane_params=dict(
+            batch=batch,
+            max_batch=batch,
+            claim_overhead=overhead,
+            deschedule_prob=0.0,
+        ),
+        traffic_params=dict(rate=40.0, pkt_size=64.0),
+        workload="udp",
+        n_packets=n,
+        n_workers=N_WORKERS,
+        n_flows=256,
+    )
+    j50 = float(np.mean(np.asarray(res.p50)))
+    j99 = float(np.mean(np.asarray(res.p99)))
+    d50, d99 = _des_forwarder_pcts(name, n, range(3), batch, overhead)
+    assert j50 == pytest.approx(d50, rel=P50_RTOL), (name, j50, d50)
+    assert j99 == pytest.approx(d99, rel=P99_RTOL), (name, j99, d99)
+
+
+# ---------------------------------------------------------------------
+# Scenario-layer entry points
+# ---------------------------------------------------------------------
+def test_forwarder_scenario_wrapper_mawi():
+    res = sweep_forwarder_jax(
+        "corec",
+        np.arange(4),
+        workload="mawi",
+        n_packets=300,
+        traffic_params=dict(rate=35.0),
+    )
+    assert np.asarray(res.p99).shape == (4,)
+    assert (np.asarray(res.claimed_prefix) == 300).all()
+    pct = np.asarray(res.reorder_pct)
+    assert (pct >= 0).all() and (pct <= 100).all()
+
+
+def test_queueing_scenario_wrapper_md_service():
+    # deterministic service at rho ~0.8: scale-up beats scale-out on p99
+    up = sweep_policy_jax(
+        "corec",
+        np.arange(6),
+        rate=3.2,
+        mean_service=1.0,
+        n_workers=4,
+        n_jobs=1500,
+        service="D",
+    )
+    out = sweep_policy_jax(
+        "scaleout",
+        np.arange(6),
+        rate=3.2,
+        mean_service=1.0,
+        n_workers=4,
+        n_jobs=1500,
+        service="D",
+    )
+    assert float(np.median(np.asarray(up.p99))) < float(np.median(np.asarray(out.p99)))

@@ -8,8 +8,6 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.decode_attention import decode_attention_pallas
-from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 
 KEY = jax.random.PRNGKey(0)

@@ -5,7 +5,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim import (
     AdamW,
@@ -66,7 +65,7 @@ def test_int8_roundtrip_error_bounded():
 def test_compressed_allreduce_with_error_feedback():
     """Inside shard_map over a pod axis: mean-reduction error is bounded
     per step and error feedback keeps the *accumulated* bias near zero."""
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     from repro.compat import make_mesh, shard_map
 

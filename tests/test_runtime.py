@@ -94,7 +94,6 @@ def test_claim_expiry_reissue_at_least_once():
 def test_trainer_crash_restart_resumes(tmp_path):
     """End-to-end: crash mid-training, restart from checkpoint + stream
     position, final loss trajectory matches an uninterrupted run."""
-    import jax
 
     from repro.config import ArchConfig
     from repro.train import Trainer, TrainerConfig
