@@ -13,7 +13,13 @@ fails the workflow naming every offending (source, policy, metric)
 triple.  Metrics that *improve* never fail (a lower p99 is progress,
 and quick-size variance would make a two-sided check flap).  Missing
 files, policies or metrics fail too — a benchmark silently dropping a
-policy is exactly the kind of breakage this guard is for.
+policy is exactly the kind of breakage this guard is for — and so does
+a results file that no longer parses as JSON.
+
+Gated sources: per-policy p50/p99 from ``policy_sweep.json`` (udp +
+mawi DES runs), forwarder-lane p50/p99 medians from ``jax_sweep.json``,
+and the TCP-lane flow-completion-time p50/p99 from the same file's
+``tcp`` section (``jax_sweep/tcp/<policy>``).
 
 Usage (CI):
     python -m benchmarks.check_regression \
@@ -47,17 +53,19 @@ def collect_metrics(results_dir: Path) -> dict:
             rows = sweep.get("workloads", {}).get(wl, {})
             for pol, row in rows.items():
                 key = f"policy_sweep/{wl}/{pol}"
-                out[key] = {
-                    "p50_us": row["p50_us"],
-                    "p99_us": row["p99_us"],
-                }
+                # partially-populated rows flow through so check() can
+                # name the missing metric instead of KeyError-ing here
+                out[key] = {m: row[m] for m in ("p50_us", "p99_us") if m in row}
     js = results_dir / "jax_sweep.json"
     if js.exists():
         sweep = _load(js)
         for pol, row in sweep.get("policies", {}).items():
             out[f"jax_sweep/{pol}"] = {
-                "p50_median": row["p50_median"],
-                "p99_median": row["p99_median"],
+                m: row[m] for m in ("p50_median", "p99_median") if m in row
+            }
+        for pol, row in sweep.get("tcp", {}).get("policies", {}).items():
+            out[f"jax_sweep/tcp/{pol}"] = {
+                m: row[m] for m in ("fct_p50", "fct_p99") if m in row
             }
     return out
 
@@ -67,7 +75,18 @@ def check(results_dir: Path, baselines_path: Path, tolerance: float) -> list:
     failures = []
     if not results_dir.exists():
         return [f"results dir missing: {results_dir} (did --quick run?)"]
-    observed = collect_metrics(results_dir)
+    try:
+        observed = collect_metrics(results_dir)
+    except (
+        json.JSONDecodeError,
+        UnicodeDecodeError,
+        KeyError,
+        TypeError,
+        AttributeError,
+    ) as e:
+        # a truncated/corrupt results file must fail the guard by name,
+        # not crash it with a traceback CI summarizes as "error"
+        return [f"malformed quick results under {results_dir}: {e!r}"]
     baselines = _load(baselines_path)["metrics"]
     if not observed:
         return [f"no quick metrics found under {results_dir}"]

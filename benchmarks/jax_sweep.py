@@ -9,6 +9,12 @@ call per policy, with latency percentiles and RFC-4737 reordering
 computed in-graph and the exactly-once invariant checked from the
 packed claim bitmaps (multi-ring done-prefix kernel).
 
+The TCP section does the same for the closed loop
+(:mod:`repro.core.tcpjax`): claim batch x deschedule probability x
+sender link rate x seeds, >= 1000 TCP lanes per policy in one jitted
+call each, reporting flow-completion-time p50/p99 and retransmit
+counts next to the forwarder latency percentiles.
+
 Skips with a named notice (not a crash) on hosts without jax.
 
 Results land in ``benchmarks/results/jax_sweep.json``.
@@ -33,8 +39,20 @@ AXES = {
 }
 N_SEEDS = 14
 
+#: TCP grid: 6 x 3 x 4 = 72 configs; x 14 seeds = 1008 TCP lanes/policy
+TCP_AXES = {
+    "batch": [1, 2, 4, 8, 16, 32],
+    "deschedule_prob": [0.0, 5e-4, 5e-3],
+    "link_pps": [0.55, 0.85, 1.1, 1.35],
+}
 
-def run(n_packets: int = 2000, n_seeds: int = N_SEEDS, workload: str = "udp"):
+
+def run(
+    n_packets: int = 2000,
+    n_seeds: int = N_SEEDS,
+    workload: str = "udp",
+    tcp_pkts: int = 256,
+):
     try:
         import jax  # noqa: F401
     except Exception as e:  # pragma: no cover - exercised on bare hosts
@@ -44,6 +62,7 @@ def run(n_packets: int = 2000, n_seeds: int = N_SEEDS, workload: str = "udp"):
 
     from repro.core import jax_policies
     from repro.core.jaxplane import LaneParams, TrafficParams, lane_grid, run_lanes
+    from repro.core.tcpjax import TcpParams, run_tcp_lanes
 
     lanes_arrays, points = lane_grid(AXES, np.arange(n_seeds))
     seeds = lanes_arrays.pop("__seeds__")
@@ -124,6 +143,88 @@ def run(n_packets: int = 2000, n_seeds: int = N_SEEDS, workload: str = "udp"):
             raise AssertionError(
                 f"jax_sweep: {pol} violated exactly-once "
                 f"(popcount/prefix/items mismatch)"
+            )
+
+    # ---- closed-loop TCP lanes: FCT percentiles at sweep scale --------
+    tcp_arrays, tcp_points = lane_grid(TCP_AXES, np.arange(n_seeds))
+    tcp_seeds = tcp_arrays.pop("__seeds__")
+    t_lanes = tcp_seeds.shape[0]
+    t_ncfg = t_lanes // n_seeds
+    tcp_lane_base = {k: v for k, v in tcp_arrays.items() if k in LaneParams._fields}
+    tcp_tcp_kw = {k: v for k, v in tcp_arrays.items() if k in TcpParams._fields}
+    n_flows = 2
+    flow_pkts = np.full(n_flows, max(8, tcp_pkts // n_flows), dtype=np.int32)
+    flow_start = np.arange(n_flows, dtype=np.float32) * 37.0
+    out["tcp"] = {
+        "lanes_per_policy": int(t_lanes),
+        "axes": {k: list(map(float, v)) for k, v in TCP_AXES.items()},
+        "n_flows": n_flows,
+        "pkts_per_flow": int(flow_pkts[0]),
+        "n_seeds": int(n_seeds),
+        "policies": {},
+    }
+    for pol in jax_policies():
+        lane_kw = dict(tcp_lane_base)
+        if pol == "adaptive-batch":
+            lane_kw["max_batch"] = lane_kw["batch"]
+        t0 = time.perf_counter()
+        res = run_tcp_lanes(
+            pol,
+            tcp_seeds,
+            n_pkts=flow_pkts,
+            t_start=flow_start,
+            lane_params=lane_kw,
+            tcp_params=tcp_tcp_kw,
+            n_workers=N_WORKERS,
+            max_batch=MAX_BATCH,
+        )
+        fct = np.asarray(res.fct)  # blocks until the device is done
+        wall = time.perf_counter() - t0
+        done = np.asarray(res.done)
+        sends = np.asarray(res.sends)
+        ok_pop = bool((np.asarray(res.claimed_popcount) == sends).all())
+        ok_pref = bool((np.asarray(res.claimed_prefix) == sends).all())
+        ok_items = bool((np.asarray(res.items) == sends).all())
+        lossless = ok_pop and ok_pref and ok_items
+        complete = bool(done.all())
+        retx = np.asarray(res.retransmissions)
+        # per-config FCT medians (pooled over seeds and flows)
+        fct_cfg = np.median(fct.reshape(t_ncfg, n_seeds * n_flows), axis=1)
+        configs = []
+        for c in range(t_ncfg):
+            cfg = dict(tcp_points[c * n_seeds][0])
+            block = fct.reshape(t_ncfg, n_seeds * n_flows)[c]
+            cfg["fct_p50"] = float(np.percentile(block, 50))
+            cfg["fct_p99"] = float(np.percentile(block, 99))
+            cfg["retx_mean"] = float(retx.reshape(t_ncfg, -1)[c].mean())
+            configs.append(cfg)
+        row = {
+            "lanes": int(t_lanes),
+            "complete": complete,
+            "lossless": lossless,
+            "wall_s": wall,
+            "lane_points_per_s": t_lanes / wall,
+            "fct_p50": float(np.percentile(fct, 50)),
+            "fct_p99": float(np.percentile(fct, 99)),
+            "fct_worst": float(fct_cfg.max()),
+            "retx_total": int(retx.sum()),
+            "retx_per_lane": float(retx.sum() / t_lanes),
+            "spurious_total": int(np.asarray(res.spurious).sum()),
+            "configs": configs,
+        }
+        out["tcp"]["policies"][pol] = row
+        emit(
+            f"jax_sweep/tcp/{pol}",
+            wall * 1e6,
+            f"{t_lanes} TCP lanes x {int(flow_pkts.sum())} pkts in one jit "
+            f"({t_lanes / wall:.0f} lanes/s), FCT p50 {row['fct_p50']:.1f} "
+            f"p99 {row['fct_p99']:.1f}, retx/lane {row['retx_per_lane']:.2f}, "
+            f"lossless={lossless} complete={complete}",
+        )
+        if not (lossless and complete):
+            raise AssertionError(
+                f"jax_sweep/tcp: {pol} violated exactly-once or left "
+                f"flows unfinished (lossless={lossless}, complete={complete})"
             )
     save_json("jax_sweep", out)
     return out

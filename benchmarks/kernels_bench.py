@@ -45,9 +45,12 @@ def run() -> dict:
     us = (time.perf_counter() - t0) / 3 * 1e6
     tc, tm = _flash_analytics(B, S, H, Hkv, D)
     out["flash_attention"] = {"cpu_us": us, "tpu_compute_s": tc, "tpu_mem_s": tm}
-    emit("kernels/flash_attention_1k", us,
-         f"TPU roofline: compute {tc * 1e6:.1f}us vs HBM {tm * 1e6:.1f}us "
-         f"-> {'compute' if tc > tm else 'memory'}-bound")
+    emit(
+        "kernels/flash_attention_1k",
+        us,
+        f"TPU roofline: compute {tc * 1e6:.1f}us vs HBM {tm * 1e6:.1f}us "
+        f"-> {'compute' if tc > tm else 'memory'}-bound",
+    )
 
     # decode attention
     q1 = jax.random.normal(ks[0], (8, H, D), jnp.float32)
@@ -62,8 +65,11 @@ def run() -> dict:
     us = (time.perf_counter() - t0) / 5 * 1e6
     io = 2 * 8 * 4096 * Hkv * D * 2  # stream kv once, bf16
     out["decode_attention"] = {"cpu_us": us, "tpu_mem_s": io / HBM_BW}
-    emit("kernels/decode_attention_4k", us,
-         f"TPU HBM-bound: {io / HBM_BW * 1e6:.1f}us/step for 8x4k cache")
+    emit(
+        "kernels/decode_attention_4k",
+        us,
+        f"TPU HBM-bound: {io / HBM_BW * 1e6:.1f}us/step for 8x4k cache",
+    )
 
     # rwkv6 chunked vs sequential speed ratio (algorithmic win, any backend)
     Bt, T, Hh, N = 1, 512, 4, 64
@@ -83,8 +89,11 @@ def run() -> dict:
     jax.block_until_ready(chk(r, kk, vv, w, u))
     t_chk = time.perf_counter() - t0
     out["rwkv6"] = {"seq_us": t_seq * 1e6, "chunk_us": t_chk * 1e6}
-    emit("kernels/rwkv6_chunk_512", t_chk * 1e6,
-         f"chunked {t_seq / max(t_chk, 1e-9):.1f}x faster than token scan")
+    emit(
+        "kernels/rwkv6_chunk_512",
+        t_chk * 1e6,
+        f"chunked {t_seq / max(t_chk, 1e-9):.1f}x faster than token scan",
+    )
     save_json("kernels", out)
     return out
 

@@ -15,19 +15,32 @@ def run(n_jobs: int = 80_000) -> dict:
         rows = []
         for rho in (0.2, 0.4, 0.6, 0.8, 0.9, 0.95):
             rate = rho * n / svc
-            corec = simulate_protocol(n, "corec", rate, svc, claim_overhead=0.1,
-                                      batch=32, n_jobs=n_jobs, seed=7)
+            corec = simulate_protocol(
+                n,
+                "corec",
+                rate,
+                svc,
+                claim_overhead=0.1,
+                batch=32,
+                n_jobs=n_jobs,
+                seed=7,
+            )
             so = simulate_scale_out(rate, svc, n, n_jobs=n_jobs, seed=7)
-            rows.append({
-                "load": rho,
-                "corec_mean": corec.mean, "corec_p99": corec.percentile(99),
-                "scaleout_mean": so.mean, "scaleout_p99": so.percentile(99),
-            })
+            rows.append(
+                {
+                    "load": rho,
+                    "corec_mean": corec.mean,
+                    "corec_p99": corec.percentile(99),
+                    "scaleout_mean": so.mean,
+                    "scaleout_p99": so.percentile(99),
+                }
+            )
         out[f"mean_vs_load_n{n}"] = rows
         # CDF at the paper's high-load operating point (Fig 6)
         rate = 0.92 * n / svc
-        corec = simulate_protocol(n, "corec", rate, svc, claim_overhead=0.1,
-                                  batch=32, n_jobs=n_jobs, seed=8)
+        corec = simulate_protocol(
+            n, "corec", rate, svc, claim_overhead=0.1, batch=32, n_jobs=n_jobs, seed=8
+        )
         so = simulate_scale_out(rate, svc, n, n_jobs=n_jobs, seed=8)
         qs = [50, 90, 95, 99, 99.9]
         out[f"cdf_n{n}"] = {
@@ -37,7 +50,8 @@ def run(n_jobs: int = 80_000) -> dict:
         }
         r = rows[-2]
         emit(
-            f"latency/fig5_n{n}_rho0.9_mean", r["corec_mean"],
+            f"latency/fig5_n{n}_rho0.9_mean",
+            r["corec_mean"],
             f"corec mean {r['corec_mean']:.2f}us vs scale-out "
             f"{r['scaleout_mean']:.2f}us",
         )

@@ -52,8 +52,12 @@ def _forwarder_row(pkts, cfg: ForwarderConfig) -> dict:
 
 def _tcp_row(flows, pol: str) -> dict:
     cfg = TcpSimConfig(
-        policy=pol, n_workers=N_WORKERS, seed=17, service_mean=3.0,
-        link_pps=2.0, deschedule_prob=5e-3,
+        policy=pol,
+        n_workers=N_WORKERS,
+        seed=17,
+        service_mean=3.0,
+        link_pps=2.0,
+        deschedule_prob=5e-3,
     )
     res = simulate_tcp(flows, cfg)
     f = np.array([r.fct for r in res])
@@ -88,13 +92,15 @@ def run(n_packets: int = 40_000, n_tcp_flows: int = 96) -> dict:
     for pol in policies:
         r = mawi_rows[pol]
         emit(
-            f"policy_sweep/mawi_{pol}_p99", r["p99_us"],
+            f"policy_sweep/mawi_{pol}_p99",
+            r["p99_us"],
             f"p50 {r['p50_us']:.2f}us, {r['reorder_pct']:.2f}% reordered",
         )
     hyb, so = mawi_rows["hybrid"], mawi_rows["scaleout"]
     out["hybrid_vs_scaleout_mawi_p99"] = so["p99_us"] / hyb["p99_us"]
     emit(
-        "policy_sweep/hybrid_vs_scaleout_mawi", out["hybrid_vs_scaleout_mawi_p99"],
+        "policy_sweep/hybrid_vs_scaleout_mawi",
+        out["hybrid_vs_scaleout_mawi_p99"],
         f"hybrid p99 {hyb['p99_us']:.1f}us vs scaleout {so['p99_us']:.1f}us "
         f"({out['hybrid_vs_scaleout_mawi_p99']:.1f}x better under MAWI skew)",
     )

@@ -19,15 +19,20 @@ def run(n_jobs: int = 120_000) -> dict:
                 rate = rho * n
                 up = simulate_scale_up(rate, 1.0, n, n_jobs, service, seed=11)
                 so = simulate_scale_out(rate, 1.0, n, n_jobs, service, seed=11)
-                rows.append({
-                    "load": rho,
-                    "up_mean": up.mean, "up_p99": up.percentile(99),
-                    "out_mean": so.mean, "out_p99": so.percentile(99),
-                })
+                rows.append(
+                    {
+                        "load": rho,
+                        "up_mean": up.mean,
+                        "up_p99": up.percentile(99),
+                        "out_mean": so.mean,
+                        "out_p99": so.percentile(99),
+                    }
+                )
             out[f"{fig}_n{n}"] = rows
             hi = rows[-2]  # rho=0.9
             emit(
-                f"queueing/{fig}_n{n}_rho0.9_p99", hi["up_p99"],
+                f"queueing/{fig}_n{n}_rho0.9_p99",
+                hi["up_p99"],
                 f"scale-up p99 {hi['up_p99']:.2f} vs scale-out {hi['out_p99']:.2f} "
                 f"({hi['out_p99'] / hi['up_p99']:.1f}x better)",
             )

@@ -18,8 +18,8 @@ def run(n_packets: int = 60_000) -> dict:
         row = {}
         for n_workers in (2, 4, 8):
             done = simulate_forwarder(
-                pkts, ForwarderConfig(policy="corec", n_workers=n_workers,
-                                      seed=seed * 7)
+                pkts,
+                ForwarderConfig(policy="corec", n_workers=n_workers, seed=seed * 7),
             )
             reps = per_flow_reordering((p.flow, p.flow_seq) for _, p in done)
             agg = reps["__all__"]
@@ -27,7 +27,8 @@ def run(n_packets: int = 60_000) -> dict:
             row[f"{n_workers}c_maxdist"] = agg.max_distance
         out[trace] = row
         emit(
-            f"reorder_traces/{trace}_8c", row["8c_pct"],
+            f"reorder_traces/{trace}_8c",
+            row["8c_pct"],
             f"{row['8c_pct']:.3f}% reordered, max distance "
             f"{row['8c_maxdist']} (paper: <1%, dist<=45)",
         )

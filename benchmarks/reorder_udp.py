@@ -29,15 +29,16 @@ def run(n_packets: int = 40_000) -> dict:
                 rate = min(rate, _line_rate_mpps(size))
                 pkts = udp_stream(n_packets, rate_pps=rate, size=size, seed=3)
                 done = simulate_forwarder(
-                    pkts, ForwarderConfig(policy="corec", n_workers=n_workers,
-                                          seed=4)
+                    pkts,
+                    ForwarderConfig(policy="corec", n_workers=n_workers, seed=4),
                 )
                 rep = measure_reordering([p.seqno for _, p in done])
                 row.append(rep.pct)
             grid[size] = row
         out[f"n{n_workers}"] = {"rates_mpps": RATES_MPPS, "by_size": grid}
         emit(
-            f"reorder_udp/n{n_workers}_64B_linerate", grid[64][-1],
+            f"reorder_udp/n{n_workers}_64B_linerate",
+            grid[64][-1],
             f"{grid[64][-1]:.2f}% reordered at 14.88Mpps/64B; "
             f"1500B at ITS line rate (0.81Mpps): {grid[1500][-1]:.3f}%",
         )

@@ -74,8 +74,12 @@ def run(n_items: int = N_ITEMS) -> dict:
             packed["us_per_item_claim_release"], 1e-12
         )
         out["configs"].append(
-            {"peritem": peritem, "packed": packed,
-             "atomic_ops_reduction": ops_ratio, "claim_release_speedup": us_ratio}
+            {
+                "peritem": peritem,
+                "packed": packed,
+                "atomic_ops_reduction": ops_ratio,
+                "claim_release_speedup": us_ratio,
+            }
         )
         for m in (peritem, packed):
             plane = "packed" if m["packed"] else "peritem"

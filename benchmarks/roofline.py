@@ -36,26 +36,35 @@ def cell_note(d) -> str:
     decode = shape in ("decode_32k", "long_500k")
     if dom == "collective_s":
         if decode:
-            return ("replicate bf16 weights over data for serve_step "
-                    "(inference needs no ZeRO gathers)")
+            return (
+                "replicate bf16 weights over data for serve_step "
+                "(inference needs no ZeRO gathers)"
+            )
         if moe:
             return "group-local MoE dispatch (no cross-shard scatter)"
-        return ("sequence-parallel norms / overlap TP all-reduces with "
-                "the next matmul (latency-hiding scheduler)")
+        return (
+            "sequence-parallel norms / overlap TP all-reduces with "
+            "the next matmul (latency-hiding scheduler)"
+        )
     if dom == "memory_s":
         if decode:
-            return ("KV/state reads are the floor; quantize cache to int8 "
-                    "or shard cache seq wider")
-        return ("Pallas flash attention keeps S^2 score tiles in VMEM; "
-                "bf16 intermediates halve the rest (CPU HLO is f32)")
-    return ("remat policy 'dots' avoids fwd recompute; MoE: lower "
-            "capacity_factor")
+            return (
+                "KV/state reads are the floor; quantize cache to int8 "
+                "or shard cache seq wider"
+            )
+        return (
+            "Pallas flash attention keeps S^2 score tiles in VMEM; "
+            "bf16 intermediates halve the rest (CPU HLO is f32)"
+        )
+    return "remat policy 'dots' avoids fwd recompute; MoE: lower capacity_factor"
 
 
 def fmt_row(d) -> str:
     if d.get("skipped"):
-        return (f"| {d['arch']} | {d['shape']} | {d.get('mesh','-')} | "
-                f"SKIP: {d['skipped']} | | | | | |")
+        return (
+            f"| {d['arch']} | {d['shape']} | {d.get('mesh', '-')} | "
+            f"SKIP: {d['skipped']} | | | | | |"
+        )
     r = d.get("roofline", {})
     mem = d.get("memory_analysis", {}) or {}
     argb = mem.get("argument_size_in_bytes") or 0
@@ -71,8 +80,10 @@ def fmt_row(d) -> str:
 def run_all_tags(write: bool = True) -> str:
     """Baseline table + optimized table (tag 'opt') when present."""
     out = run(None, write)
-    if any(json.loads(p.read_text()).get("tag") == "opt"
-           for p in DRYRUN.glob("*_opt.json")):
+    if any(
+        json.loads(p.read_text()).get("tag") == "opt"
+        for p in DRYRUN.glob("*_opt.json")
+    ):
         run("opt", write)
     return out
 
@@ -96,14 +107,16 @@ def run(tag: str | None = None, write: bool = True) -> str:
     for d in cells:
         if d.get("skipped"):
             continue
-        notes.append(f"* **{d['arch']} × {d['shape']} × {d['mesh']}** — "
-                     f"{cell_note(d)}")
+        notes.append(f"* **{d['arch']} × {d['shape']} × {d['mesh']}** — {cell_note(d)}")
     table = "\n".join(lines + notes)
     if write:
         out = RESULTS / (f"roofline{('_' + tag) if tag else ''}.md")
         out.write_text(table + "\n")
-    emit("roofline/cells", float(n_ok),
-         f"{n_ok} compiled cells + {n_skip} skipped in table")
+    emit(
+        "roofline/cells",
+        float(n_ok),
+        f"{n_ok} compiled cells + {n_skip} skipped in table",
+    )
     return table
 
 

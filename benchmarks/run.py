@@ -23,7 +23,8 @@ import traceback
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
-        "--quick", action="store_true",
+        "--quick",
+        action="store_true",
         help="shrunk sizes, skip heaviest jax modules; a couple of minutes",
     )
     args = ap.parse_args(argv)
@@ -49,7 +50,7 @@ def main(argv=None) -> None:
         ("reorder_traces", {}, dict(n_packets=6_000)),  # Table 4
         ("tcp_flows", {}, dict(scale=30, nflows_list=(32,))),  # Table 5, Figs 8-10
         ("policy_sweep", {}, dict(n_packets=8_000, n_tcp_flows=48)),  # registry
-        ("jax_sweep", {}, dict(n_packets=400)),  # vectorized jax-plane sweep
+        ("jax_sweep", {}, dict(n_packets=400, tcp_pkts=96)),  # vectorized jax plane
         ("kernels_bench", {}, None),  # Pallas kernel analytics
         ("serving_bench", {}, None),  # framework-level COREC serving
         ("roofline", {}, None),  # dry-run aggregation (section Roofline)

@@ -62,8 +62,7 @@ def run(n_items: int = 4000, n_jobs: int = 60_000) -> dict:
         base = _measure_threaded("scaleout", 1, work, n_items=n_items)
         rows = {"dpdk_1q": base}
         for k in (1, 2, 4):
-            rows[f"corec_{k}"] = _measure_threaded("corec", k, work,
-                                                   n_items=n_items)
+            rows[f"corec_{k}"] = _measure_threaded("corec", k, work, n_items=n_items)
         out["threaded"][nf_name] = rows
         # 2) simulated-time protocol model at measured costs (Tables 2-3)
         claim_us = 0.6  # measured CAS+scan cost per batch (threaded runs)
@@ -72,27 +71,43 @@ def run(n_items: int = 4000, n_jobs: int = 60_000) -> dict:
         base_tp = None
         for k in (1, 2, 3, 4):
             r = simulate_protocol(
-                k, "corec", rate * k, svc_us, claim_us, cas_retry_cost=0.2,
-                batch=32, n_jobs=n_jobs, seed=5,
+                k,
+                "corec",
+                rate * k,
+                svc_us,
+                claim_us,
+                cas_retry_cost=0.2,
+                batch=32,
+                n_jobs=n_jobs,
+                seed=5,
             )
             # throughput at saturation ~ k / effective service
             tp = 1e6 / svc_us * k * min(1.0, r.util / 0.95)
             if base_tp is None:
-                so = simulate_protocol(1, "scaleout", rate, svc_us, claim_us,
-                                       batch=32, n_jobs=n_jobs, seed=5)
+                so = simulate_protocol(
+                    1,
+                    "scaleout",
+                    rate,
+                    svc_us,
+                    claim_us,
+                    batch=32,
+                    n_jobs=n_jobs,
+                    seed=5,
+                )
                 base_tp = 1e6 / svc_us * min(1.0, so.util / 0.95)
                 model_rows["dpdk_1q_mpps"] = base_tp / 1e6
             model_rows[f"corec_{k}_mpps"] = tp / 1e6
             model_rows[f"corec_{k}_pct"] = 100.0 * tp / base_tp
         out["model"][nf_name] = model_rows
         emit(
-            f"scalability/{nf_name}_unit_cost", svc_us,
+            f"scalability/{nf_name}_unit_cost",
+            svc_us,
             f"corec4 {model_rows['corec_4_pct']:.0f}% of 1q baseline "
             f"(paper: 229-304%)",
         )
         emit(
             f"scalability/{nf_name}_threaded_corec4",
-            1e6 / max(out['threaded'][nf_name]['corec_4'], 1e-9),
+            1e6 / max(out["threaded"][nf_name]["corec_4"], 1e-9),
             f"{out['threaded'][nf_name]['corec_4']:.0f} items/s real threads "
             f"(1-core GIL bound)",
         )

@@ -14,9 +14,18 @@ from repro.serving import EngineConfig, InferenceEngine, Request
 
 from .common import emit, save_json
 
-TINY = ArchConfig("bench", "dense", n_layers=2, d_model=64, n_heads=4,
-                  n_kv_heads=2, d_ff=128, vocab=256, attention_impl="xla",
-                  dtype="float32")
+TINY = ArchConfig(
+    "bench",
+    "dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=256,
+    attention_impl="xla",
+    dtype="float32",
+)
 
 
 def run(n_requests: int = 24) -> dict:
@@ -25,11 +34,19 @@ def run(n_requests: int = 24) -> dict:
     zipf /= zipf.sum()
     out = {}
     for policy in ("corec", "rss"):
-        eng = InferenceEngine(TINY, EngineConfig(
-            n_slots=4, max_seq=32, n_workers=2, policy=policy, eos_token=-1))
+        eng = InferenceEngine(
+            TINY,
+            EngineConfig(
+                n_slots=4, max_seq=32, n_workers=2, policy=policy, eos_token=-1
+            ),
+        )
         reqs = [
-            Request(rid=i, prompt=list(map(int, rng.integers(2, 200, 6))),
-                    max_new_tokens=4, session=int(rng.choice(4, p=zipf)))
+            Request(
+                rid=i,
+                prompt=list(map(int, rng.integers(2, 200, 6))),
+                max_new_tokens=4,
+                session=int(rng.choice(4, p=zipf)),
+            )
             for i in range(n_requests)
         ]
         res = eng.run(reqs, timeout=120)
@@ -42,9 +59,12 @@ def run(n_requests: int = 24) -> dict:
             "lat_mean_ms": float(lat.mean()),
             "lat_p99_ms": float(np.percentile(lat, 99)),
         }
-    emit("serving/corec_ttft_p99", out["corec"]["ttft_p99_ms"] * 1e3,
-         f"corec ttft p99 {out['corec']['ttft_p99_ms']:.0f}ms vs rss "
-         f"{out['rss']['ttft_p99_ms']:.0f}ms (skewed sessions)")
+    emit(
+        "serving/corec_ttft_p99",
+        out["corec"]["ttft_p99_ms"] * 1e3,
+        f"corec ttft p99 {out['corec']['ttft_p99_ms']:.0f}ms vs rss "
+        f"{out['rss']['ttft_p99_ms']:.0f}ms (skewed sessions)",
+    )
     save_json("serving", out)
     return out
 

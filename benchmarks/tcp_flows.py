@@ -24,23 +24,28 @@ def run(scale: int = 1, nflows_list=(64, 128)) -> dict:
 
     # --- Table 5: single huge flow, corec 1/2/4 workers ------------------
     huge = {}
-    for label, npkts in (("1GB-scaled", 60_000 // scale),
-                         ("10GB-scaled", 180_000 // scale)):
+    for label, npkts in (
+        ("1GB-scaled", 60_000 // scale),
+        ("10GB-scaled", 180_000 // scale),
+    ):
         rows = {}
         base = None
         for k in (1, 2, 4):
-            cfg = TcpSimConfig(policy="corec", n_workers=k, seed=13,
-                               deschedule_prob=1e-3)
+            cfg = TcpSimConfig(
+                policy="corec", n_workers=k, seed=13, deschedule_prob=1e-3
+            )
             r = simulate_tcp([(0, npkts, 0.0)], cfg)[0]
             if base is None:
                 base = r.fct
             rows[f"{k}c"] = {
-                "fct_us": r.fct, "retx": r.retransmissions,
+                "fct_us": r.fct,
+                "retx": r.retransmissions,
                 "delta_pct": 100 * (r.fct / base - 1),
             }
         huge[label] = rows
         emit(
-            f"tcp/huge_{label}_4c_delta", rows["4c"]["fct_us"],
+            f"tcp/huge_{label}_4c_delta",
+            rows["4c"]["fct_us"],
             f"{rows['4c']['delta_pct']:+.2f}% FCT vs 1c, retx "
             f"{rows['1c']['retx']}->{rows['4c']['retx']} (paper: +2.3% max)",
         )
@@ -55,9 +60,14 @@ def run(scale: int = 1, nflows_list=(64, 128)) -> dict:
                 # forwarder-bound path (fast client link), with realistic
                 # worker descheduling — the HOL-blocking scenario the
                 # paper's scale-out baseline suffers from
-                cfg = TcpSimConfig(policy=pol, n_workers=4, seed=17,
-                                   service_mean=3.0, link_pps=2.0,
-                                   deschedule_prob=5e-3)
+                cfg = TcpSimConfig(
+                    policy=pol,
+                    n_workers=4,
+                    seed=17,
+                    service_mean=3.0,
+                    link_pps=2.0,
+                    deschedule_prob=5e-3,
+                )
                 f = _fcts(simulate_tcp(flows, cfg))
                 res[pol] = {
                     "mean": float(f.mean()),
@@ -66,7 +76,8 @@ def run(scale: int = 1, nflows_list=(64, 128)) -> dict:
                 }
             out[f"{label}_{nflows}flows"] = res
             emit(
-                f"tcp/{label}_{nflows}flows_p99", res["corec"]["p99"],
+                f"tcp/{label}_{nflows}flows_p99",
+                res["corec"]["p99"],
                 f"corec p99 {res['corec']['p99']:.0f}us vs scale-out "
                 f"{res['scaleout']['p99']:.0f}us "
                 f"({res['scaleout']['p99'] / res['corec']['p99']:.2f}x)",

@@ -8,6 +8,10 @@ sharding entry points moved:
   module is deprecated and later removed).
 * ``make_mesh``: ``jax.make_mesh`` appeared in 0.4.35; older versions
   only have ``jax.sharding.Mesh`` over ``mesh_utils`` devices.
+* ``tpu_compiler_params``: Pallas renamed
+  ``pltpu.TPUCompilerParams`` (<= 0.4.x / 0.5.x) to
+  ``pltpu.CompilerParams`` (0.6+); the kernels under
+  ``repro/kernels/`` build theirs through here.
 
 All call sites (``optim/compress.py`` users, ``launch/mesh.py``,
 ``train/trainer.py``, tests) route through here so a jax upgrade is a
@@ -20,7 +24,7 @@ from typing import Any, Sequence
 
 import jax
 
-__all__ = ["shard_map", "make_mesh"]
+__all__ = ["shard_map", "make_mesh", "tpu_compiler_params"]
 
 
 def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
@@ -33,13 +37,19 @@ def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
     """
     if hasattr(jax, "shard_map"):  # jax >= 0.6-ish: top-level API
         return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
             check_vma=check_vma,
         )
     from jax.experimental.shard_map import shard_map as _shard_map
 
     return _shard_map(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
         check_rep=check_vma,
     )
 
@@ -52,3 +62,16 @@ def make_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> Any:
 
     devices = mesh_utils.create_device_mesh(tuple(shape))
     return jax.sharding.Mesh(devices, tuple(axis_names))
+
+
+def tpu_compiler_params(**kwargs: Any) -> Any:
+    """Version-portable ``pltpu.CompilerParams`` constructor.
+
+    Accepts the class's keyword arguments (``dimension_semantics``,
+    ...) and builds whichever of ``CompilerParams`` (jax >= 0.6) /
+    ``TPUCompilerParams`` (0.4.x-0.5.x) this jax provides.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

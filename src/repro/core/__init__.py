@@ -9,6 +9,7 @@ Layout (see ROADMAP.md "Module map" for the full picture):
   des.py           unified discrete-event core (event loop + worker plane)
   policy.py        RxPolicy plugins + the registry all planes share
   jaxplane.py      vectorized jax plane (lax.scan step fn, vmap lanes)
+  tcpjax.py        vectorized TCP lane engine (closed loop on the jax plane)
   queueing.py      M/G/N vs N x M/G/1 scenario layer (sec 3.2)
   forwarder.py     open-loop L3-forwarder scenario layer (sec 4.3.1)
   tcp.py           TCP-over-forwarder scenario layer (sec 4.3.2)
@@ -48,7 +49,7 @@ from .queueing import (
 )
 from .reorder import ReorderReport, measure_reordering, per_flow_reordering
 from .ring import Claim, CorecRing, RingStats
-from .tcp import FlowResult, TcpSimConfig, simulate_tcp
+from .tcp import FlowResult, TcpSimConfig, simulate_tcp, sweep_tcp_jax
 from .traffic import MSS, FlowSpec, Packet, flow_packets, mawi_mix, udp_stream
 
 __all__ = [
@@ -63,6 +64,6 @@ __all__ = [
     "simulate_policy", "simulate_protocol", "simulate_scale_out",
     "simulate_scale_up", "sweep_load", "sweep_policy_jax",
     "ReorderReport", "measure_reordering", "per_flow_reordering",
-    "FlowResult", "TcpSimConfig", "simulate_tcp",
+    "FlowResult", "TcpSimConfig", "simulate_tcp", "sweep_tcp_jax",
     "MSS", "FlowSpec", "Packet", "flow_packets", "mawi_mix", "udp_stream",
 ]

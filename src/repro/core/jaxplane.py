@@ -28,9 +28,13 @@ Policies plug in as :class:`JaxPolicy` — pure-function analogues of
 ``select_queue`` (steering, vectorized over flow keys) and
 ``next_batch`` (claim sizing from the instantaneous backlog).  The
 registry's ``PolicySpec.jax_factory`` resolves the same names
-(``corec`` / ``scaleout`` / ``locked`` / ``adaptive-batch``) to these;
-``hybrid`` has no vectorized analogue yet (stealing couples queues
-through the argmax of backlogs — see ROADMAP open items).
+(``corec`` / ``scaleout`` / ``locked`` / ``hybrid`` /
+``adaptive-batch``) to these.  ``hybrid``'s work stealing couples
+queues through the instantaneous backlogs: at claim time the worker
+drains its own RSS queue when non-empty, otherwise the victim is a
+vectorized ``argmax`` over per-queue backlogs (counted by
+``searchsorted`` at the claim instant, exactly like the DES plane's
+``len(queue)`` at dispatch time).
 
 Latency and RFC-4737 reordering accounting run **in-graph**: sojourn
 percentiles, the Type-P-Reordered ratio (NextExp via a running max over
@@ -153,7 +157,9 @@ class JaxPolicy(NamedTuple):
     driver-side claim-size decision from the instantaneous backlog.
     ``shared`` means every worker drains queue 0 (single-queue
     disciplines); ``uses_lock`` serializes claims on a lock horizon
-    (the Metronome-class baseline).
+    (the Metronome-class baseline); ``steals`` lets a worker whose own
+    queue is empty at claim time take the batch from the queue with the
+    largest instantaneous backlog instead (hybrid work stealing).
     """
 
     name: str
@@ -161,6 +167,7 @@ class JaxPolicy(NamedTuple):
     uses_lock: bool
     select_queue: object
     next_batch: object
+    steals: bool = False
 
 
 def _fmix32(h: jnp.ndarray) -> jnp.ndarray:
@@ -189,6 +196,36 @@ def rss_hash32(key, n_queues: int):
     h = h * np.uint32(0xC2B2AE35)
     h = h ^ (h >> np.uint32(16))
     return h % np.uint32(n_queues)
+
+
+def queue_heads(q_arr, qptr):
+    """Arrival time of each queue's next unclaimed item (+inf if none).
+
+    ``q_arr`` rows are sorted arrival logs padded with +inf; ``qptr`` is
+    the per-queue claim pointer.  Shared by the forwarder and TCP lane
+    engines so both planes wake workers off the same head definition.
+    """
+    w = q_arr.shape[0]
+    pad = q_arr.shape[1] - 1
+    return q_arr[jnp.arange(w), jnp.minimum(qptr, pad)]
+
+
+def steal_choice(q_arr, qptr, own, t0):
+    """Hybrid victim selection at claim time ``t0``.
+
+    Returns ``(q, backlog_q)``: the chosen queue — the worker's own when
+    it has arrivals at ``t0``, else the argmax of instantaneous backlogs
+    (the DES plane's ``max(len(queue))`` at dispatch time) — plus the
+    per-queue backlog vector it was chosen from.  Rows are sorted with
+    +inf padding, so the count of arrivals <= t0 is a plain masked sum
+    (== searchsorted right on every row).  One source of truth for both
+    lane engines (:mod:`jaxplane` and :mod:`tcpjax`): the DES-parity
+    guarantees of both test suites pin this exact formulation.
+    """
+    n_arr_q = jnp.sum(q_arr <= t0, axis=1).astype(jnp.int32)
+    backlog_q = n_arr_q - qptr
+    q = jnp.where(backlog_q[own] > 0, own, jnp.argmax(backlog_q))
+    return q, backlog_q
 
 
 def _select_shared(flows, n_workers):
@@ -220,6 +257,9 @@ JAX_POLICIES = {
     "corec": JaxPolicy("corec", True, False, _select_shared, _next_batch_cap),
     "scaleout": JaxPolicy("scaleout", False, False, _select_rss, _next_batch_cap),
     "locked": JaxPolicy("locked", True, True, _select_shared, _next_batch_cap),
+    "hybrid": JaxPolicy(
+        "hybrid", False, False, _select_rss, _next_batch_cap, steals=True
+    ),
     "adaptive-batch": JaxPolicy(
         "adaptive-batch", True, False, _select_shared, _next_batch_adaptive
     ),
@@ -350,19 +390,29 @@ def _simulate_lane(
     def step(state, xs):
         qptr, free_t, lock_t, done_t, words, batches, items, deschs = state
         u, stall = xs
-        ptr_w = qptr[worker_queue]  # [W]
-        arr_next = q_arr[worker_queue, jnp.minimum(ptr_w, n)]  # [W]
+        if policy.steals:
+            # work conserving: a worker wakes for the earliest unclaimed
+            # arrival in ANY queue (it can steal), not just its own
+            heads = queue_heads(q_arr, qptr)  # [W]
+            arr_next = jnp.broadcast_to(jnp.min(heads), (w_count,))
+        else:
+            ptr_w = qptr[worker_queue]  # [W]
+            arr_next = q_arr[worker_queue, jnp.minimum(ptr_w, n)]  # [W]
         t_cand = jnp.maximum(free_t, arr_next)
         if policy.uses_lock:
             t_cand = jnp.maximum(t_cand, lock_t)
         w = jnp.argmin(t_cand)
         t0 = t_cand[w]
         active = jnp.isfinite(t0)
-        q = worker_queue[w]
-        # backlog at claim time: arrivals <= t0 minus already-claimed
-        row_arr = jnp.take(q_arr, q, axis=0)
-        n_arrived = jnp.searchsorted(row_arr, t0, side="right")
-        backlog = n_arrived.astype(jnp.int32) - qptr[q]
+        if policy.steals:
+            q, backlog_q = steal_choice(q_arr, qptr, worker_queue[w], t0)
+            backlog = backlog_q[q]
+        else:
+            q = worker_queue[w]
+            # backlog at claim time: arrivals <= t0 minus already-claimed
+            row_arr = jnp.take(q_arr, q, axis=0)
+            n_arrived = jnp.searchsorted(row_arr, t0, side="right")
+            backlog = n_arrived.astype(jnp.int32) - qptr[q]
         k = policy.next_batch(backlog, params, w_count)
         k = jnp.clip(k, 1, jnp.minimum(backlog, mb))
         k = jnp.where(active, k, 0)

@@ -269,7 +269,7 @@ class PolicySpec:
     doc: str = ""
     #: () -> repro.core.jaxplane.JaxPolicy — the policy's pure-function
     #: analogue for the vectorized jax plane, or None when the
-    #: discipline has no array formulation yet (e.g. hybrid's stealing).
+    #: discipline has no array formulation yet (plugins may opt out).
     #: Kept lazy so the registry imports without jax installed.
     jax_factory: Optional[Callable[[], Any]] = None
 
@@ -372,6 +372,7 @@ register_policy(
         des_factory=HybridStealPolicy,
         thread_factory=lambda n, size, **kw: HybridStealDriver(n, size, **kw),
         doc="RSS steering + work stealing from the longest backlog",
+        jax_factory=_jax_factory("hybrid"),
     )
 )
 register_policy(

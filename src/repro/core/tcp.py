@@ -31,14 +31,14 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .des import DesItem, EventLoop, WorkerPlane
 from .policy import make_policy
 
-__all__ = ["TcpSimConfig", "FlowResult", "simulate_tcp"]
+__all__ = ["TcpSimConfig", "FlowResult", "simulate_tcp", "sweep_tcp_jax"]
 
 
 @dataclass
@@ -61,6 +61,10 @@ class TcpSimConfig:
     rto: float = 5_000.0  # coarse retransmission timer (us)
     seed: int = 0
     policy_kwargs: dict = field(default_factory=dict)
+    #: per-flow steering override (flow id -> queue), the indirection-
+    #: table hook: parity tests feed the jax plane's 32-bit hash here so
+    #: both planes pin flows to the same queues (see tcpjax docstring).
+    queue_hints: Optional[Dict[int, int]] = None
 
 
 @dataclass
@@ -210,10 +214,14 @@ def simulate_tcp(
         try_send(f, t)
 
     # ---- event wiring + RTO safety ---------------------------------------
+    hints = cfg.queue_hints or {}
     loop.on("start", lambda t, fid: try_send(fl[fid], t))
     loop.on(
         "arrive",
-        lambda t, data: plane.enqueue(t, DesItem(flow=data[0], payload=data)),
+        lambda t, data: plane.enqueue(
+            t,
+            DesItem(flow=data[0], payload=data, queue_hint=hints.get(data[0])),
+        ),
     )
     loop.on("deliver", deliver)
     loop.on("ack", on_ack)
@@ -249,3 +257,41 @@ def simulate_tcp(
         )
         for f in fl.values()
     ]
+
+
+def sweep_tcp_jax(
+    policy: str,
+    seeds,
+    n_pkts=256,
+    t_start=None,
+    lane_params: dict | None = None,
+    tcp_params: dict | None = None,
+    n_workers: int = 4,
+    max_batch: int = 64,
+    **kw,
+):
+    """Vectorized counterpart of :func:`simulate_tcp` sweeps.
+
+    Evaluates one TCP configuration per (lane-param, seed) lane — all
+    lanes in a single jitted scan on the jax plane
+    (:mod:`repro.core.tcpjax`) with the same NewReno control laws and
+    forwarder batch-claim dynamics, returning per-flow flow-completion
+    times, retransmission and spurious-retransmit counts, and the
+    packed-claim-bitmap exactly-once check.  ``n_pkts`` / ``t_start``
+    give the flow layout (shared by all lanes); knob dicts behave like
+    :func:`repro.core.forwarder.sweep_forwarder_jax`'s.  Imports jax
+    lazily so this module stays importable on DES-only hosts.
+    """
+    from .tcpjax import run_tcp_lanes
+
+    return run_tcp_lanes(
+        policy,
+        seeds,
+        n_pkts=n_pkts,
+        t_start=t_start,
+        lane_params=lane_params,
+        tcp_params=tcp_params,
+        n_workers=n_workers,
+        max_batch=max_batch,
+        **kw,
+    )

@@ -40,8 +40,9 @@ def _forward_last_logits(model, cfg, params, tokens, batch):
     elif cfg.ssm_state:
         x, _, _ = model.forward(params, tokens)
     else:
-        x, _, _ = model.forward(params, tokens,
-                                image_embeds=batch.get("image_embeds"))
+        x, _, _ = model.forward(
+            params, tokens, image_embeds=batch.get("image_embeds")
+        )
     return unembed(params["embed"], x, cfg)[:, -1]
 
 

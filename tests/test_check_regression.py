@@ -1,0 +1,165 @@
+"""The CI benchmark-regression guard, tested like the gate it is.
+
+``benchmarks/check_regression.py`` fails every push when a quick-run
+metric drifts past tolerance — but until now nothing tested the guard
+itself.  Covers the contract documented in its docstring: the exact
+tolerance boundary (``observed == baseline * tolerance`` passes, just
+above fails), one-sided checking (improvements never fail), missing
+results / policies / metrics fail by name, NaN fails, and a malformed
+results file fails the guard instead of crashing it.
+"""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import check, collect_metrics, main
+
+
+def _write_results(tmp_path, jax_policies=None, tcp_policies=None, udp=None):
+    results = tmp_path / "quick"
+    results.mkdir(exist_ok=True)
+    sweep = {"policies": jax_policies or {}}
+    if tcp_policies is not None:
+        sweep["tcp"] = {"policies": tcp_policies}
+    (results / "jax_sweep.json").write_text(json.dumps(sweep))
+    if udp is not None:
+        ps = {"workloads": {"udp": udp, "mawi": {}}}
+        (results / "policy_sweep.json").write_text(json.dumps(ps))
+    return results
+
+
+def _baselines(tmp_path, metrics):
+    path = tmp_path / "regression_baselines.json"
+    path.write_text(json.dumps({"metrics": metrics}))
+    return path
+
+
+def test_pass_within_tolerance_and_on_improvement(tmp_path):
+    results = _write_results(
+        tmp_path,
+        jax_policies={"corec": {"p50_median": 0.1, "p99_median": 0.2}},
+        tcp_policies={"corec": {"fct_p50": 400.0, "fct_p99": 500.0}},
+    )
+    base = _baselines(
+        tmp_path,
+        {
+            "jax_sweep/corec": {"p50_median": 0.1, "p99_median": 1.0},
+            "jax_sweep/tcp/corec": {"fct_p50": 900.0, "fct_p99": 550.0},
+        },
+    )
+    assert check(results, base, 2.0) == []
+
+
+def test_exactly_2x_boundary_passes_and_epsilon_above_fails(tmp_path):
+    results = _write_results(
+        tmp_path, jax_policies={"corec": {"p50_median": 0.2, "p99_median": 0.2}}
+    )
+    # observed == baseline * tolerance is NOT a regression ...
+    base = _baselines(
+        tmp_path, {"jax_sweep/corec": {"p50_median": 0.1, "p99_median": 0.1}}
+    )
+    fails = check(results, base, 2.0)
+    assert fails == []
+    # ... but one ulp above the boundary is
+    base2 = _baselines(
+        tmp_path, {"jax_sweep/corec": {"p50_median": 0.0999, "p99_median": 0.1}}
+    )
+    fails = check(results, base2, 2.0)
+    assert len(fails) == 1 and "p50_median regressed" in fails[0]
+
+
+def test_missing_baseline_key_fails_by_name(tmp_path):
+    results = _write_results(
+        tmp_path, jax_policies={"corec": {"p50_median": 0.1, "p99_median": 0.1}}
+    )
+    base = _baselines(
+        tmp_path,
+        {
+            "jax_sweep/corec": {"p50_median": 1.0, "p99_median": 1.0},
+            "jax_sweep/tcp/corec": {"fct_p50": 1.0, "fct_p99": 1.0},
+        },
+    )
+    fails = check(results, base, 2.0)
+    assert fails == ["jax_sweep/tcp/corec: missing from quick results"]
+
+
+def test_missing_metric_within_row_fails(tmp_path):
+    results = _write_results(tmp_path, jax_policies={"corec": {"p50_median": 0.1}})
+    base = _baselines(
+        tmp_path, {"jax_sweep/corec": {"p50_median": 1.0, "p99_median": 1.0}}
+    )
+    fails = check(results, base, 2.0)
+    assert fails == ["jax_sweep/corec: metric p99_median missing"]
+
+
+def test_nan_observed_fails(tmp_path):
+    results = _write_results(
+        tmp_path,
+        jax_policies={"corec": {"p50_median": float("nan"), "p99_median": 0.1}},
+    )
+    base = _baselines(
+        tmp_path, {"jax_sweep/corec": {"p50_median": 1.0, "p99_median": 1.0}}
+    )
+    fails = check(results, base, 2.0)
+    assert len(fails) == 1 and "p50_median" in fails[0]
+
+
+def test_malformed_results_file_fails_instead_of_crashing(tmp_path):
+    results = tmp_path / "quick"
+    results.mkdir()
+    (results / "jax_sweep.json").write_text('{"policies": {"corec": truncat')
+    base = _baselines(tmp_path, {"jax_sweep/corec": {"p50_median": 1.0}})
+    fails = check(results, base, 2.0)
+    assert len(fails) == 1 and "malformed" in fails[0]
+
+
+def test_wrong_shape_but_valid_json_fails_instead_of_crashing(tmp_path):
+    # valid JSON of the wrong shape (lists where objects are expected)
+    # must also fail by name, not escape as an AttributeError traceback
+    results = tmp_path / "quick"
+    results.mkdir()
+    (results / "jax_sweep.json").write_text('{"policies": [1, 2]}')
+    base = _baselines(tmp_path, {"jax_sweep/corec": {"p50_median": 1.0}})
+    fails = check(results, base, 2.0)
+    assert len(fails) == 1 and "malformed" in fails[0]
+
+
+def test_missing_results_dir_fails(tmp_path):
+    base = _baselines(tmp_path, {"jax_sweep/corec": {"p50_median": 1.0}})
+    fails = check(tmp_path / "nope", base, 2.0)
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_collect_metrics_flattens_all_three_sources(tmp_path):
+    results = _write_results(
+        tmp_path,
+        jax_policies={"corec": {"p50_median": 0.1, "p99_median": 0.2}},
+        tcp_policies={"hybrid": {"fct_p50": 1.0, "fct_p99": 2.0, "retx_total": 3}},
+        udp={"locked": {"p50_us": 0.3, "p99_us": 40.0}},
+    )
+    got = collect_metrics(results)
+    assert got["jax_sweep/corec"] == {"p50_median": 0.1, "p99_median": 0.2}
+    assert got["jax_sweep/tcp/hybrid"] == {"fct_p50": 1.0, "fct_p99": 2.0}
+    assert got["policy_sweep/udp/locked"] == {"p50_us": 0.3, "p99_us": 40.0}
+
+
+@pytest.mark.parametrize("ok", [True, False])
+def test_main_exit_codes(tmp_path, capsys, ok):
+    results = _write_results(
+        tmp_path,
+        jax_policies={"corec": {"p50_median": 0.1 if ok else 9.0, "p99_median": 0.1}},
+    )
+    base = _baselines(
+        tmp_path, {"jax_sweep/corec": {"p50_median": 1.0, "p99_median": 1.0}}
+    )
+    rc = main(
+        ["--results", str(results), "--baselines", str(base), "--tolerance", "2.0"]
+    )
+    captured = capsys.readouterr()
+    if ok:
+        assert rc == 0 and "within 2x" in captured.out
+    else:
+        assert rc == 1 and "REGRESSION GUARD FAILED" in captured.err

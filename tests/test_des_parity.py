@@ -92,8 +92,12 @@ def _fstats(done, pkts, per_flow: bool = False) -> dict:
 )
 def test_scale_up_parity(key, kwargs):
     r = simulate_scale_up(
-        kwargs["rate"], 1.0, kwargs["n"], kwargs["n_jobs"],
-        kwargs["service"], seed=kwargs["seed"],
+        kwargs["rate"],
+        1.0,
+        kwargs["n"],
+        kwargs["n_jobs"],
+        kwargs["service"],
+        seed=kwargs["seed"],
     )
     _close(_qstats(r), key)
 
@@ -107,16 +111,29 @@ def test_scale_up_parity(key, kwargs):
 )
 def test_scale_out_parity(key, kwargs):
     r = simulate_scale_out(
-        kwargs["rate"], 1.0, kwargs["n"], 20_000, "M",
-        seed=kwargs["seed"], assign=kwargs["assign"],
+        kwargs["rate"],
+        1.0,
+        kwargs["n"],
+        20_000,
+        "M",
+        seed=kwargs["seed"],
+        assign=kwargs["assign"],
     )
     _close(_qstats(r), key)
 
 
 def test_protocol_corec_parity():
     r = simulate_protocol(
-        4, "corec", 3.5, 1.0, claim_overhead=0.1, cas_retry_cost=0.2,
-        batch=16, n_jobs=20_000, service="M", seed=5,
+        4,
+        "corec",
+        3.5,
+        1.0,
+        claim_overhead=0.1,
+        cas_retry_cost=0.2,
+        batch=16,
+        n_jobs=20_000,
+        service="M",
+        seed=5,
     )
     _close(_qstats(r), "proto_corec_n4")
 

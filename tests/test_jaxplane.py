@@ -40,16 +40,25 @@ P99_RTOL = 0.35
 # ---------------------------------------------------------------------
 # Registry resolution
 # ---------------------------------------------------------------------
-def test_registry_exposes_the_four_vectorized_policies():
-    for name in ("corec", "scaleout", "locked", "adaptive-batch"):
+def test_registry_exposes_all_five_vectorized_policies():
+    for name in ("corec", "scaleout", "locked", "hybrid", "adaptive-batch"):
         assert name in JAX_POLS
         pol = make_jax_policy(name)
         assert pol.name == name
+    assert make_jax_policy("hybrid").steals
 
 
-def test_non_vectorizable_policy_raises_with_catalog():
-    with pytest.raises(ValueError, match="hybrid.*corec"):
-        make_jax_policy("hybrid")
+def test_non_vectorizable_policy_raises_with_catalog(monkeypatch):
+    from repro.core import policy as policy_mod
+
+    spec = policy_mod.PolicySpec(
+        name="no-jax-analogue",
+        des_factory=lambda n, batch=32, **kw: None,
+        thread_factory=lambda n, size, **kw: None,
+    )
+    monkeypatch.setitem(policy_mod._REGISTRY, spec.name, spec)
+    with pytest.raises(ValueError, match="no-jax-analogue.*corec"):
+        make_jax_policy("no-jax-analogue")
 
 
 def test_registry_and_jaxplane_catalogs_agree():

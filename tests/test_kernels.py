@@ -14,8 +14,10 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _tol(dtype):
-    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
-        rtol=2e-5, atol=2e-5
+    return (
+        dict(rtol=2e-2, atol=2e-2)
+        if dtype == jnp.bfloat16
+        else dict(rtol=2e-5, atol=2e-5)
     )
 
 
@@ -30,8 +32,9 @@ def test_rmsnorm_sweep(shape, dtype):
     w = jax.random.normal(ks[1], shape[-1:], jnp.float32)
     got = rmsnorm_pallas(x, w, interpret=True, block_rows=4)
     want = ref.rmsnorm_ref(x, w)
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
 
 
 # ----------------------------------------------------------------------
@@ -52,11 +55,13 @@ def test_flash_attention_sweep(B, Sq, Sk, H, Hkv, D, causal, q_offset, dtype):
     q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
     k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
     v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
-    got = ops.attention(q, k, v, causal=causal, q_offset=q_offset,
-                        impl="pallas", interpret=True)
+    got = ops.attention(
+        q, k, v, causal=causal, q_offset=q_offset, impl="pallas", interpret=True
+    )
     want = ref.attention_ref(q, k, v, causal=causal, q_offset=q_offset)
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
 
 
 def test_flash_xla_matches_naive_long():
@@ -83,18 +88,21 @@ def test_decode_attention_sweep(B, H, Hkv, D, S, block_k, dtype):
     kc = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
     vc = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
     lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
-    got = ops.decode_attention(q, kc, vc, lengths, impl="pallas",
-                               interpret=True, block_k=block_k)
+    got = ops.decode_attention(
+        q, kc, vc, lengths, impl="pallas", interpret=True, block_k=block_k
+    )
     want = ref.decode_attention_ref(q, kc, vc, lengths)
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
 
 
 # ----------------------------------------------------------------------
 # rwkv6
 # ----------------------------------------------------------------------
-@pytest.mark.parametrize("B,T,H,N,chunk", [(1, 32, 2, 16, 8), (2, 48, 3, 32, 16),
-                                           (1, 20, 1, 16, 8)])
+@pytest.mark.parametrize(
+    "B,T,H,N,chunk", [(1, 32, 2, 16, 8), (2, 48, 3, 32, 16), (1, 20, 1, 16, 8)]
+)
 def test_rwkv6_chunk_and_pallas_vs_scan(B, T, H, N, chunk):
     ks = jax.random.split(KEY, 5)
     r = jax.random.normal(ks[0], (B, T, H, N)) * 0.5
@@ -139,18 +147,21 @@ def test_rwkv6_state_carry_split():
     o_full, s_full = ops.rwkv6(r, k, v, w, u, impl="xla", chunk=8)
     h = T // 2
     o1, s1 = ops.rwkv6(r[:, :h], k[:, :h], v[:, :h], w[:, :h], u, impl="xla", chunk=8)
-    o2, s2 = ops.rwkv6(r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, state=s1,
-                       impl="xla", chunk=8)
-    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), o_full,
-                               rtol=2e-4, atol=2e-4)
+    o2, s2 = ops.rwkv6(
+        r[:, h:], k[:, h:], v[:, h:], w[:, h:], u, state=s1, impl="xla", chunk=8
+    )
+    np.testing.assert_allclose(
+        jnp.concatenate([o1, o2], 1), o_full, rtol=2e-4, atol=2e-4
+    )
     np.testing.assert_allclose(s2, s_full, rtol=2e-4, atol=2e-4)
 
 
 # ----------------------------------------------------------------------
 # ssd (mamba2)
 # ----------------------------------------------------------------------
-@pytest.mark.parametrize("B,T,H,P,G,N,chunk",
-                         [(1, 32, 2, 8, 1, 16, 8), (2, 24, 4, 16, 2, 8, 8)])
+@pytest.mark.parametrize(
+    "B,T,H,P,G,N,chunk", [(1, 32, 2, 8, 1, 16, 8), (2, 24, 4, 16, 2, 8, 8)]
+)
 def test_ssd_chunk_and_pallas_vs_scan(B, T, H, P, G, N, chunk):
     ks = jax.random.split(KEY, 6)
     x = jax.random.normal(ks[0], (B, T, H, P)) * 0.5
@@ -218,8 +229,12 @@ def test_done_prefix_multiblock_sweep(n, block_n):
         start = int(rng.integers(0, n))
         limit = int(rng.integers(0, n + 1))
         got = ops.done_prefix(
-            jnp.asarray(done), jnp.int32(start), jnp.int32(limit),
-            impl="pallas", block_n=block_n, interpret=True,
+            jnp.asarray(done),
+            jnp.int32(start),
+            jnp.int32(limit),
+            impl="pallas",
+            block_n=block_n,
+            interpret=True,
         )
         assert int(got) == _done_prefix_oracle(done, start, limit)
 
@@ -232,21 +247,29 @@ def test_done_prefix_edge_cases(n):
     for block_n in (None, n // 4):
         for start in (0, 1, n - 1):
             for done, limit, want in (
-                (all_done, n, n),            # full ring done
-                (all_done, 5, 5),            # limit clamp
-                (none_done, n, 0),           # nothing done
+                (all_done, n, n),  # full ring done
+                (all_done, 5, 5),  # limit clamp
+                (none_done, n, 0),  # nothing done
             ):
                 got = ops.done_prefix(
-                    jnp.asarray(done), jnp.int32(start), jnp.int32(limit),
-                    impl="pallas", block_n=block_n, interpret=True,
+                    jnp.asarray(done),
+                    jnp.int32(start),
+                    jnp.int32(limit),
+                    impl="pallas",
+                    block_n=block_n,
+                    interpret=True,
                 )
                 assert int(got) == want
         # run that wraps across the word/block boundary at n-1 -> 0
         done = np.zeros(n, bool)
         done[n - 1] = done[0] = done[1] = True
         got = ops.done_prefix(
-            jnp.asarray(done), jnp.int32(n - 1), jnp.int32(n),
-            impl="pallas", block_n=block_n, interpret=True,
+            jnp.asarray(done),
+            jnp.int32(n - 1),
+            jnp.int32(n),
+            impl="pallas",
+            block_n=block_n,
+            interpret=True,
         )
         assert int(got) == 3
 
@@ -259,17 +282,28 @@ def test_done_prefix_batch_vs_oracle(R, n, block_n):
         done = rng.random((R, n)) < 0.6
         starts = rng.integers(0, n, R).astype(np.int32)
         limits = rng.integers(0, n + 1, R).astype(np.int32)
-        got = np.asarray(ops.done_prefix_batch(
-            jnp.asarray(done), jnp.asarray(starts), jnp.asarray(limits),
-            impl="pallas", block_n=block_n, interpret=True,
-        ))
+        got = np.asarray(
+            ops.done_prefix_batch(
+                jnp.asarray(done),
+                jnp.asarray(starts),
+                jnp.asarray(limits),
+                impl="pallas",
+                block_n=block_n,
+                interpret=True,
+            )
+        )
         want = np.array(
             [_done_prefix_oracle(done[r], starts[r], limits[r]) for r in range(R)]
         )
         np.testing.assert_array_equal(got, want)
-        xla = np.asarray(ops.done_prefix_batch(
-            jnp.asarray(done), jnp.asarray(starts), jnp.asarray(limits), impl="xla",
-        ))
+        xla = np.asarray(
+            ops.done_prefix_batch(
+                jnp.asarray(done),
+                jnp.asarray(starts),
+                jnp.asarray(limits),
+                impl="xla",
+            )
+        )
         np.testing.assert_array_equal(xla, want)
 
 
@@ -277,13 +311,18 @@ def test_done_prefix_batch_edge_rows():
     """Per-row edges in one batch: all-done, none-done, wrap at n-1, clamp."""
     n = 64
     done = np.zeros((4, n), bool)
-    done[0, :] = True                     # all done
-    done[2, n - 1] = done[2, 0] = True    # wrapping run of 2 from n-1
-    done[3, :10] = True                   # clamped by limit
+    done[0, :] = True  # all done
+    done[2, n - 1] = done[2, 0] = True  # wrapping run of 2 from n-1
+    done[3, :10] = True  # clamped by limit
     starts = np.array([3, 0, n - 1, 0], np.int32)
     limits = np.array([n, n, n, 4], np.int32)
-    got = np.asarray(ops.done_prefix_batch(
-        jnp.asarray(done), jnp.asarray(starts), jnp.asarray(limits),
-        impl="pallas", interpret=True,
-    ))
+    got = np.asarray(
+        ops.done_prefix_batch(
+            jnp.asarray(done),
+            jnp.asarray(starts),
+            jnp.asarray(limits),
+            impl="pallas",
+            interpret=True,
+        )
+    )
     np.testing.assert_array_equal(got, [n, 0, 2, 4])

@@ -76,20 +76,21 @@ def test_compressed_allreduce_with_error_feedback():
     def f(g, e):
         return compressed_pod_allreduce(g, e, "pod")
 
-    fm = shard_map(f, mesh=mesh, in_specs=(P(), P()),
-                   out_specs=(P(), P()), check_vma=False)
+    fm = shard_map(
+        f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()), check_vma=False
+    )
     red, e2 = fm(g, e)
     # single pod: reduction == dequant(quant(g)); residual = g - that
-    np.testing.assert_allclose(np.asarray(red["w"] + e2["w"]),
-                               np.asarray(g["w"]), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(red["w"] + e2["w"]), np.asarray(g["w"]), rtol=1e-6, atol=1e-6
+    )
     # 100 steps of the same gradient: error feedback keeps mean bias ~0
     acc = jnp.zeros_like(g["w"])
     e = error_feedback_init(g)
     for _ in range(100):
         red, e = fm(g, e)
         acc = acc + red["w"]
-    np.testing.assert_allclose(np.asarray(acc / 100), np.asarray(g["w"]),
-                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(acc / 100), np.asarray(g["w"]), atol=2e-3)
 
 
 def test_global_norm():

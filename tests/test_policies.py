@@ -79,8 +79,14 @@ def test_both_planes_resolve(name):
     pol = make_policy(name, N_WORKERS, batch=8)
     assert pol.n_workers == N_WORKERS
     q = make_queue(name, N_WORKERS, 64)
-    for surface in ("produce", "produce_batch", "claim", "complete",
-                    "try_release", "backlog"):
+    for surface in (
+        "produce",
+        "produce_batch",
+        "claim",
+        "complete",
+        "try_release",
+        "backlog",
+    ):
         assert callable(getattr(q, surface)), (name, surface)
 
 

@@ -215,8 +215,9 @@ def test_packed_observationally_equivalent_threaded(seed):
         lock = threading.Lock()
         stop = threading.Event()
 
-        def worker(ring=ring, delivered=delivered, intervals=intervals,
-                   lock=lock, stop=stop):
+        def worker(
+            ring=ring, delivered=delivered, intervals=intervals, lock=lock, stop=stop
+        ):
             while not stop.is_set():
                 c = ring.claim(max_batch=16)
                 if c is None:

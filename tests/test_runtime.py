@@ -34,8 +34,12 @@ def test_failure_detector_marks_dead():
 
 def test_sim_cluster_detects_kill_and_refits():
     work = []
-    cluster = SimCluster(n_hosts=4, work_fn=lambda h, s: work.append((h, s)),
-                         heartbeat_every=0.01, detect_timeout=0.08)
+    cluster = SimCluster(
+        n_hosts=4,
+        work_fn=lambda h, s: work.append((h, s)),
+        heartbeat_every=0.01,
+        detect_timeout=0.08,
+    )
     seen = []
     import threading
 
@@ -98,11 +102,29 @@ def test_trainer_crash_restart_resumes(tmp_path):
     from repro.config import ArchConfig
     from repro.train import Trainer, TrainerConfig
 
-    cfg = ArchConfig("t", "dense", n_layers=2, d_model=32, n_heads=2,
-                     n_kv_heads=1, d_ff=64, vocab=128, attention_impl="xla",
-                     dtype="float32", remat=False)
-    tc = dict(batch=4, seq=16, steps=8, checkpoint_every=4, lr=1e-3,
-              warmup=2, ring_size=16, n_producers=1)
+    cfg = ArchConfig(
+        "t",
+        "dense",
+        n_layers=2,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=1,
+        d_ff=64,
+        vocab=128,
+        attention_impl="xla",
+        dtype="float32",
+        remat=False,
+    )
+    tc = dict(
+        batch=4,
+        seq=16,
+        steps=8,
+        checkpoint_every=4,
+        lr=1e-3,
+        warmup=2,
+        ring_size=16,
+        n_producers=1,
+    )
 
     # uninterrupted reference
     ref = Trainer(cfg, TrainerConfig(**tc)).run()
@@ -116,5 +138,4 @@ def test_trainer_crash_restart_resumes(tmp_path):
     out = t2.run()
     # restart resumed from step 4 -> only 4 more losses
     assert len(out["losses"]) == 4
-    np.testing.assert_allclose(out["losses"], ref["losses"][4:], rtol=1e-4,
-                               atol=1e-5)
+    np.testing.assert_allclose(out["losses"], ref["losses"][4:], rtol=1e-4, atol=1e-5)

@@ -19,12 +19,14 @@ def test_single_flow_completes_and_is_link_bound():
 def test_huge_flow_multicore_penalty_is_marginal():
     """Table 5: moving 1 -> 4 workers on one flow costs only percent-level
     FCT (reordering-induced retransmits), never a large regression."""
-    base = simulate_tcp([(0, 60_000, 0.0)],
-                        TcpSimConfig(policy="corec", n_workers=1, seed=1,
-                                     deschedule_prob=1e-3))[0]
-    multi = simulate_tcp([(0, 60_000, 0.0)],
-                         TcpSimConfig(policy="corec", n_workers=4, seed=1,
-                                      deschedule_prob=1e-3))[0]
+    base = simulate_tcp(
+        [(0, 60_000, 0.0)],
+        TcpSimConfig(policy="corec", n_workers=1, seed=1, deschedule_prob=1e-3),
+    )[0]
+    multi = simulate_tcp(
+        [(0, 60_000, 0.0)],
+        TcpSimConfig(policy="corec", n_workers=4, seed=1, deschedule_prob=1e-3),
+    )[0]
     rel = multi.fct / base.fct - 1.0
     assert -0.02 < rel < 0.08, rel  # paper: 2-3% worst case
     assert multi.retransmissions >= base.retransmissions
@@ -35,8 +37,9 @@ def test_small_flows_corec_beats_scaleout_tail():
     flows = [(i, 7, i * 1.5) for i in range(96)]
     fcts = {}
     for pol in ("corec", "scaleout"):
-        res = simulate_tcp(flows, TcpSimConfig(policy=pol, n_workers=4,
-                                               service_mean=3.0, seed=3))
+        res = simulate_tcp(
+            flows, TcpSimConfig(policy=pol, n_workers=4, service_mean=3.0, seed=3)
+        )
         fcts[pol] = np.array([r.fct for r in res])
     assert fcts["corec"].mean() < fcts["scaleout"].mean()
     assert np.percentile(fcts["corec"], 95) < np.percentile(fcts["scaleout"], 95)

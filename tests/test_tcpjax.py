@@ -1,0 +1,157 @@
+"""Vectorized TCP lane engine vs the DES TCP plane.
+
+Covers the tentpole guarantees of :mod:`repro.core.tcpjax`:
+
+* the whole registry (all five built-in policies, hybrid included) runs
+  TCP lanes on the jax plane,
+* exactly-once on the vectorized forwarder state: every transmission
+  put on the link is claimed by exactly one batch — the packed claim
+  bitmap ends with popcount == done-prefix == sends (checked by the
+  multi-ring done-prefix kernel),
+* distributional DES-vs-jax parity on flow completion times: pooled
+  per-flow FCTs on matched configs within stated tolerance (P50_RTOL /
+  P99_RTOL below), with the DES plane steered by the jax plane's
+  32-bit hash via ``TcpSimConfig.queue_hints``,
+* the TCP control laws react: shrinking the receive window stretches
+  FCT, reordering pressure produces retransmissions and the adaptive
+  threshold detects spurious ones.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import jax_policies, sweep_tcp_jax  # noqa: E402
+from repro.core.jaxplane import rss_hash32  # noqa: E402
+from repro.core.tcp import TcpSimConfig, simulate_tcp  # noqa: E402
+from repro.core.tcpjax import run_tcp_lanes  # noqa: E402
+
+JAX_POLS = jax_policies()
+N_WORKERS = 4
+
+# stated parity tolerance: pooled FCT percentiles, relative error
+P50_RTOL = 0.15
+P99_RTOL = 0.35
+
+
+def test_registry_includes_all_five_policies_on_tcp_lanes():
+    assert {"corec", "scaleout", "locked", "hybrid", "adaptive-batch"} <= set(JAX_POLS)
+
+
+# ---------------------------------------------------------------------
+# Exactly-once / no-loss on the vectorized forwarder state
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("name", JAX_POLS)
+def test_exactly_once_and_completion(name):
+    batches = np.array([1, 8, 32], dtype=np.float32)
+    res = run_tcp_lanes(
+        name,
+        np.arange(3),
+        n_pkts=120,
+        lane_params=dict(batch=batches, max_batch=batches),
+        n_workers=N_WORKERS,
+    )
+    assert np.asarray(res.done).all()
+    sends = np.asarray(res.sends)
+    assert (np.asarray(res.claimed_popcount) == sends).all()
+    assert (np.asarray(res.claimed_prefix) == sends).all()
+    assert (np.asarray(res.items) == sends).all()
+    fct = np.asarray(res.fct)
+    assert np.isfinite(fct).all() and (fct > 0).all()
+    # every original packet crossed the link at least once
+    assert (sends >= 120).all()
+
+
+def test_unfinished_flows_report_not_done():
+    # a starved step budget must surface as done=False, not garbage FCT
+    res = run_tcp_lanes("corec", np.arange(2), n_pkts=200, n_steps=40)
+    assert not np.asarray(res.done).any()
+    assert np.isinf(np.asarray(res.fct)).all()
+
+
+# ---------------------------------------------------------------------
+# TCP control laws react to their knobs
+# ---------------------------------------------------------------------
+def test_receive_window_cap_stretches_fct():
+    open_w = run_tcp_lanes(
+        "corec", np.arange(3), n_pkts=300, tcp_params=dict(rwnd=512)
+    )
+    capped = run_tcp_lanes(
+        "corec", np.arange(3), n_pkts=300, tcp_params=dict(rwnd=4)
+    )
+    assert np.asarray(capped.done).all()
+    # rwnd=4 forces ~one window per RTT: far slower than the open window
+    assert np.mean(np.asarray(capped.fct)) > 2.0 * np.mean(np.asarray(open_w.fct))
+
+
+def test_deschedule_pressure_produces_retransmissions():
+    calm = run_tcp_lanes(
+        "corec",
+        np.arange(4),
+        n_pkts=400,
+        lane_params=dict(deschedule_prob=0.0),
+    )
+    stormy = run_tcp_lanes(
+        "corec",
+        np.arange(4),
+        n_pkts=400,
+        lane_params=dict(deschedule_prob=0.05, deschedule_mean=400.0),
+        tcp_params=dict(init_reorder_thresh=1, max_reorder_thresh=1),
+    )
+    assert np.asarray(stormy.done).all()
+    r_calm = np.asarray(calm.retransmissions).sum()
+    r_storm = np.asarray(stormy.retransmissions).sum()
+    assert r_storm > r_calm
+    # a hair-trigger threshold under reordering retransmits segments the
+    # receiver already saw: DSACK must detect some as spurious
+    assert np.asarray(stormy.spurious).sum() > 0
+
+
+# ---------------------------------------------------------------------
+# Distributional parity vs the DES plane on matched configs
+# ---------------------------------------------------------------------
+def _des_fcts(name, flows, hints, seeds):
+    out = []
+    for seed in seeds:
+        cfg = TcpSimConfig(
+            policy=name, n_workers=N_WORKERS, seed=seed, queue_hints=hints
+        )
+        out += [r.fct for r in simulate_tcp(flows, cfg)]
+    return np.asarray(out)
+
+
+@pytest.mark.parametrize("name", JAX_POLS)
+def test_distributional_parity_with_des_plane(name):
+    n_flows, npk = 12, 50
+    n_pkts = np.full(n_flows, npk)
+    t_start = np.arange(n_flows) * 4.0
+    flows = [(i, npk, float(t_start[i])) for i in range(n_flows)]
+    hints = {
+        i: int(h) for i, h in enumerate(rss_hash32(np.arange(n_flows), N_WORKERS))
+    }
+    res = sweep_tcp_jax(
+        name, np.arange(6), n_pkts=n_pkts, t_start=t_start, n_workers=N_WORKERS
+    )
+    assert np.asarray(res.done).all()
+    j = np.asarray(res.fct).ravel()
+    d = _des_fcts(name, flows, hints, range(3))
+    j50, j99 = np.percentile(j, 50), np.percentile(j, 99)
+    d50, d99 = np.percentile(d, 50), np.percentile(d, 99)
+    assert j50 == pytest.approx(d50, rel=P50_RTOL), (name, j50, d50)
+    assert j99 == pytest.approx(d99, rel=P99_RTOL), (name, j99, d99)
+
+
+def test_single_huge_flow_parity_corec():
+    # the paper's headline worst case: one large flow, link-bottlenecked
+    res = run_tcp_lanes("corec", np.arange(5), n_pkts=900, n_workers=N_WORKERS)
+    assert np.asarray(res.done).all()
+    j = float(np.mean(np.asarray(res.fct)))
+    des = [
+        simulate_tcp([(0, 900, 0.0)], TcpSimConfig(policy="corec", seed=s))[0].fct
+        for s in range(3)
+    ]
+    d = float(np.mean(des))
+    assert j == pytest.approx(d, rel=P50_RTOL), (j, d)
