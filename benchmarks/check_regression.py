@@ -8,24 +8,30 @@ noisy; the guard exists to catch order-of-magnitude breakage like an
 accidentally-serialized plane or a policy that stopped batching, not
 1.1x drift).
 
-A metric regresses when ``observed > baseline * tolerance``; the guard
-fails the workflow naming every offending (source, policy, metric)
-triple.  Metrics that *improve* never fail (a lower p99 is progress,
-and quick-size variance would make a two-sided check flap).  Missing
-files, policies or metrics fail too — a benchmark silently dropping a
-policy is exactly the kind of breakage this guard is for — and so does
-a results file that no longer parses as JSON.
+A latency metric regresses when ``observed > baseline * tolerance``;
+the guard fails the workflow naming every offending (source, policy,
+metric) triple.  Metrics that *improve* never fail (a lower p99 is
+progress, and quick-size variance would make a two-sided check flap).
+Throughput metrics (``lane_points_per_s``, see THROUGHPUT_METRICS) are
+gated one-sided in the OTHER direction: they fail when ``observed <
+baseline * throughput_floor`` (default 0.5x — shared CI runners are
+slow and noisy; the floor exists to catch a sweep that silently
+stopped being fused/compacted, not 1.2x jitter), and improving never
+fails.  Missing files, policies or metrics fail too — a benchmark
+silently dropping a policy is exactly the kind of breakage this guard
+is for — and so does a results file that no longer parses as JSON.
 
 Gated sources: per-policy p50/p99 from ``policy_sweep.json`` (udp +
-mawi DES runs), forwarder-lane p50/p99 medians from ``jax_sweep.json``,
-and the TCP-lane flow-completion-time p50/p99 from the same file's
-``tcp`` section (``jax_sweep/tcp/<policy>``).
+mawi DES runs), forwarder-lane p50/p99 medians + fused-sweep
+``lane_points_per_s`` from ``jax_sweep.json``, and the TCP-lane
+flow-completion-time p50/p99 + ``lane_points_per_s`` from the same
+file's ``tcp`` section (``jax_sweep/tcp/<policy>``).
 
 Usage (CI):
     python -m benchmarks.check_regression \
         --results benchmarks/results/quick \
         --baselines benchmarks/regression_baselines.json \
-        --tolerance 2.0
+        --tolerance 2.0 --throughput-floor 0.5
 """
 
 from __future__ import annotations
@@ -36,6 +42,9 @@ import sys
 from pathlib import Path
 
 HERE = Path(__file__).resolve().parent
+
+#: metrics where bigger is better: gated one-sided against a floor
+THROUGHPUT_METRICS = frozenset({"lane_points_per_s"})
 
 
 def _load(path: Path) -> dict:
@@ -61,16 +70,25 @@ def collect_metrics(results_dir: Path) -> dict:
         sweep = _load(js)
         for pol, row in sweep.get("policies", {}).items():
             out[f"jax_sweep/{pol}"] = {
-                m: row[m] for m in ("p50_median", "p99_median") if m in row
+                m: row[m]
+                for m in ("p50_median", "p99_median", "lane_points_per_s")
+                if m in row
             }
         for pol, row in sweep.get("tcp", {}).get("policies", {}).items():
             out[f"jax_sweep/tcp/{pol}"] = {
-                m: row[m] for m in ("fct_p50", "fct_p99") if m in row
+                m: row[m]
+                for m in ("fct_p50", "fct_p99", "lane_points_per_s")
+                if m in row
             }
     return out
 
 
-def check(results_dir: Path, baselines_path: Path, tolerance: float) -> list:
+def check(
+    results_dir: Path,
+    baselines_path: Path,
+    tolerance: float,
+    throughput_floor: float = 0.5,
+) -> list:
     """Returns a list of human-readable failure strings (empty = pass)."""
     failures = []
     if not results_dir.exists():
@@ -99,6 +117,12 @@ def check(results_dir: Path, baselines_path: Path, tolerance: float) -> list:
             got = got_row.get(metric)
             if got is None:
                 failures.append(f"{key}: metric {metric} missing")
+            elif metric in THROUGHPUT_METRICS:
+                if not got >= base * throughput_floor:  # NaN fails too
+                    failures.append(
+                        f"{key}: {metric} regressed {got:.3f} < "
+                        f"{base:.3f} * {throughput_floor:g} (baseline floor)"
+                    )
             elif not got <= base * tolerance:  # NaN fails too, on purpose
                 failures.append(
                     f"{key}: {metric} regressed {got:.3f} > "
@@ -121,8 +145,15 @@ def main(argv=None) -> int:
         default=HERE / "regression_baselines.json",
     )
     ap.add_argument("--tolerance", type=float, default=2.0)
+    ap.add_argument(
+        "--throughput-floor",
+        type=float,
+        default=0.5,
+        help="one-sided floor for higher-is-better metrics "
+        "(lane_points_per_s fails below baseline * floor)",
+    )
     args = ap.parse_args(argv)
-    failures = check(args.results, args.baselines, args.tolerance)
+    failures = check(args.results, args.baselines, args.tolerance, args.throughput_floor)
     if failures:
         print(f"REGRESSION GUARD FAILED ({len(failures)}):", file=sys.stderr)
         for f in failures:

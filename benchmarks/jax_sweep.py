@@ -1,19 +1,32 @@
-"""Registry-wide vectorized sweep on the jax plane (one jit per policy).
+"""Registry-wide vectorized sweep on the jax plane (ONE jit for all).
 
-The payoff of :mod:`repro.core.jaxplane`: where ``policy_sweep.py``
-evaluates one (policy, config, seed) point per Python event loop, this
-benchmark evaluates the whole parameter grid of every jax-capable
-policy — claim batch x offered rate x deschedule probability x seeds,
->= 1000 lanes per policy — in a SINGLE jitted ``lax.scan``/``vmap``
-call per policy, with latency percentiles and RFC-4737 reordering
-computed in-graph and the exactly-once invariant checked from the
-packed claim bitmaps (multi-ring done-prefix kernel).
+The payoff of :mod:`repro.core.jaxplane`'s claim-compacted engine:
+where ``policy_sweep.py`` evaluates one (policy, config, seed) point
+per Python event loop, this benchmark evaluates the whole parameter
+grid of EVERY jax-capable policy — claim batch x offered rate x
+deschedule probability x seeds, >= 1000 lanes per policy — in a SINGLE
+fused jitted call (:func:`repro.core.jaxplane.run_lanes_fused`), with
+latency percentiles and RFC-4737 reordering computed in-graph and the
+exactly-once invariant checked from the packed claim bitmaps
+(multi-ring done-prefix kernel).
 
 The TCP section does the same for the closed loop
-(:mod:`repro.core.tcpjax`): claim batch x deschedule probability x
-sender link rate x seeds, >= 1000 TCP lanes per policy in one jitted
-call each, reporting flow-completion-time p50/p99 and retransmit
-counts next to the forwarder latency percentiles.
+(:mod:`repro.core.tcpjax.run_tcp_lanes_fused`): claim batch x
+deschedule probability x sender link rate x seeds, >= 1000 TCP lanes
+per policy fused into one call, reporting flow-completion-time p50/p99
+and retransmit counts next to the forwarder latency percentiles.
+
+Compile time is measured separately from steady-state execution
+through the AOT lower/compile path: every row reports ``compile_s``
+(paid once per fused call) next to ``run_s``, and
+``lane_points_per_s`` is steady-state throughput (total fused lanes /
+``run_s``) — the metric the CI regression guard gates one-sided.
+
+CLI / ``run()`` knobs: ``--lanes-scale`` multiplies the seed axis
+(sweep scale grows linearly in lanes with no new compiles);
+``--shards`` partitions the lane axis across local devices via the
+``repro.compat`` ``shard_map`` shims (``auto`` = every local device,
+forced-host CPU devices included).
 
 Skips with a named notice (not a crash) on hosts without jax.
 
@@ -22,7 +35,7 @@ Results land in ``benchmarks/results/jax_sweep.json``.
 
 from __future__ import annotations
 
-import time
+import argparse
 
 import numpy as np
 
@@ -52,6 +65,8 @@ def run(
     n_seeds: int = N_SEEDS,
     workload: str = "udp",
     tcp_pkts: int = 256,
+    lanes_scale: float = 1.0,
+    shards: int | str = 1,
 ):
     try:
         import jax  # noqa: F401
@@ -60,17 +75,40 @@ def run(
         emit("jax_sweep/SKIPPED", 0.0, notice)
         return {"skipped": notice}
 
-    from repro.core import jax_policies
-    from repro.core.jaxplane import LaneParams, TrafficParams, lane_grid, run_lanes
-    from repro.core.tcpjax import TcpParams, run_tcp_lanes
+    from repro.core.jaxplane import (
+        LaneParams,
+        TrafficParams,
+        lane_grid,
+        run_lanes_fused,
+    )
+    from repro.core.policy import fused_jax_requests, jax_policies
+    from repro.core.tcpjax import TcpParams, run_tcp_lanes_fused
 
+    n_seeds = max(1, round(n_seeds * lanes_scale))
+    pols = jax_policies()
     lanes_arrays, points = lane_grid(AXES, np.arange(n_seeds))
     seeds = lanes_arrays.pop("__seeds__")
     lanes = seeds.shape[0]
     n_cfg = lanes // n_seeds
-    lane_kw_base = {k: v for k, v in lanes_arrays.items() if k in LaneParams._fields}
+    lane_kw = {k: v for k, v in lanes_arrays.items() if k in LaneParams._fields}
     traffic_kw = {k: v for k, v in lanes_arrays.items() if k in TrafficParams._fields}
 
+    requests = fused_jax_requests(
+        seeds, lane_params=lane_kw, policies=pols, traffic_params=traffic_kw
+    )
+    timings: dict = {}
+    results = run_lanes_fused(
+        requests,
+        workload=workload,
+        n_packets=n_packets,
+        n_workers=N_WORKERS,
+        max_batch=MAX_BATCH,
+        shards=shards,
+        timings=timings,
+    )
+    lanes_total = lanes * len(pols)
+    compile_s, run_s = timings["compile_s"], timings["run_s"]
+    lane_points = lanes_total / run_s
     out: dict = {
         "workload": workload,
         "n_workers": N_WORKERS,
@@ -78,26 +116,19 @@ def run(
         "lanes_per_policy": int(lanes),
         "axes": {k: list(map(float, v)) for k, v in AXES.items()},
         "n_seeds": int(n_seeds),
+        "engine": {
+            "fused_policies": len(pols),
+            "lanes_total": int(lanes_total),
+            "compile_s": compile_s,
+            "run_s": run_s,
+            "wall_s": compile_s + run_s,
+            "lane_points_per_s": lane_points,
+            "shards": str(shards),
+        },
         "policies": {},
     }
-    for pol in jax_policies():
-        lane_kw = dict(lane_kw_base)
-        if pol == "adaptive-batch":
-            # the swept knob is the adaptive clamp, not a fixed size
-            lane_kw["max_batch"] = lane_kw["batch"]
-        t0 = time.perf_counter()
-        res = run_lanes(
-            pol,
-            seeds,
-            lane_params=lane_kw,
-            traffic_params=traffic_kw,
-            workload=workload,
-            n_packets=n_packets,
-            n_workers=N_WORKERS,
-            max_batch=MAX_BATCH,
-        )
-        p50 = np.asarray(res.p50)  # blocks until the device is done
-        wall = time.perf_counter() - t0
+    for pol, res in zip(pols, results):
+        p50 = np.asarray(res.p50)
         p99 = np.asarray(res.p99)
         pop = np.asarray(res.claimed_popcount)
         pref = np.asarray(res.claimed_prefix)
@@ -122,8 +153,10 @@ def run(
         row = {
             "lanes": int(lanes),
             "lossless": lossless,
-            "wall_s": wall,
-            "lane_points_per_s": lanes / wall,
+            "compile_s": compile_s,
+            "run_s": run_s,
+            "wall_s": compile_s + run_s,
+            "lane_points_per_s": lane_points,
             "p50_median": float(np.median(p50)),
             "p99_median": float(np.median(p99)),
             "p99_best": float(p99_cfg.min()),
@@ -133,10 +166,10 @@ def run(
         out["policies"][pol] = row
         emit(
             f"jax_sweep/{pol}",
-            wall * 1e6,
-            f"{lanes} lanes x {n_packets} pkts in one jit "
-            f"({lanes / wall:.0f} lanes/s), p99 med "
-            f"{row['p99_median']:.3f} best {row['p99_best']:.3f}, "
+            run_s * 1e6,
+            f"{lanes} lanes x {n_packets} pkts (fused x{len(pols)}, "
+            f"{lane_points:.0f} lane-points/s, compile {compile_s:.1f}s), "
+            f"p99 med {row['p99_median']:.3f} best {row['p99_best']:.3f}, "
             f"lossless={lossless}",
         )
         if not lossless:
@@ -150,36 +183,46 @@ def run(
     tcp_seeds = tcp_arrays.pop("__seeds__")
     t_lanes = tcp_seeds.shape[0]
     t_ncfg = t_lanes // n_seeds
-    tcp_lane_base = {k: v for k, v in tcp_arrays.items() if k in LaneParams._fields}
+    tcp_lane_kw = {k: v for k, v in tcp_arrays.items() if k in LaneParams._fields}
     tcp_tcp_kw = {k: v for k, v in tcp_arrays.items() if k in TcpParams._fields}
     n_flows = 2
     flow_pkts = np.full(n_flows, max(8, tcp_pkts // n_flows), dtype=np.int32)
     flow_start = np.arange(n_flows, dtype=np.float32) * 37.0
+    tcp_requests = fused_jax_requests(
+        tcp_seeds, lane_params=tcp_lane_kw, policies=pols, tcp_params=tcp_tcp_kw
+    )
+    tcp_timings: dict = {}
+    tcp_results = run_tcp_lanes_fused(
+        tcp_requests,
+        n_pkts=flow_pkts,
+        t_start=flow_start,
+        n_workers=N_WORKERS,
+        max_batch=MAX_BATCH,
+        shards=shards,
+        timings=tcp_timings,
+    )
+    t_total = t_lanes * len(pols)
+    t_compile, t_run = tcp_timings["compile_s"], tcp_timings["run_s"]
+    t_points = t_total / t_run
     out["tcp"] = {
         "lanes_per_policy": int(t_lanes),
         "axes": {k: list(map(float, v)) for k, v in TCP_AXES.items()},
         "n_flows": n_flows,
         "pkts_per_flow": int(flow_pkts[0]),
         "n_seeds": int(n_seeds),
+        "engine": {
+            "fused_policies": len(pols),
+            "lanes_total": int(t_total),
+            "compile_s": t_compile,
+            "run_s": t_run,
+            "wall_s": t_compile + t_run,
+            "lane_points_per_s": t_points,
+            "shards": str(shards),
+        },
         "policies": {},
     }
-    for pol in jax_policies():
-        lane_kw = dict(tcp_lane_base)
-        if pol == "adaptive-batch":
-            lane_kw["max_batch"] = lane_kw["batch"]
-        t0 = time.perf_counter()
-        res = run_tcp_lanes(
-            pol,
-            tcp_seeds,
-            n_pkts=flow_pkts,
-            t_start=flow_start,
-            lane_params=lane_kw,
-            tcp_params=tcp_tcp_kw,
-            n_workers=N_WORKERS,
-            max_batch=MAX_BATCH,
-        )
-        fct = np.asarray(res.fct)  # blocks until the device is done
-        wall = time.perf_counter() - t0
+    for pol, res in zip(pols, tcp_results):
+        fct = np.asarray(res.fct)
         done = np.asarray(res.done)
         sends = np.asarray(res.sends)
         ok_pop = bool((np.asarray(res.claimed_popcount) == sends).all())
@@ -202,8 +245,10 @@ def run(
             "lanes": int(t_lanes),
             "complete": complete,
             "lossless": lossless,
-            "wall_s": wall,
-            "lane_points_per_s": t_lanes / wall,
+            "compile_s": t_compile,
+            "run_s": t_run,
+            "wall_s": t_compile + t_run,
+            "lane_points_per_s": t_points,
             "fct_p50": float(np.percentile(fct, 50)),
             "fct_p99": float(np.percentile(fct, 99)),
             "fct_worst": float(fct_cfg.max()),
@@ -215,9 +260,10 @@ def run(
         out["tcp"]["policies"][pol] = row
         emit(
             f"jax_sweep/tcp/{pol}",
-            wall * 1e6,
-            f"{t_lanes} TCP lanes x {int(flow_pkts.sum())} pkts in one jit "
-            f"({t_lanes / wall:.0f} lanes/s), FCT p50 {row['fct_p50']:.1f} "
+            t_run * 1e6,
+            f"{t_lanes} TCP lanes x {int(flow_pkts.sum())} pkts (fused "
+            f"x{len(pols)}, {t_points:.0f} lane-points/s, compile "
+            f"{t_compile:.1f}s), FCT p50 {row['fct_p50']:.1f} "
             f"p99 {row['fct_p99']:.1f}, retx/lane {row['retx_per_lane']:.2f}, "
             f"lossless={lossless} complete={complete}",
         )
@@ -230,5 +276,36 @@ def run(
     return out
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-packets", type=int, default=2000)
+    ap.add_argument("--n-seeds", type=int, default=N_SEEDS)
+    ap.add_argument("--workload", default="udp")
+    ap.add_argument("--tcp-pkts", type=int, default=256)
+    ap.add_argument(
+        "--lanes-scale",
+        type=float,
+        default=1.0,
+        help="multiply the seed axis: lane counts scale linearly with "
+        "no extra compiles (2.0 -> 2016 lanes/policy)",
+    )
+    ap.add_argument(
+        "--shards",
+        default="1",
+        help="partition the lane axis over this many local devices "
+        "('auto' = all, incl. --xla_force_host_platform_device_count)",
+    )
+    args = ap.parse_args(argv)
+    shards = args.shards if args.shards == "auto" else int(args.shards)
+    run(
+        n_packets=args.n_packets,
+        n_seeds=args.n_seeds,
+        workload=args.workload,
+        tcp_pkts=args.tcp_pkts,
+        lanes_scale=args.lanes_scale,
+        shards=shards,
+    )
+
+
 if __name__ == "__main__":
-    run()
+    main()

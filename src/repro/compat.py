@@ -24,7 +24,13 @@ from typing import Any, Sequence
 
 import jax
 
-__all__ = ["shard_map", "make_mesh", "tpu_compiler_params"]
+__all__ = [
+    "shard_map",
+    "make_mesh",
+    "lane_mesh",
+    "device_count",
+    "tpu_compiler_params",
+]
 
 
 def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
@@ -62,6 +68,26 @@ def make_mesh(shape: Sequence[int], axis_names: Sequence[str]) -> Any:
 
     devices = mesh_utils.create_device_mesh(tuple(shape))
     return jax.sharding.Mesh(devices, tuple(axis_names))
+
+
+def device_count() -> int:
+    """Local devices visible to this process (forced-host CPUs included).
+
+    CI exercises multi-device code paths on CPU by exporting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    initializes; this is the portable count those paths size against.
+    """
+    return jax.local_device_count()
+
+
+def lane_mesh(n_shards: int) -> Any:
+    """A 1-D ``('lanes',)`` mesh over ``n_shards`` devices.
+
+    The lane-axis sharding entry the vectorized sweep engines
+    (``core/jaxplane.py`` / ``core/tcpjax.py``) partition over; built
+    through :func:`make_mesh` so the jax API drift stays shimmed here.
+    """
+    return make_mesh((n_shards,), ("lanes",))
 
 
 def tpu_compiler_params(**kwargs: Any) -> Any:

@@ -32,6 +32,7 @@ from .dispatch import DispatchResult, Item, WorkerPool, make_queue
 from .policy import (
     RxPolicy,
     available_policies,
+    fused_jax_requests,
     get_spec,
     jax_policies,
     make_jax_policy,
@@ -59,7 +60,7 @@ __all__ = [
     "DesItem", "EventLoop", "PlaneStats", "WorkerPlane",
     "RxPolicy", "available_policies", "get_spec", "make_policy",
     "make_thread_queue", "register_policy", "jax_policies",
-    "make_jax_policy",
+    "make_jax_policy", "fused_jax_requests",
     "DispatchResult", "Item", "WorkerPool", "make_queue",
     "simulate_policy", "simulate_protocol", "simulate_scale_out",
     "simulate_scale_up", "sweep_load", "sweep_policy_jax",

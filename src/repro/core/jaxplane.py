@@ -3,57 +3,70 @@
 The DES plane (:mod:`repro.core.des`) evaluates one (policy, config,
 seed) point per Python event loop — minutes of wall clock for a
 registry-wide sweep.  This module re-states the same receive-side model
-as a pure JAX program: a queueing/forwarder **step function** advanced
-by ``lax.scan`` over claim events and ``vmap``-ed over a
-(policy-param, seed) **lane** axis, so thousands of sweep points
-evaluate in ONE jitted call (``benchmarks/jax_sweep.py``).
+as a pure JAX program built around a **claim-compacted scan engine**:
 
-Model (matches the DES plane's dynamics, not its RNG stream — parity is
-distributional, see ``tests/test_jaxplane.py``):
-
-* Packets are pre-drawn per lane (arrivals sorted, per-packet service
-  times, flow keys) exactly like the scenario layers pre-draw them.
-* State per lane: per-queue claim pointers, per-worker free times, a
-  lock horizon (``locked`` only) and a **word-packed claim bitmap** in
-  the AtomicBitmap layout of ``core/ring.py`` — one bit per packet, set
-  when its batch is claimed.
-* One scan step = one batch claim: the worker with the earliest
+* One scan step = one batch claim (the worker with the earliest
   feasible claim time takes ``next_batch(backlog)`` packets from its
-  queue, pays the claim overhead (+ a rare deschedule stall), and its
-  per-packet completions are scattered into the completion-time vector.
-  N steps drain N packets (every active step claims >= 1).
+  queue).  The step carries only O(workers) state — queue claim
+  pointers, worker free times, a lock horizon and three counters — and
+  emits a tiny :class:`ClaimRecord` ``(queue, start, size, t_claimed)``
+  instead of scattering per-packet completion times through the carry.
+* After the scan, ONE batched segment-style scatter reconstructs every
+  packet's completion time from the claim records (scatter claim ids at
+  their start ranks, forward-fill with ``cummax``, difference of
+  per-queue service prefix sums), and the packed claim bitmap is packed
+  from the claimed mask in one shot (:func:`repro.kernels.ops.
+  pack_bits_u32`).
+* The scan runs OUTSIDE the lane vmap in chunks of ``chunk`` steps,
+  each chunk guarded by a scalar ``lax.cond`` on "every lane drained" —
+  a real branch, so once all lanes are done the remaining claim budget
+  costs nothing (the ``done`` short-circuit).  The claim budget is an
+  upper bound on claim events; the sound default is ``n_packets``
+  (every active claim takes >= 1 packet) and callers that know their
+  load regime can pass a tighter ``claim_budget``.
+* **Fusion**: :func:`run_lanes_fused` evaluates every requested policy
+  in ONE jitted call — the lane axis is segmented per policy with
+  static boundaries, each segment's step specialized to its
+  :class:`JaxPolicy` (the static-segment equivalent of a ``lax.switch``
+  over the policy table, without paying for the untaken branches on
+  every lane), so a registry-wide sweep compiles and dispatches once
+  instead of once per policy.
+* **Sharding**: ``shards > 1`` partitions the lane axis across devices
+  through the :mod:`repro.compat` ``shard_map``/``make_mesh`` shims
+  (each segment is padded to a multiple of the device count; CI
+  exercises the path on CPU via ``--xla_force_host_platform_device_
+  count``).  Lane-axis inputs are donated to the jit on backends that
+  support aliasing, and the working set is dtype-audited: fp32
+  completion vectors, uint32 packed bitmaps, int32 claim records.
 
-Policies plug in as :class:`JaxPolicy` — pure-function analogues of
-:class:`repro.core.policy.RxPolicy`'s two decisions over arrays:
-``select_queue`` (steering, vectorized over flow keys) and
-``next_batch`` (claim sizing from the instantaneous backlog).  The
-registry's ``PolicySpec.jax_factory`` resolves the same names
-(``corec`` / ``scaleout`` / ``locked`` / ``hybrid`` /
-``adaptive-batch``) to these.  ``hybrid``'s work stealing couples
-queues through the instantaneous backlogs: at claim time the worker
-drains its own RSS queue when non-empty, otherwise the victim is a
-vectorized ``argmax`` over per-queue backlogs (counted by
-``searchsorted`` at the claim instant, exactly like the DES plane's
-``len(queue)`` at dispatch time).
+``engine="reference"`` keeps the per-claim scan that writes each
+claim's completion window inside the step (the pre-compaction
+formulation): ``tests/test_compaction.py`` pins the compacted engine
+bit-identical to it for every registry policy.
 
-Latency and RFC-4737 reordering accounting run **in-graph**: sojourn
-percentiles, the Type-P-Reordered ratio (NextExp via a running max over
-the completion order) and the max reordering distance are computed per
-lane inside the jit, and the exactly-once invariant is checked from the
-packed claim bitmaps with the multi-ring done-prefix kernel
-(:func:`repro.kernels.ops.done_prefix_packed` — Pallas fast path on
-TPU, interpret/XLA fallback on CPU).
+Model semantics (matching the DES plane's dynamics, not its RNG stream
+— parity is distributional, see ``tests/test_jaxplane.py``): packets
+are pre-drawn per lane exactly like the scenario layers pre-draw them;
+state per lane is per-queue claim pointers, per-worker free times and a
+lock horizon (``locked`` only); ``hybrid`` steals couple queues through
+instantaneous backlogs (``searchsorted`` at the claim instant).
+Latency percentiles, the RFC-4737 Type-P-Reordered ratio / max
+distance, and the exactly-once check (claim-bitmap popcount == done
+prefix == items, via :func:`repro.kernels.ops.done_prefix_packed`) all
+run in-graph.
 """
 
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from ..kernels import ops as kernel_ops
 
 __all__ = [
@@ -61,6 +74,7 @@ __all__ = [
     "LaneParams",
     "TrafficParams",
     "LaneResult",
+    "ClaimRecord",
     "JAX_POLICIES",
     "jax_policy_names",
     "build_policy",
@@ -68,6 +82,7 @@ __all__ = [
     "reorder_metrics",
     "lane_grid",
     "run_lanes",
+    "run_lanes_fused",
 ]
 
 _MAWI_SIZES = np.array([40, 64, 120, 576, 1420, 1500], dtype=np.float32)
@@ -210,20 +225,29 @@ def queue_heads(q_arr, qptr):
     return q_arr[jnp.arange(w), jnp.minimum(qptr, pad)]
 
 
+def rows_arrived(q_arr, t0):
+    """Arrivals <= ``t0`` in every sorted (+inf padded) queue row.
+
+    ``searchsorted`` per row — O(W log n) where the pre-compaction
+    engines paid an O(W n) masked sum per claim.  Identical integer
+    results (rows are sorted with +inf padding).
+    """
+    count = jax.vmap(lambda row: jnp.searchsorted(row, t0, side="right"))
+    return count(q_arr).astype(jnp.int32)
+
+
 def steal_choice(q_arr, qptr, own, t0):
     """Hybrid victim selection at claim time ``t0``.
 
     Returns ``(q, backlog_q)``: the chosen queue — the worker's own when
     it has arrivals at ``t0``, else the argmax of instantaneous backlogs
     (the DES plane's ``max(len(queue))`` at dispatch time) — plus the
-    per-queue backlog vector it was chosen from.  Rows are sorted with
-    +inf padding, so the count of arrivals <= t0 is a plain masked sum
-    (== searchsorted right on every row).  One source of truth for both
-    lane engines (:mod:`jaxplane` and :mod:`tcpjax`): the DES-parity
-    guarantees of both test suites pin this exact formulation.
+    per-queue backlog vector it was chosen from.  One source of truth
+    for both lane engines (:mod:`jaxplane` and :mod:`tcpjax`): the
+    DES-parity guarantees of both test suites pin this exact
+    formulation.
     """
-    n_arr_q = jnp.sum(q_arr <= t0, axis=1).astype(jnp.int32)
-    backlog_q = n_arr_q - qptr
+    backlog_q = rows_arrived(q_arr, t0) - qptr
     q = jnp.where(backlog_q[own] > 0, own, jnp.argmax(backlog_q))
     return q, backlog_q
 
@@ -271,7 +295,14 @@ def jax_policy_names() -> list:
 
 
 def build_policy(name: str) -> JaxPolicy:
-    """Resolve a registry policy name to its vectorized analogue."""
+    """Resolve a policy name to its built-in vectorized analogue.
+
+    Only the module table is consulted here (the registry's lazy
+    ``jax_factory`` entries call this, so it must not call back into
+    the registry); :func:`run_lanes` / :func:`run_lanes_fused` resolve
+    through :func:`repro.core.policy.make_jax_policy` instead, which
+    also sees runtime-registered plugin policies.
+    """
     try:
         return JAX_POLICIES[name]
     except KeyError:
@@ -279,6 +310,14 @@ def build_policy(name: str) -> JaxPolicy:
             f"policy {name!r} has no jax-plane analogue; "
             f"vectorized: {jax_policy_names()}"
         ) from None
+
+
+def _resolve_policy(policy) -> JaxPolicy:
+    if isinstance(policy, JaxPolicy):
+        return policy
+    from .policy import make_jax_policy
+
+    return make_jax_policy(policy)
 
 
 # ----------------------------------------------------------------------
@@ -346,206 +385,462 @@ def reorder_metrics(done_times: jnp.ndarray):
 
 
 # ----------------------------------------------------------------------
-# The step function: one batch claim per scan step
+# The claim-compacted step: O(workers) state, one ClaimRecord per step
 # ----------------------------------------------------------------------
-def _simulate_lane(
-    policy: JaxPolicy,
-    params: LaneParams,
-    arr: jnp.ndarray,  # [n] sorted arrival times
-    svc: jnp.ndarray,  # [n] per-packet service times
-    flows: jnp.ndarray,  # [n] flow keys
-    key,  # PRNG key for the deschedule draws
-    n_workers: int,
-    max_batch: int,
-):
-    n = arr.shape[0]
-    w_count = n_workers
-    mb = max_batch
-    n_words = (n + 31) // 32
+class _LaneState(NamedTuple):
+    """Scan carry per lane — everything else lives in the claim records."""
 
-    qid = policy.select_queue(flows, w_count)  # [n] in [0, W)
-    # rank of each packet within its queue (arrival order is global order)
-    rank = jnp.zeros(n, dtype=jnp.int32)
-    for w in range(w_count):
-        m = qid == w
-        rank = jnp.where(m, jnp.cumsum(m.astype(jnp.int32)) - 1, rank)
-    # q_idx[w, r] = global index of queue w's r-th packet (pad: n)
-    q_idx = jnp.full((w_count, n + mb), n, dtype=jnp.int32)
-    q_idx = q_idx.at[qid, rank].set(jnp.arange(n, dtype=jnp.int32))
-    # q_arr[w, r] = its arrival time (pad: +inf, keeps rows sorted)
-    q_arr = jnp.full((w_count, n + 1), jnp.inf, dtype=jnp.float32)
-    q_arr = q_arr.at[qid, rank].set(arr)
-    svc_pad = jnp.concatenate([svc, jnp.zeros(1, dtype=jnp.float32)])
+    qptr: jnp.ndarray  # [W] int32 per-queue claim pointer
+    free_t: jnp.ndarray  # [W] fp32 per-worker free time
+    lock_t: jnp.ndarray  # fp32 lock horizon (``locked`` only)
+    batches: jnp.ndarray  # int32 claims issued
+    items: jnp.ndarray  # int32 packets claimed
+    deschs: jnp.ndarray  # int32 deschedule stalls taken
 
-    # every worker drains queue 0 (shared) or its own queue (per-flow)
-    if policy.shared:
-        worker_queue = jnp.zeros(w_count, dtype=jnp.int32)
+
+class ClaimRecord(NamedTuple):
+    """One batch claim: queue, start rank, size, post-overhead time.
+
+    Emitted per scan step by the compacted engine; masked steps carry
+    ``k == 0`` and the dump queue ``W``.  Everything per-packet —
+    completion times, the packed claim bitmap — reconstructs from these
+    after the scan.
+    """
+
+    q: jnp.ndarray  # int32 claimed queue (W == dump)
+    ptr: jnp.ndarray  # int32 first claimed rank in that queue
+    k: jnp.ndarray  # int32 claim size (0 == masked step)
+    t1: jnp.ndarray  # fp32 claim time + overhead (+ stall)
+
+
+def _init_state(lanes: int, n_workers: int) -> _LaneState:
+    z = jnp.zeros((lanes,), jnp.int32)
+    return _LaneState(
+        qptr=jnp.zeros((lanes, n_workers), jnp.int32),
+        free_t=jnp.zeros((lanes, n_workers), jnp.float32),
+        lock_t=jnp.zeros((lanes,), jnp.float32),
+        batches=z,
+        items=z,
+        deschs=z,
+    )
+
+
+def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, st, u, stall):
+    """One batch claim on one lane; returns the new state + its record.
+
+    ``q_arr`` [W, n+1] sorted arrival rows (+inf padded), ``cumsvc``
+    [W, n] per-queue prefix sums of service time in rank order.  The
+    worker's busy span is the difference of two ``cumsvc`` gathers —
+    no per-packet window is touched inside the step.
+    """
+    w_count, n = cumsvc.shape
+    heads = queue_heads(q_arr, st.qptr)
+    if pol.steals:
+        # work conserving: a worker wakes for the earliest unclaimed
+        # arrival in ANY queue (it can steal), not just its own
+        arr_next = jnp.broadcast_to(jnp.min(heads), (w_count,))
+    elif pol.shared:
+        arr_next = jnp.broadcast_to(heads[0], (w_count,))
     else:
-        worker_queue = jnp.arange(w_count, dtype=jnp.int32)
-
-    ku, ke = jax.random.split(key)
-    u_desch = jax.random.uniform(ku, (n,))
-    stalls = jax.random.exponential(ke, (n,)).astype(jnp.float32)
-
-    def step(state, xs):
-        qptr, free_t, lock_t, done_t, words, batches, items, deschs = state
-        u, stall = xs
-        if policy.steals:
-            # work conserving: a worker wakes for the earliest unclaimed
-            # arrival in ANY queue (it can steal), not just its own
-            heads = queue_heads(q_arr, qptr)  # [W]
-            arr_next = jnp.broadcast_to(jnp.min(heads), (w_count,))
-        else:
-            ptr_w = qptr[worker_queue]  # [W]
-            arr_next = q_arr[worker_queue, jnp.minimum(ptr_w, n)]  # [W]
-        t_cand = jnp.maximum(free_t, arr_next)
-        if policy.uses_lock:
-            t_cand = jnp.maximum(t_cand, lock_t)
-        w = jnp.argmin(t_cand)
-        t0 = t_cand[w]
-        active = jnp.isfinite(t0)
-        if policy.steals:
-            q, backlog_q = steal_choice(q_arr, qptr, worker_queue[w], t0)
-            backlog = backlog_q[q]
-        else:
-            q = worker_queue[w]
-            # backlog at claim time: arrivals <= t0 minus already-claimed
-            row_arr = jnp.take(q_arr, q, axis=0)
-            n_arrived = jnp.searchsorted(row_arr, t0, side="right")
-            backlog = n_arrived.astype(jnp.int32) - qptr[q]
-        k = policy.next_batch(backlog, params, w_count)
-        k = jnp.clip(k, 1, jnp.minimum(backlog, mb))
-        k = jnp.where(active, k, 0)
-        desch = active & (u < params.deschedule_prob)
-        stall_t = jnp.where(desch, stall * params.deschedule_mean, 0.0)
-        t1 = t0 + params.claim_overhead + stall_t
-        # the claimed window: global packet ids, then per-item service
-        row_idx = jnp.take(q_idx, q, axis=0)
-        g = jax.lax.dynamic_slice(row_idx, (qptr[q],), (mb,))
-        valid = jnp.arange(mb) < k
-        gi = jnp.where(valid, g, n)
-        s = jnp.where(valid, svc_pad[gi], 0.0)
-        comp = t1 + jnp.cumsum(s)
-        done_t = done_t.at[gi].set(jnp.where(valid, comp, jnp.inf))
-        t_end = t1 + jnp.sum(s)
-        free_t = free_t.at[w].set(jnp.where(active, t_end, free_t[w]))
-        if policy.uses_lock:
-            # lock held through claim + stall; service runs outside it
-            lock_t = jnp.where(active, t1, lock_t)
-        qptr = qptr.at[q].add(k)
-        # packed claim bitmap: OR this batch's bits into its words
-        widx = jnp.where(valid, gi >> 5, n_words)
-        bit = jnp.left_shift(jnp.uint32(1), (gi & 31).astype(jnp.uint32))
-        delta = jnp.zeros(n_words + 1, dtype=jnp.uint32).at[widx].add(
-            jnp.where(valid, bit, jnp.uint32(0))
-        )
-        words = words | delta[:n_words]
-        batches = batches + active.astype(jnp.int32)
-        items = items + k
-        deschs = deschs + desch.astype(jnp.int32)
-        return (qptr, free_t, lock_t, done_t, words, batches, items, deschs), None
-
-    zero = jnp.int32(0)
-    state0 = (
-        jnp.zeros(w_count, dtype=jnp.int32),  # qptr
-        jnp.zeros(w_count, dtype=jnp.float32),  # free_t
-        jnp.float32(0.0),  # lock horizon
-        jnp.full(n + 1, jnp.inf, dtype=jnp.float32),  # done_t (+dump slot)
-        jnp.zeros(n_words, dtype=jnp.uint32),  # claim bitmap words
-        zero,
-        zero,
-        zero,
+        arr_next = heads
+    t_cand = jnp.maximum(st.free_t, arr_next)
+    if pol.uses_lock:
+        t_cand = jnp.maximum(t_cand, st.lock_t)
+    w = jnp.argmin(t_cand).astype(jnp.int32)
+    t0 = t_cand[w]
+    active = jnp.isfinite(t0)
+    if pol.steals:
+        q, backlog_q = steal_choice(q_arr, st.qptr, w, t0)
+        q = q.astype(jnp.int32)
+        backlog = backlog_q[q]
+    elif pol.shared:
+        q = jnp.int32(0)
+        n_arrived = jnp.searchsorted(q_arr[0], t0, side="right")
+        backlog = n_arrived.astype(jnp.int32) - st.qptr[0]
+    else:
+        q = w
+        backlog = rows_arrived(q_arr, t0)[q] - st.qptr[q]
+    k = pol.next_batch(backlog, params, w_count)
+    k = jnp.clip(k, 1, jnp.minimum(backlog, mb))
+    k = jnp.where(active, k, 0).astype(jnp.int32)
+    desch = active & (u < params.deschedule_prob)
+    stall_t = jnp.where(desch, stall * params.deschedule_mean, 0.0)
+    t1 = t0 + params.claim_overhead + stall_t
+    ptr = st.qptr[q]
+    base = jnp.where(ptr > 0, cumsvc[q, jnp.maximum(ptr - 1, 0)], 0.0)
+    last = cumsvc[q, jnp.clip(ptr + k - 1, 0, n - 1)]
+    t_end = t1 + jnp.where(k > 0, last - base, 0.0)
+    free_t = st.free_t.at[w].set(jnp.where(active, t_end, st.free_t[w]))
+    if pol.uses_lock:
+        # lock held through claim + stall; service runs outside it
+        lock_t = jnp.where(active, t1, st.lock_t)
+    else:
+        lock_t = st.lock_t
+    st2 = _LaneState(
+        qptr=st.qptr.at[q].add(k),
+        free_t=free_t,
+        lock_t=lock_t,
+        batches=st.batches + active.astype(jnp.int32),
+        items=st.items + k,
+        deschs=st.deschs + desch.astype(jnp.int32),
     )
-    state, _ = jax.lax.scan(step, state0, (u_desch, stalls))
-    _, _, _, done_t, words, batches, items, deschs = state
-    done = done_t[:n]
-
-    # ---- in-graph latency + RFC 4737 accounting -----------------------
-    sojourn = done - arr
-    reorder_ratio, max_dist = reorder_metrics(done)
-    q50, q99 = jnp.percentile(sojourn, jnp.asarray([50.0, 99.0]))
-    span = jnp.max(done) - jnp.min(arr)
-    return dict(
-        p50=q50,
-        p99=q99,
-        mean=jnp.mean(sojourn),
-        reorder_pct=100.0 * reorder_ratio,
-        max_distance=max_dist,
-        throughput=n / span,
-        batches=batches,
-        items=items,
-        deschedules=deschs,
-        claimed_popcount=jnp.sum(jax.lax.population_count(words)).astype(jnp.int32),
-        words=words,
-        sojourn=sojourn,
+    rec = ClaimRecord(
+        q=jnp.where(k > 0, q, w_count),
+        ptr=jnp.where(k > 0, ptr, 0),
+        k=k,
+        t1=t1,
     )
+    return st2, rec
 
 
-# ----------------------------------------------------------------------
-# Public entry: one jitted scan over all (policy-param, seed) lanes
-# ----------------------------------------------------------------------
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "policy",
-        "workload",
-        "service",
-        "n_packets",
-        "n_workers",
-        "max_batch",
-        "n_flows",
-        "prefix_impl",
-        "prefix_interpret",
-        "return_times",
-    ),
-)
-def _run_lanes_jit(
+def _scatter_claims(rec: ClaimRecord, qid, rank, cumsvc):
+    """Per-packet completion times from one lane's claim records.
+
+    The batched counterpart of the reference engine's per-claim window
+    writes: scatter each claim's index at its (queue, start-rank) slot,
+    forward-fill along ranks with ``cummax`` (claim indices increase
+    with rank within a queue), then every packet's completion is
+    ``t1[claim] + (cumsvc[rank] - cumsvc[claim_start - 1])`` — one
+    gather chain over the whole lane instead of one scatter per claim.
+    """
+    w_count, n = cumsvc.shape
+    s_total = rec.k.shape[0]
+    s_idx = jnp.arange(s_total, dtype=jnp.int32)
+    # masked steps (and skipped-chunk zero records) go to the dump row
+    qe = jnp.where(rec.k > 0, rec.q, w_count)
+    pe = jnp.where(rec.k > 0, rec.ptr, 0)
+    start = jnp.full((w_count + 1, n + 1), -1, jnp.int32)
+    start = start.at[qe, pe].set(jnp.where(rec.k > 0, s_idx, -1))
+    cid = jax.lax.cummax(start[:w_count], axis=1)  # forward fill
+    cid_p = cid[qid, rank]  # [n] claim id covering each packet (-1: none)
+    safe = jnp.maximum(cid_p, 0)
+    t1_p = rec.t1[safe]
+    ptr_p = rec.ptr[safe]
+    k_p = rec.k[safe]
+    base_p = jnp.where(ptr_p > 0, cumsvc[qid, jnp.maximum(ptr_p - 1, 0)], 0.0)
+    in_claim = (cid_p >= 0) & (rank < ptr_p + k_p)
+    done = jnp.where(in_claim, t1_p + (cumsvc[qid, rank] - base_p), jnp.inf)
+    return done, in_claim
+
+
+def _lane_setup(
+    pol: JaxPolicy,
+    workload: str,
+    service: str,
+    n: int,
+    n_flows: int,
+    n_workers: int,
+    n_draws: int,
     params: LaneParams,
     traffic: TrafficParams,
-    seeds: jnp.ndarray,
-    policy: str,
+    seed,
+):
+    """Pre-draw one lane's traffic and build its per-queue views."""
+    key = jax.random.PRNGKey(seed)
+    kt, kd = jax.random.split(key)
+    arr, svc, flows = _gen_traffic(kt, traffic, workload, service, n, n_flows)
+    qid = pol.select_queue(flows, n_workers)  # [n] in [0, W)
+    # rank of each packet within its queue (arrival order is global order)
+    rank = jnp.zeros(n, dtype=jnp.int32)
+    for w in range(n_workers):
+        m = qid == w
+        rank = jnp.where(m, jnp.cumsum(m.astype(jnp.int32)) - 1, rank)
+    # q_arr[w, r] = arrival time of queue w's r-th packet (pad: +inf)
+    q_arr = jnp.full((n_workers, n + 1), jnp.inf, dtype=jnp.float32)
+    q_arr = q_arr.at[qid, rank].set(arr)
+    # cumsvc[w, r] = prefix sum of service times in rank order
+    svc_qr = jnp.zeros((n_workers, n), dtype=jnp.float32).at[qid, rank].set(svc)
+    cumsvc = jnp.cumsum(svc_qr, axis=1)
+    ku, ke = jax.random.split(kd)
+    u_desch = jax.random.uniform(ku, (n_draws,))
+    stalls = jax.random.exponential(ke, (n_draws,)).astype(jnp.float32)
+    return dict(
+        arr=arr,
+        qid=qid,
+        rank=rank,
+        q_arr=q_arr,
+        cumsvc=cumsvc,
+        u=u_desch,
+        stalls=stalls,
+    )
+
+
+def _reference_lane(pol: JaxPolicy, mb: int, params, su):
+    """The pre-compaction per-claim scan: windows written inside the step.
+
+    Shares :func:`_claim_step` with the compacted engine and applies
+    each record's completion window to a (queue, rank) grid immediately
+    — the formulation ``tests/test_compaction.py`` pins the compacted
+    reconstruction against, bit for bit.
+    """
+    q_arr, cumsvc = su["q_arr"], su["cumsvc"]
+    qid, rank = su["qid"], su["rank"]
+    w_count, n = cumsvc.shape
+    cs_pad = jnp.concatenate(
+        [cumsvc, jnp.broadcast_to(cumsvc[:, -1:], (w_count, mb))], axis=1
+    )
+    cs_pad = jnp.concatenate([cs_pad, jnp.zeros((1, n + mb), jnp.float32)])
+    done_qr0 = jnp.full((w_count + 1, n + mb), jnp.inf, dtype=jnp.float32)
+    lane_st0 = jax.tree_util.tree_map(lambda x: x[0], _init_state(1, w_count))
+
+    def step(carry, xs):
+        st, done_qr = carry
+        u, stall = xs
+        st2, rec = _claim_step(pol, mb, params, q_arr, cumsvc, st, u, stall)
+        row = jax.lax.dynamic_slice(done_qr, (rec.q, rec.ptr), (1, mb))[0]
+        cs = jax.lax.dynamic_slice(cs_pad, (rec.q, rec.ptr), (1, mb))[0]
+        base = jnp.where(rec.ptr > 0, cs_pad[rec.q, jnp.maximum(rec.ptr - 1, 0)], 0.0)
+        comp = rec.t1 + (cs - base)
+        neww = jnp.where(jnp.arange(mb) < rec.k, comp, row)
+        done_qr = jax.lax.dynamic_update_slice(done_qr, neww[None], (rec.q, rec.ptr))
+        return (st2, done_qr), None
+
+    (st, done_qr), _ = jax.lax.scan(step, (lane_st0, done_qr0), (su["u"], su["stalls"]))
+    done = done_qr[qid, rank]
+    return st, done, jnp.isfinite(done)
+
+
+# ----------------------------------------------------------------------
+# Chunked scan with a real done short-circuit (scan outside the vmap)
+# ----------------------------------------------------------------------
+def _chunked_scan(body, carry0, xs, done_fn, chunk: int):
+    """``lax.scan`` over chunks of ``chunk`` steps with early exit.
+
+    ``body`` advances ALL lanes one step (it is vmapped internally by
+    the caller); ``done_fn(carry) -> bool[]`` is a scalar predicate
+    over the full carry.  Each chunk is guarded by ``lax.cond``: once
+    every lane reports done, remaining chunks skip both the state
+    update and the per-step outputs (zero records — masked downstream).
+    The leading xs axis must be a multiple of ``chunk``.
+    """
+    s_total = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    n_chunks = s_total // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), xs
+    )
+    x0 = jax.tree_util.tree_map(lambda x: x[0], xs_c)
+    ys_aval = jax.eval_shape(lambda c, x: jax.lax.scan(body, c, x)[1], carry0, x0)
+
+    def chunk_body(carry, xc):
+        def run(c):
+            return jax.lax.scan(body, c, xc)
+
+        def skip(c):
+            zeros = jax.tree_util.tree_map(
+                lambda a: jnp.zeros(a.shape, a.dtype), ys_aval
+            )
+            return c, zeros
+
+        return jax.lax.cond(done_fn(carry), skip, run, carry)
+
+    carry, ys = jax.lax.scan(chunk_body, carry0, xs_c)
+    ys = jax.tree_util.tree_map(lambda y: y.reshape((s_total,) + y.shape[2:]), ys)
+    return carry, ys
+
+
+# ----------------------------------------------------------------------
+# The fused core: every policy segment in one scan, one jitted call
+# ----------------------------------------------------------------------
+def _sweep_core(
+    blocks,
+    pols,
     workload: str,
     service: str,
     n_packets: int,
     n_workers: int,
     max_batch: int,
     n_flows: int,
+    s_pad: int,
+    chunk: int,
+    engine: str,
+    return_times: bool,
+):
+    """Simulate every lane of every policy segment; returns per-segment
+    dicts of lane-axis arrays (safe to wrap in ``shard_map``)."""
+    n, mb = n_packets, max_batch
+    setups, states = [], []
+    for pol, (params, traffic, seeds) in zip(pols, blocks):
+        setup = jax.vmap(
+            functools.partial(
+                _lane_setup, pol, workload, service, n, n_flows, n_workers, s_pad
+            )
+        )(params, traffic, seeds)
+        setups.append(setup)
+        states.append(_init_state(seeds.shape[0], n_workers))
+
+    if engine == "reference":
+        finals = []
+        for pol, (params, _, _), su in zip(pols, blocks, setups):
+            ref = jax.vmap(functools.partial(_reference_lane, pol, mb))(params, su)
+            finals.append(ref)
+    elif engine == "compacted":
+        # one specialized chunked scan PER policy segment, all inside
+        # the one jitted call: each policy's lanes stop paying for the
+        # claim budget at their own drain point, and each segment's
+        # step compiles without the untaken policies' branches (a
+        # per-lane flag dispatch was measured slower than static
+        # segmentation here — the step is compute-bound, not
+        # dispatch-bound, at sweep lane counts)
+        finals = []
+        for pol, (params, _, _), su, st0 in zip(pols, blocks, setups, states):
+            step = functools.partial(_claim_step, pol, mb)
+
+            def body(carry, x, step=step, params=params, su=su):
+                u, stall = x
+                return jax.vmap(step)(
+                    params, su["q_arr"], su["cumsvc"], carry, u, stall
+                )
+
+            def done_fn(st):
+                return jnp.all(st.items >= n)
+
+            st, rec = _chunked_scan(
+                body, st0, (su["u"].T, su["stalls"].T), done_fn, chunk
+            )
+            rec_l = ClaimRecord(*(x.T for x in rec))  # [S, Lp] -> [Lp, S]
+            done, claimed = jax.vmap(_scatter_claims)(
+                rec_l, su["qid"], su["rank"], su["cumsvc"]
+            )
+            finals.append((st, done, claimed))
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    outs = []
+    for su, (st, done, claimed) in zip(setups, finals):
+        words = kernel_ops.pack_bits_u32(claimed)
+        sojourn = done - su["arr"]
+        ratio, max_dist = jax.vmap(reorder_metrics)(done)
+        pct = jnp.percentile(sojourn, jnp.asarray([50.0, 99.0]), axis=-1)
+        span = jnp.max(done, axis=-1) - jnp.min(su["arr"], axis=-1)
+        outs.append(
+            dict(
+                p50=pct[0],
+                p99=pct[1],
+                mean=jnp.mean(sojourn, axis=-1),
+                reorder_pct=100.0 * ratio,
+                max_distance=max_dist,
+                throughput=n / span,
+                batches=st.batches,
+                items=st.items,
+                deschedules=st.deschs,
+                claimed_popcount=jnp.sum(
+                    jax.lax.population_count(words), axis=-1
+                ).astype(jnp.int32),
+                words=words,
+                sojourn=sojourn if return_times else sojourn[:, :0],
+            )
+        )
+    return tuple(outs)
+
+
+def _run_fused_impl(
+    blocks,
+    *,
+    pols,
+    workload: str,
+    service: str,
+    n_packets: int,
+    n_workers: int,
+    max_batch: int,
+    n_flows: int,
+    s_pad: int,
+    chunk: int,
+    n_shards: int,
+    engine: str,
     prefix_impl: str,
     prefix_interpret: bool,
     return_times: bool,
-) -> LaneResult:
-    pol = build_policy(policy)
-
-    def one_lane(p, tp, seed):
-        key = jax.random.PRNGKey(seed)
-        kt, kd = jax.random.split(key)
-        arr, svc, flows = _gen_traffic(kt, tp, workload, service, n_packets, n_flows)
-        return _simulate_lane(pol, p, arr, svc, flows, kd, n_workers, max_batch)
-
-    out = jax.vmap(one_lane)(params, traffic, seeds)
-    lanes = seeds.shape[0]
-    # exactly-once, on the packed words, via the multi-ring prefix kernel
+):
+    core = functools.partial(
+        _sweep_core,
+        pols=pols,
+        workload=workload,
+        service=service,
+        n_packets=n_packets,
+        n_workers=n_workers,
+        max_batch=max_batch,
+        n_flows=n_flows,
+        s_pad=s_pad,
+        chunk=chunk,
+        engine=engine,
+        return_times=return_times,
+    )
+    if n_shards > 1:
+        spec = jax.sharding.PartitionSpec("lanes")
+        core = compat.shard_map(
+            core, compat.lane_mesh(n_shards), in_specs=(spec,), out_specs=spec
+        )
+    outs = core(blocks)
+    # exactly-once on the packed words, one multi-ring prefix launch for
+    # every segment of the fused call
+    words = jnp.concatenate([o["words"] for o in outs], axis=0)
     prefix = kernel_ops.done_prefix_packed(
-        out["words"],
-        jnp.full((lanes,), n_packets, dtype=jnp.int32),
+        words,
+        jnp.full((words.shape[0],), n_packets, dtype=jnp.int32),
         n_bits=n_packets,
         impl=prefix_impl,
         interpret=prefix_interpret,
     )
-    sojourn = out["sojourn"] if return_times else out["sojourn"][:, :0]
-    return LaneResult(
-        p50=out["p50"],
-        p99=out["p99"],
-        mean=out["mean"],
-        reorder_pct=out["reorder_pct"],
-        max_distance=out["max_distance"],
-        throughput=out["throughput"],
-        batches=out["batches"],
-        items=out["items"],
-        deschedules=out["deschedules"],
-        claimed_popcount=out["claimed_popcount"],
-        claimed_prefix=prefix,
-        sojourn=sojourn,
+    results, at = [], 0
+    for o in outs:
+        lanes = o["p50"].shape[0]
+        results.append(
+            LaneResult(
+                p50=o["p50"],
+                p99=o["p99"],
+                mean=o["mean"],
+                reorder_pct=o["reorder_pct"],
+                max_distance=o["max_distance"],
+                throughput=o["throughput"],
+                batches=o["batches"],
+                items=o["items"],
+                deschedules=o["deschedules"],
+                claimed_popcount=o["claimed_popcount"],
+                claimed_prefix=prefix[at : at + lanes],
+                sojourn=o["sojourn"],
+            )
+        )
+        at += lanes
+    return tuple(results)
+
+
+_FUSED_STATICS = (
+    "pols",
+    "workload",
+    "service",
+    "n_packets",
+    "n_workers",
+    "max_batch",
+    "n_flows",
+    "s_pad",
+    "chunk",
+    "n_shards",
+    "engine",
+    "prefix_impl",
+    "prefix_interpret",
+    "return_times",
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_jit(donate: bool):
+    # fp32/int32/uint32 lane-axis inputs are donated where the backend
+    # supports aliasing (CPU does not; donating there only warns)
+    return jax.jit(
+        _run_fused_impl,
+        static_argnames=_FUSED_STATICS,
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+def _pad_lanes(tree, pad: int):
+    if pad == 0:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])]
+        ),
+        tree,
     )
 
 
@@ -559,6 +854,115 @@ def _broadcast_lanes(d: dict, fields, lanes: int, dtype=jnp.float32):
             raise ValueError(f"param {f!r} has {v.shape[0]} lanes, want {lanes}")
         vals.append(v)
     return vals
+
+
+def _resolve_shards(shards) -> int:
+    if shards in ("auto", None):
+        return compat.device_count()
+    return max(1, int(shards))
+
+
+def run_lanes_fused(
+    requests,
+    *,
+    workload: str = "udp",
+    service: str = "fwd",
+    n_packets: int = 2000,
+    n_workers: int = 4,
+    max_batch: int = 64,
+    n_flows: int = 256,
+    engine: str = "compacted",
+    claim_budget: int | None = None,
+    chunk: int = 64,
+    shards: int | str = 1,
+    prefix_impl: str = "auto",
+    prefix_interpret: bool = False,
+    return_times: bool = False,
+    timings: dict | None = None,
+):
+    """Simulate every lane of every request in ONE jitted call.
+
+    ``requests`` is a sequence of dicts ``{"policy": name-or-JaxPolicy,
+    "seeds": [...], "lane_params": {...}, "traffic_params": {...}}`` —
+    one statically-bounded lane segment per request, all advanced by
+    the same claim-compacted scan (policies resolve through the
+    registry, so runtime-registered plugins fuse too).  Returns one
+    :class:`LaneResult` per request, in order.
+
+    ``claim_budget`` bounds claim events per lane (rounded UP to the
+    next multiple of ``chunk`` — the effective scan length); the
+    default ``n_packets`` is always sufficient (every active claim
+    takes >= 1 packet) and the chunked ``done`` short-circuit stops
+    paying for the budget once every lane drains.  A tighter budget
+    trades a possible loud exactly-once failure (claimed_popcount < n)
+    for shorter compiles.  ``shards`` > 1 (or ``"auto"`` = all local devices)
+    partitions the lane axis across devices via ``shard_map``; each
+    segment is padded to a multiple of the shard count and the padding
+    is dropped from the results.  ``timings``, when a dict is passed,
+    receives ``compile_s`` / ``run_s`` measured through the AOT
+    lower/compile path.
+    """
+    requests = list(requests)
+    if not requests:
+        raise ValueError("run_lanes_fused: empty request list")
+    n_shards = _resolve_shards(shards)
+    budget = n_packets if claim_budget is None else int(claim_budget)
+    budget = max(1, min(budget, n_packets))
+    chunk = max(1, int(chunk))
+    s_pad = -(-budget // chunk) * chunk
+
+    pols, blocks, orig_lanes = [], [], []
+    for req in requests:
+        pol = _resolve_policy(req["policy"])
+        seeds = jnp.asarray(np.asarray(req["seeds"], dtype=np.uint32))
+        lanes = seeds.shape[0]
+        lp = default_lane_params(**(req.get("lane_params") or {}))
+        tp = default_traffic_params(**(req.get("traffic_params") or {}))
+        unknown = set(lp) - set(LaneParams._fields)
+        unknown |= set(tp) - set(TrafficParams._fields)
+        if unknown:
+            raise ValueError(f"unknown sweep knobs: {sorted(unknown)}")
+        params = LaneParams(*_broadcast_lanes(lp, LaneParams._fields, lanes))
+        traffic = TrafficParams(*_broadcast_lanes(tp, TrafficParams._fields, lanes))
+        pad = (-lanes) % n_shards
+        pols.append(pol)
+        blocks.append(_pad_lanes((params, traffic, seeds), pad))
+        orig_lanes.append(lanes)
+
+    donate = jax.default_backend() != "cpu"
+    fn = _fused_jit(donate)
+    static = dict(
+        pols=tuple(pols),
+        workload=workload,
+        service=service,
+        n_packets=n_packets,
+        n_workers=n_workers,
+        max_batch=max_batch,
+        n_flows=n_flows,
+        s_pad=s_pad,
+        chunk=chunk,
+        n_shards=n_shards,
+        engine=engine,
+        prefix_impl=prefix_impl,
+        prefix_interpret=prefix_interpret,
+        return_times=return_times,
+    )
+    blocks = tuple(blocks)
+    if timings is None:
+        outs = fn(blocks, **static)
+    else:
+        t0 = time.perf_counter()
+        compiled = fn.lower(blocks, **static).compile()
+        t1 = time.perf_counter()
+        outs = compiled(blocks)
+        jax.block_until_ready(outs)
+        t2 = time.perf_counter()
+        timings["compile_s"] = t1 - t0
+        timings["run_s"] = t2 - t1
+    return [
+        jax.tree_util.tree_map(lambda a: a[:lanes], res)
+        for res, lanes in zip(outs, orig_lanes)
+    ]
 
 
 def run_lanes(
@@ -575,40 +979,43 @@ def run_lanes(
     prefix_impl: str = "auto",
     prefix_interpret: bool = False,
     return_times: bool = False,
+    engine: str = "compacted",
+    claim_budget: int | None = None,
+    chunk: int = 64,
+    shards: int | str = 1,
 ) -> LaneResult:
     """Simulate every lane of a (policy-param, seed) batch in one jit.
 
     ``lane_params`` / ``traffic_params`` map knob names to scalars (all
     lanes share the value) or [lanes] arrays (a sweep axis); unknown
     knobs raise.  ``seeds`` defines the lane count.  Per-batch claim
-    sizes are capped by the static ``max_batch`` (the scan's claimed
-    window width).
+    sizes are capped by the static ``max_batch``.  A single-segment
+    wrapper over :func:`run_lanes_fused` — see there for the
+    ``engine`` / ``claim_budget`` / ``chunk`` / ``shards`` knobs.
     """
-    seeds = jnp.asarray(seeds, dtype=jnp.uint32)
-    lanes = seeds.shape[0]
-    lp = default_lane_params(**(lane_params or {}))
-    tp = default_traffic_params(**(traffic_params or {}))
-    unknown = set(lp) - set(LaneParams._fields)
-    unknown |= set(tp) - set(TrafficParams._fields)
-    if unknown:
-        raise ValueError(f"unknown sweep knobs: {sorted(unknown)}")
-    params = LaneParams(*_broadcast_lanes(lp, LaneParams._fields, lanes))
-    traffic = TrafficParams(*_broadcast_lanes(tp, TrafficParams._fields, lanes))
-    return _run_lanes_jit(
-        params,
-        traffic,
-        seeds,
-        policy=policy,
+    return run_lanes_fused(
+        [
+            dict(
+                policy=policy,
+                seeds=seeds,
+                lane_params=lane_params,
+                traffic_params=traffic_params,
+            )
+        ],
         workload=workload,
         service=service,
         n_packets=n_packets,
         n_workers=n_workers,
         max_batch=max_batch,
         n_flows=n_flows,
+        engine=engine,
+        claim_budget=claim_budget,
+        chunk=chunk,
+        shards=shards,
         prefix_impl=prefix_impl,
         prefix_interpret=prefix_interpret,
         return_times=return_times,
-    )
+    )[0]
 
 
 def lane_grid(axes: dict, seeds) -> Tuple[dict, list]:

@@ -79,6 +79,7 @@ __all__ = [
     "make_policy",
     "make_thread_queue",
     "make_jax_policy",
+    "fused_jax_requests",
 ]
 
 
@@ -326,6 +327,32 @@ def make_jax_policy(name: str):
 def jax_policies() -> List[str]:
     """Registered policy names that resolve on the jax plane."""
     return sorted(n for n, s in _REGISTRY.items() if s.jax_factory is not None)
+
+
+def fused_jax_requests(seeds, lane_params=None, policies=None, **knob_dicts):
+    """Registry-wide request list for the fused jax-plane sweeps.
+
+    Builds one request dict per jax-capable policy (or per name in
+    ``policies``) for :func:`repro.core.jaxplane.run_lanes_fused` /
+    :func:`repro.core.tcpjax.run_tcp_lanes_fused`, applying the
+    sweep convention that ``adaptive-batch``'s swept knob is the
+    adaptive clamp: when ``lane_params`` sweeps ``batch`` and no
+    explicit ``max_batch`` is given, the batch axis is mirrored into
+    ``max_batch`` for that policy.  Extra keyword dicts
+    (``traffic_params=...`` / ``tcp_params=...``) pass through to every
+    request verbatim.
+    """
+    names = jax_policies() if policies is None else list(policies)
+    requests = []
+    for name in names:
+        lp = dict(lane_params or {})
+        if name == "adaptive-batch" and "batch" in lp and "max_batch" not in lp:
+            lp["max_batch"] = lp["batch"]
+        req = {"policy": name, "seeds": seeds, "lane_params": lp}
+        for key, val in knob_dicts.items():
+            req[key] = dict(val) if val else {}
+        requests.append(req)
+    return requests
 
 
 def _jax_factory(name: str) -> Callable[[], Any]:

@@ -6,10 +6,8 @@ paper bounds the reordering penalty at 2-3%) costs minutes of wall
 clock to sweep.  This module restates that closed loop — senders -->
 access link --> policy-driven forwarder --> receiver --> ACKs --> the
 window — as a pure ``lax.scan`` step function over fixed-size per-flow
-state arrays, ``vmap``-ed over the same (policy-param, seed) lane axis
-as :mod:`repro.core.jaxplane`, so ``benchmarks/jax_sweep.py`` reports
-flow-completion-time percentiles for >= 1000 lanes per policy from ONE
-jitted call.
+state arrays, evaluated for every (policy-param, seed) lane of every
+requested policy in ONE jitted call (:func:`run_tcp_lanes_fused`).
 
 The DES event heap becomes a four-way merge: every scan step selects
 the earliest of
@@ -41,6 +39,19 @@ the earliest of
   (the DES plane's ``on_idle`` sweep): reset the window and queue the
   hole for retransmission at ``t + rto``.
 
+The engine is claim-compacted in the :mod:`repro.core.jaxplane` sense:
+the scan runs OUTSIDE the lane vmap in ``chunk``-step chunks, each
+guarded by a scalar ``lax.cond`` on "every lane quiesced" (all flows
+finished AND no send/claim/ack pending — trailing forwarder claims
+keep a lane live so the exactly-once counters still settle), so the
+generous event budget stops costing anything once the closed loops
+drain; policies fuse as statically-bounded lane segments sharing one
+compile; ``shards > 1`` partitions the lane axis across devices via
+the :mod:`repro.compat` shims.  ``engine="reference"`` keeps the
+pre-compaction per-lane scan over the full budget —
+``tests/test_compaction.py`` pins the compacted engine bit-identical
+to it.
+
 Parity with ``tcp.py`` is distributional (FCT percentiles, not RNG
 draws) — see ``tests/test_tcpjax.py``; ``TcpSimConfig.queue_hints``
 lets the DES plane steer with this plane's 32-bit hash so both planes
@@ -50,19 +61,25 @@ pin flows identically.
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from ..kernels import ops as kernel_ops
 from .jaxplane import (
     LaneParams,
     _broadcast_lanes,
-    build_policy,
+    _chunked_scan,
+    _pad_lanes,
+    _resolve_policy,
+    _resolve_shards,
     default_lane_params,
     queue_heads,
+    rows_arrived,
     steal_choice,
 )
 
@@ -72,6 +89,7 @@ __all__ = [
     "default_tcp_params",
     "tcp_lane_defaults",
     "run_tcp_lanes",
+    "run_tcp_lanes_fused",
 ]
 
 _FULL32 = jnp.uint32(0xFFFFFFFF)
@@ -151,401 +169,645 @@ def _recv_prefix(row: jnp.ndarray, m_bits: int) -> jnp.ndarray:
     return jnp.minimum(bits, jnp.int32(m_bits))
 
 
-def _simulate_tcp_lane(
-    policy,
-    lp: LaneParams,
+def _tcp_setup(tcp: TcpParams, seed, tx_budget: int, n_steps: int):
+    """Per-lane draws for the closed-loop scan (service + stall streams)."""
+    key = jax.random.PRNGKey(seed)
+    kv, ku, ke = jax.random.split(key, 3)
+    sj = tcp.service_jitter
+    mu = jnp.log(tcp.service_mean) - sj**2 / 2
+    svc = jnp.exp(jax.random.normal(kv, (tx_budget,)) * sj + mu).astype(jnp.float32)
+    svc_pad = jnp.concatenate([svc, jnp.zeros(1, jnp.float32)])
+    u_desch = jax.random.uniform(ku, (n_steps,))
+    stalls = jax.random.exponential(ke, (n_steps,)).astype(jnp.float32)
+    return dict(svc_pad=svc_pad, u=u_desch, stalls=stalls)
+
+
+def _tcp_state0(
+    lanes: int,
     tcp: TcpParams,
-    n_pkts: jnp.ndarray,  # [F] packets per flow
-    t_start: jnp.ndarray,  # [F] flow start times
-    key,
+    t_start,
     n_flows: int,
     max_pkts: int,
     n_workers: int,
     max_batch: int,
     tx_budget: int,
-    n_steps: int,
 ):
-    f_cnt, w_cnt, mb = n_flows, n_workers, max_batch
-    t_budget = tx_budget
+    """Initial closed-loop state, built directly on the lane axis."""
+    f_cnt, w_cnt, mb, t_budget = n_flows, n_workers, max_batch, tx_budget
     mw = (max_pkts + 31) // 32  # receiver bitmap words per flow
     tw = (t_budget + 31) // 32  # claim bitmap words
-
-    # one dump slot everywhere: flow f_cnt, worker/queue w_cnt, tx t_budget
-    n_pad = jnp.concatenate([n_pkts.astype(jnp.int32), jnp.zeros(1, jnp.int32)])
     ts_pad = jnp.concatenate(
         [t_start.astype(jnp.float32), jnp.full(1, jnp.inf, jnp.float32)]
     )
 
-    # NIC-side steering is static per flow (RSS hash / shared queue 0)
-    qid_flow = policy.select_queue(jnp.arange(f_cnt, dtype=jnp.int32), w_cnt)
-    qid_flow = jnp.concatenate([qid_flow, jnp.zeros(1, jnp.int32)])
-    if policy.shared:
-        worker_queue = jnp.zeros(w_cnt, dtype=jnp.int32)
-    else:
-        worker_queue = jnp.arange(w_cnt, dtype=jnp.int32)
+    def full(shape, val, dtype):
+        return jnp.full((lanes,) + shape, val, dtype)
 
-    kv, ku, ke = jax.random.split(key, 3)
-    sj = tcp.service_jitter
-    mu = jnp.log(tcp.service_mean) - sj**2 / 2
-    svc = jnp.exp(jax.random.normal(kv, (t_budget,)) * sj + mu).astype(jnp.float32)
-    svc_pad = jnp.concatenate([svc, jnp.zeros(1, jnp.float32)])
-    u_desch = jax.random.uniform(ku, (n_steps,))
-    stalls = jax.random.exponential(ke, (n_steps,)).astype(jnp.float32)
-
-    spacing = 1.0 / tcp.link_pps
-    beta = tcp.cubic_beta
-    max_reo = tcp.max_reorder_thresh.astype(jnp.int32)
-    fin = jnp.arange(f_cnt + 1, dtype=jnp.int32)  # flow index helper
-
-    st0 = dict(
-        # sender, per flow (+dump slot)
-        cwnd=jnp.full(f_cnt + 1, tcp.init_cwnd, jnp.float32),
-        ssthresh=jnp.full(f_cnt + 1, jnp.inf, jnp.float32),
-        next_seq=jnp.zeros(f_cnt + 1, jnp.int32),
-        high_ack=jnp.full(f_cnt + 1, -1, jnp.int32),
-        dup=jnp.zeros(f_cnt + 1, jnp.int32),
-        infl=jnp.zeros(f_cnt + 1, jnp.int32),
-        retx=jnp.zeros(f_cnt + 1, jnp.int32),
-        spur=jnp.zeros(f_cnt + 1, jnp.int32),
-        reo=jnp.full(f_cnt + 1, tcp.init_reorder_thresh.astype(jnp.int32)),
-        cwnd_before=jnp.zeros(f_cnt + 1, jnp.float32),
-        last_retx=jnp.full(f_cnt + 1, -1, jnp.int32),
-        pend=jnp.full(f_cnt + 1, -1, jnp.int32),  # single-slot retx queue
-        done=jnp.zeros(f_cnt + 1, bool),
-        t_done=jnp.zeros(f_cnt + 1, jnp.float32),
-        t_ready=ts_pad,
-        # receiver, per flow: packed seen-bitmap + its contiguous prefix
-        rwords=jnp.zeros((f_cnt + 1, mw), jnp.uint32),
-        # access link + transmission records
-        link_free=jnp.float32(0.0),
-        nsend=jnp.int32(0),
-        txf=jnp.zeros(t_budget + 1, jnp.int32),
-        txs=jnp.zeros(t_budget + 1, jnp.int32),
-        tack=jnp.full(t_budget + 1, jnp.inf, jnp.float32),
-        # forwarder: per-queue arrival logs + batch-claim state
-        qidx=jnp.full((w_cnt + 1, t_budget + mb), t_budget, jnp.int32),
-        qarr=jnp.full((w_cnt + 1, t_budget + 1), jnp.inf, jnp.float32),
-        qapp=jnp.zeros(w_cnt + 1, jnp.int32),
-        qptr=jnp.zeros(w_cnt, jnp.int32),
-        freet=jnp.zeros(w_cnt, jnp.float32),
-        lockt=jnp.float32(0.0),
-        words=jnp.zeros(tw + 1, jnp.uint32),
-        batches=jnp.int32(0),
-        items=jnp.int32(0),
-        deschs=jnp.int32(0),
-        t_now=jnp.float32(0.0),
-    )
-
-    def step(st, xs):
-        u, stall_draw = xs
-        inf = jnp.float32(jnp.inf)
-
-        # ---- candidate event times ------------------------------------
-        wnd = jnp.minimum(st["cwnd"], tcp.rwnd).astype(jnp.int32)
-        can_send = (
-            ~st["done"]
-            & (st["infl"] < wnd)
-            & ((st["pend"] >= 0) | (st["next_seq"] < n_pad))
-            & (st["nsend"] < t_budget)
-        )
-        tsf = jnp.where(can_send, st["t_ready"], inf)
-        f_sel = jnp.argmin(tsf).astype(jnp.int32)
-        t_send = jnp.where(
-            jnp.isfinite(tsf[f_sel]), jnp.maximum(tsf[f_sel], st["link_free"]), inf
-        )
-
-        heads = queue_heads(st["qarr"][:w_cnt], st["qptr"])
-        if policy.steals:
-            arr_next = jnp.broadcast_to(jnp.min(heads), (w_cnt,))
-        else:
-            arr_next = heads[worker_queue]
-        t_cand = jnp.maximum(st["freet"], arr_next)
-        if policy.uses_lock:
-            t_cand = jnp.maximum(t_cand, st["lockt"])
-        w_sel = jnp.argmin(t_cand).astype(jnp.int32)
-        t_claim = t_cand[w_sel]
-
-        j_sel = jnp.argmin(st["tack"][:t_budget]).astype(jnp.int32)
-        t_ack = st["tack"][j_sel]
-
-        live = ~st["done"] & (n_pad > 0)
-        idle = ~(
-            jnp.isfinite(t_send) | jnp.isfinite(t_claim) | jnp.isfinite(t_ack)
-        )
-        # the DES plane's on_idle hook: the sweep RESETS state at the
-        # idle instant and schedules the resend at t + rto (the rto
-        # wait lives in t_ready below, not in this event's time)
-        t_rto = jnp.where(jnp.any(live) & idle, st["t_now"], inf)
-
-        times = jnp.stack([t_send, t_claim, t_ack, t_rto])
-        ev = jnp.argmin(times)
-        t_ev = times[ev]
-        act = jnp.isfinite(t_ev)
-        st["t_now"] = jnp.where(act, t_ev, st["t_now"])
-        ms = act & (ev == 0)
-        mc = act & (ev == 1)
-        ma = act & (ev == 2)
-        mr = act & (ev == 3)
-
-        # ---- send: one segment onto the serialized access link --------
-        fd = jnp.where(ms, f_sel, f_cnt)
-        use_retx = st["pend"][fd] >= 0
-        seq = jnp.where(use_retx, st["pend"][fd], st["next_seq"][fd])
-        st["pend"] = st["pend"].at[fd].set(jnp.where(use_retx, -1, st["pend"][fd]))
-        st["next_seq"] = (
-            st["next_seq"].at[fd].add(jnp.where(ms & ~use_retx, 1, 0))
-        )
-        st["infl"] = st["infl"].at[fd].add(jnp.where(ms, 1, 0))
-        depart = t_send + spacing
-        st["link_free"] = jnp.where(ms, depart, st["link_free"])
-        j_new = st["nsend"]
-        jd = jnp.where(ms, j_new, t_budget)
-        st["txf"] = st["txf"].at[jd].set(f_sel)
-        st["txs"] = st["txs"].at[jd].set(seq)
-        st["nsend"] = st["nsend"] + ms.astype(jnp.int32)
-        row = jnp.where(ms, qid_flow[f_sel], w_cnt)
-        pos = st["qapp"][row]
-        st["qidx"] = st["qidx"].at[row, pos].set(j_new)
-        st["qarr"] = st["qarr"].at[row, pos].set(depart + tcp.prop_delay)
-        st["qapp"] = st["qapp"].at[row].add(1)
-
-        # ---- claim: the jax plane's batch-claim step on dynamic logs --
-        t0 = jnp.where(mc, t_claim, 0.0)
-        if policy.steals:
-            q, backlog_q = steal_choice(
-                st["qarr"][:w_cnt], st["qptr"], worker_queue[w_sel], t0
-            )
-            backlog = backlog_q[q]
-        else:
-            q = worker_queue[w_sel]
-            row_arr = jnp.take(st["qarr"], q, axis=0)
-            n_arrived = jnp.searchsorted(row_arr, t0, side="right")
-            backlog = n_arrived.astype(jnp.int32) - st["qptr"][q]
-        k = policy.next_batch(backlog, lp, w_cnt)
-        k = jnp.clip(k, 1, jnp.minimum(backlog, mb))
-        k = jnp.where(mc, k, 0)
-        desch = mc & (u < lp.deschedule_prob)
-        stall_t = jnp.where(desch, stall_draw * lp.deschedule_mean, 0.0)
-        t1 = t0 + lp.claim_overhead + stall_t
-        qrow_idx = jnp.take(st["qidx"], q, axis=0)
-        g = jax.lax.dynamic_slice(qrow_idx, (st["qptr"][q],), (mb,))
-        valid = jnp.arange(mb) < k
-        gj = jnp.where(valid, g, t_budget)
-        sv = jnp.where(valid, svc_pad[gj], 0.0)
-        comp = t1 + jnp.cumsum(sv)
-        st["tack"] = (
-            st["tack"].at[gj].set(jnp.where(valid, comp + 2 * tcp.prop_delay, inf))
-        )
-        t_end = t1 + jnp.sum(sv)
-        st["freet"] = st["freet"].at[w_sel].set(
-            jnp.where(mc, t_end, st["freet"][w_sel])
-        )
-        if policy.uses_lock:
-            st["lockt"] = jnp.where(mc, t1, st["lockt"])
-        st["qptr"] = st["qptr"].at[q].add(k)
-        widx = jnp.where(valid, gj >> 5, tw)
-        bit = jnp.left_shift(jnp.uint32(1), (gj & 31).astype(jnp.uint32))
-        delta = jnp.zeros(tw + 1, jnp.uint32).at[widx].add(
-            jnp.where(valid, bit, jnp.uint32(0))
-        )
-        st["words"] = st["words"] | delta
-        st["batches"] = st["batches"] + mc.astype(jnp.int32)
-        st["items"] = st["items"] + k
-        st["deschs"] = st["deschs"] + desch.astype(jnp.int32)
-
-        # ---- ack: delivery + cumulative-ACK processing, merged --------
-        jad = jnp.where(ma, j_sel, t_budget)
-        fa = st["txf"][jad]
-        sa = st["txs"][jad]
-        st["tack"] = st["tack"].at[jad].set(inf)  # consume
-        fad = jnp.where(ma, fa, f_cnt)
-        t_a = jnp.where(ma, t_ack, 0.0)
-        wi = sa >> 5
-        bsh = (sa & 31).astype(jnp.uint32)
-        old_w = st["rwords"][fad, wi]
-        dup_seg = (old_w >> bsh) & 1 == 1  # DSACK: receiver saw it before
-        st["rwords"] = (
-            st["rwords"].at[fad, wi].set(old_w | jnp.left_shift(jnp.uint32(1), bsh))
-        )
-        pref = _recv_prefix(st["rwords"][fad], max_pkts)
-        ackno = pref - 1  # cumulative ACK == received prefix - 1
-
-        alive = ma & ~st["done"][fad]
-        # spurious retransmit: raise the reordering threshold + Eifel undo
-        dsk = alive & dup_seg
-        st["spur"] = st["spur"].at[fad].add(dsk)
-        st["reo"] = st["reo"].at[fad].set(
-            jnp.where(dsk, jnp.minimum(st["reo"][fad] + 4, max_reo), st["reo"][fad])
-        )
-        undo = dsk & (st["cwnd_before"][fad] > st["cwnd"][fad])
-        st["cwnd"] = st["cwnd"].at[fad].set(
-            jnp.where(undo, st["cwnd_before"][fad], st["cwnd"][fad])
-        )
-        # cumulative advance: window growth + completion check
-        adv = alive & (ackno > st["high_ack"][fad])
-        newly = (ackno - st["high_ack"][fad]).astype(jnp.float32)
-        st["infl"] = st["infl"].at[fad].set(
-            jnp.where(
-                adv,
-                jnp.maximum(0, st["infl"][fad] - (ackno - st["high_ack"][fad])),
-                st["infl"][fad],
-            )
-        )
-        cw = st["cwnd"][fad]
-        growth = jnp.where(cw < st["ssthresh"][fad], newly, newly / cw)
-        st["cwnd"] = st["cwnd"].at[fad].set(jnp.where(adv, cw + growth, cw))
-        st["high_ack"] = st["high_ack"].at[fad].set(
-            jnp.where(adv, ackno, st["high_ack"][fad])
-        )
-        done_now = adv & (ackno >= n_pad[fad] - 1)
-        st["done"] = st["done"].at[fad].set(st["done"][fad] | done_now)
-        st["t_done"] = st["t_done"].at[fad].set(
-            jnp.where(done_now, t_a, st["t_done"][fad])
-        )
-        # dup-ACK path: fast retransmit at the adaptive threshold
-        dupinc = alive & ~adv & ~dup_seg
-        dnew = st["dup"][fad] + 1
-        fire = dupinc & (dnew >= st["reo"][fad])
-        missing = st["high_ack"][fad] + 1
-        do_rtx = (
-            fire
-            & (missing < n_pad[fad])
-            & (missing != st["last_retx"][fad])
-            & (st["pend"][fad] < 0)
-        )
-        st["pend"] = st["pend"].at[fad].set(
-            jnp.where(do_rtx, missing, st["pend"][fad])
-        )
-        st["retx"] = st["retx"].at[fad].add(do_rtx)
-        st["last_retx"] = st["last_retx"].at[fad].set(
-            jnp.where(do_rtx, missing, st["last_retx"][fad])
-        )
-        st["infl"] = st["infl"].at[fad].set(
-            jnp.where(do_rtx, jnp.maximum(0, st["infl"][fad] - 1), st["infl"][fad])
-        )
-        cw2 = st["cwnd"][fad]
-        ss_cut = jnp.maximum(2.0, cw2 * beta)
-        st["cwnd_before"] = st["cwnd_before"].at[fad].set(
-            jnp.where(do_rtx, cw2, st["cwnd_before"][fad])
-        )
-        st["ssthresh"] = st["ssthresh"].at[fad].set(
-            jnp.where(do_rtx, ss_cut, st["ssthresh"][fad])
-        )
-        st["cwnd"] = st["cwnd"].at[fad].set(jnp.where(do_rtx, ss_cut, cw2))
-        st["dup"] = st["dup"].at[fad].set(
-            jnp.where(adv | fire, 0, jnp.where(dupinc, dnew, st["dup"][fad]))
-        )
-        # the window may have opened: the flow can send again at t_a
-        st["t_ready"] = st["t_ready"].at[fad].set(
-            jnp.where(alive & ~done_now, t_a, st["t_ready"][fad])
-        )
-
-        # ---- RTO sweep: everything stalled, resend from the hole ------
-        mrf = mr & live
-        missing_r = st["high_ack"] + 1
-        cond = mrf & (missing_r < n_pad)
-        st["ssthresh"] = jnp.where(
-            mrf, jnp.maximum(2.0, st["cwnd"] * beta), st["ssthresh"]
-        )
-        st["cwnd"] = jnp.where(mrf, tcp.init_cwnd, st["cwnd"])
-        st["infl"] = jnp.where(mrf, 0, st["infl"])
-        st["dup"] = jnp.where(mrf, 0, st["dup"])
-        st["retx"] = st["retx"] + (cond & (st["pend"] != missing_r)).astype(jnp.int32)
-        st["pend"] = jnp.where(cond, missing_r, st["pend"])
-        st["last_retx"] = jnp.where(cond, missing_r, st["last_retx"])
-        st["t_ready"] = jnp.where(mrf, st["t_now"] + tcp.rto, st["t_ready"])
-
-        return st, None
-
-    st, _ = jax.lax.scan(step, st0, (u_desch, stalls))
-    done = st["done"][:f_cnt]
-    fct = jnp.where(done, st["t_done"][:f_cnt] - t_start, jnp.inf)
-    pop = jnp.sum(jax.lax.population_count(st["words"][:tw])).astype(jnp.int32)
     return dict(
-        fct=fct,
-        done=done,
-        retx=st["retx"][:f_cnt],
-        spur=st["spur"][:f_cnt],
-        sends=st["nsend"],
-        batches=st["batches"],
-        items=st["items"],
-        deschs=st["deschs"],
-        words=st["words"][:tw],
-        popcount=pop,
+        # sender, per flow (+dump slot)
+        cwnd=jnp.broadcast_to(
+            tcp.init_cwnd[:, None].astype(jnp.float32), (lanes, f_cnt + 1)
+        ),
+        ssthresh=full((f_cnt + 1,), jnp.inf, jnp.float32),
+        next_seq=full((f_cnt + 1,), 0, jnp.int32),
+        high_ack=full((f_cnt + 1,), -1, jnp.int32),
+        dup=full((f_cnt + 1,), 0, jnp.int32),
+        infl=full((f_cnt + 1,), 0, jnp.int32),
+        retx=full((f_cnt + 1,), 0, jnp.int32),
+        spur=full((f_cnt + 1,), 0, jnp.int32),
+        reo=jnp.broadcast_to(
+            tcp.init_reorder_thresh[:, None].astype(jnp.int32), (lanes, f_cnt + 1)
+        ),
+        cwnd_before=full((f_cnt + 1,), 0, jnp.float32),
+        last_retx=full((f_cnt + 1,), -1, jnp.int32),
+        pend=full((f_cnt + 1,), -1, jnp.int32),  # single-slot retx queue
+        done=full((f_cnt + 1,), False, bool),
+        t_done=full((f_cnt + 1,), 0, jnp.float32),
+        t_ready=jnp.broadcast_to(ts_pad, (lanes, f_cnt + 1)),
+        # receiver, per flow: packed seen-bitmap + its contiguous prefix
+        rwords=full((f_cnt + 1, mw), 0, jnp.uint32),
+        # access link + transmission records
+        link_free=full((), 0, jnp.float32),
+        nsend=full((), 0, jnp.int32),
+        txf=full((t_budget + 1,), 0, jnp.int32),
+        txs=full((t_budget + 1,), 0, jnp.int32),
+        tack=full((t_budget + 1,), jnp.inf, jnp.float32),
+        # forwarder: per-queue arrival logs + batch-claim state
+        qidx=full((w_cnt + 1, t_budget + mb), t_budget, jnp.int32),
+        qarr=full((w_cnt + 1, t_budget + 1), jnp.inf, jnp.float32),
+        qapp=full((w_cnt + 1,), 0, jnp.int32),
+        qptr=full((w_cnt,), 0, jnp.int32),
+        freet=full((w_cnt,), 0, jnp.float32),
+        lockt=full((), 0, jnp.float32),
+        words=full((tw + 1,), 0, jnp.uint32),
+        batches=full((), 0, jnp.int32),
+        items=full((), 0, jnp.int32),
+        deschs=full((), 0, jnp.int32),
+        t_now=full((), 0, jnp.float32),
+        quiet=full((), False, bool),
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "policy",
-        "n_flows",
-        "max_pkts",
-        "n_workers",
-        "max_batch",
-        "tx_budget",
-        "n_steps",
-        "prefix_impl",
-        "prefix_interpret",
-    ),
-)
-def _run_tcp_lanes_jit(
-    lane_params: LaneParams,
-    tcp_params: TcpParams,
-    n_pkts: jnp.ndarray,
-    t_start: jnp.ndarray,
-    seeds: jnp.ndarray,
-    policy: str,
+def _tcp_step(
+    policy,
+    lp: LaneParams,
+    tcp: TcpParams,
+    consts,
+    n_pad,
+    qid_flow,
+    worker_queue,
     n_flows: int,
     max_pkts: int,
     n_workers: int,
     max_batch: int,
     tx_budget: int,
-    n_steps: int,
-    prefix_impl: str,
-    prefix_interpret: bool,
-) -> TcpLaneResult:
-    pol = build_policy(policy)
+    st,
+    xs,
+):
+    """One four-way-merge event on one lane (shared by both engines)."""
+    f_cnt, w_cnt, mb, t_budget = n_flows, n_workers, max_batch, tx_budget
+    tw = (t_budget + 31) // 32
+    svc_pad = consts["svc_pad"]
+    spacing = 1.0 / tcp.link_pps
+    beta = tcp.cubic_beta
+    max_reo = tcp.max_reorder_thresh.astype(jnp.int32)
+    u, stall_draw = xs
+    inf = jnp.float32(jnp.inf)
 
-    def one_lane(lp, tp, seed):
-        key = jax.random.PRNGKey(seed)
-        return _simulate_tcp_lane(
-            pol,
-            lp,
-            tp,
-            n_pkts,
-            t_start,
-            key,
-            n_flows=n_flows,
-            max_pkts=max_pkts,
-            n_workers=n_workers,
-            max_batch=max_batch,
-            tx_budget=tx_budget,
-            n_steps=n_steps,
+    # ---- candidate event times ------------------------------------
+    wnd = jnp.minimum(st["cwnd"], tcp.rwnd).astype(jnp.int32)
+    can_send = (
+        ~st["done"]
+        & (st["infl"] < wnd)
+        & ((st["pend"] >= 0) | (st["next_seq"] < n_pad))
+        & (st["nsend"] < t_budget)
+    )
+    tsf = jnp.where(can_send, st["t_ready"], inf)
+    f_sel = jnp.argmin(tsf).astype(jnp.int32)
+    t_send = jnp.where(
+        jnp.isfinite(tsf[f_sel]), jnp.maximum(tsf[f_sel], st["link_free"]), inf
+    )
+
+    heads = queue_heads(st["qarr"][:w_cnt], st["qptr"])
+    if policy.steals:
+        arr_next = jnp.broadcast_to(jnp.min(heads), (w_cnt,))
+    else:
+        arr_next = heads[worker_queue]
+    t_cand = jnp.maximum(st["freet"], arr_next)
+    if policy.uses_lock:
+        t_cand = jnp.maximum(t_cand, st["lockt"])
+    w_sel = jnp.argmin(t_cand).astype(jnp.int32)
+    t_claim = t_cand[w_sel]
+
+    j_sel = jnp.argmin(st["tack"][:t_budget]).astype(jnp.int32)
+    t_ack = st["tack"][j_sel]
+
+    live = ~st["done"] & (n_pad > 0)
+    idle = ~(jnp.isfinite(t_send) | jnp.isfinite(t_claim) | jnp.isfinite(t_ack))
+    # the DES plane's on_idle hook: the sweep RESETS state at the
+    # idle instant and schedules the resend at t + rto (the rto
+    # wait lives in t_ready below, not in this event's time)
+    t_rto = jnp.where(jnp.any(live) & idle, st["t_now"], inf)
+
+    times = jnp.stack([t_send, t_claim, t_ack, t_rto])
+    ev = jnp.argmin(times)
+    t_ev = times[ev]
+    act = jnp.isfinite(t_ev)
+    st["t_now"] = jnp.where(act, t_ev, st["t_now"])
+    ms = act & (ev == 0)
+    mc = act & (ev == 1)
+    ma = act & (ev == 2)
+    mr = act & (ev == 3)
+
+    # once every flow finished AND no send/claim/ack is in flight the
+    # lane can never change again — the chunked scan's exit signal
+    st["quiet"] = ~jnp.any(live) & idle
+
+    # ---- send: one segment onto the serialized access link --------
+    fd = jnp.where(ms, f_sel, f_cnt)
+    use_retx = st["pend"][fd] >= 0
+    seq = jnp.where(use_retx, st["pend"][fd], st["next_seq"][fd])
+    st["pend"] = st["pend"].at[fd].set(jnp.where(use_retx, -1, st["pend"][fd]))
+    st["next_seq"] = st["next_seq"].at[fd].add(jnp.where(ms & ~use_retx, 1, 0))
+    st["infl"] = st["infl"].at[fd].add(jnp.where(ms, 1, 0))
+    depart = t_send + spacing
+    st["link_free"] = jnp.where(ms, depart, st["link_free"])
+    j_new = st["nsend"]
+    jd = jnp.where(ms, j_new, t_budget)
+    st["txf"] = st["txf"].at[jd].set(f_sel)
+    st["txs"] = st["txs"].at[jd].set(seq)
+    st["nsend"] = st["nsend"] + ms.astype(jnp.int32)
+    row = jnp.where(ms, qid_flow[f_sel], w_cnt)
+    pos = st["qapp"][row]
+    st["qidx"] = st["qidx"].at[row, pos].set(j_new)
+    st["qarr"] = st["qarr"].at[row, pos].set(depart + tcp.prop_delay)
+    st["qapp"] = st["qapp"].at[row].add(1)
+
+    # ---- claim: the jax plane's batch-claim step on dynamic logs --
+    t0 = jnp.where(mc, t_claim, 0.0)
+    if policy.steals:
+        q, backlog_q = steal_choice(
+            st["qarr"][:w_cnt], st["qptr"], worker_queue[w_sel], t0
+        )
+        q = q.astype(jnp.int32)
+        backlog = backlog_q[q]
+    elif policy.shared:
+        q = jnp.int32(0)
+        n_arrived = jnp.searchsorted(st["qarr"][0], t0, side="right")
+        backlog = n_arrived.astype(jnp.int32) - st["qptr"][0]
+    else:
+        q = worker_queue[w_sel]
+        backlog = rows_arrived(st["qarr"][:w_cnt], t0)[q] - st["qptr"][q]
+    k = policy.next_batch(backlog, lp, w_cnt)
+    k = jnp.clip(k, 1, jnp.minimum(backlog, mb))
+    k = jnp.where(mc, k, 0)
+    desch = mc & (u < lp.deschedule_prob)
+    stall_t = jnp.where(desch, stall_draw * lp.deschedule_mean, 0.0)
+    t1 = t0 + lp.claim_overhead + stall_t
+    g = jax.lax.dynamic_slice(st["qidx"], (q, st["qptr"][q]), (1, mb))[0]
+    valid = jnp.arange(mb) < k
+    gj = jnp.where(valid, g, t_budget)
+    sv = jnp.where(valid, svc_pad[gj], 0.0)
+    comp = t1 + jnp.cumsum(sv)
+    st["tack"] = st["tack"].at[gj].set(jnp.where(valid, comp + 2 * tcp.prop_delay, inf))
+    t_end = t1 + jnp.sum(sv)
+    st["freet"] = st["freet"].at[w_sel].set(jnp.where(mc, t_end, st["freet"][w_sel]))
+    if policy.uses_lock:
+        st["lockt"] = jnp.where(mc, t1, st["lockt"])
+    st["qptr"] = st["qptr"].at[q].add(k)
+    widx = jnp.where(valid, gj >> 5, tw)
+    bit = jnp.left_shift(jnp.uint32(1), (gj & 31).astype(jnp.uint32))
+    delta = (
+        jnp.zeros(tw + 1, dtype=jnp.uint32)
+        .at[widx]
+        .add(jnp.where(valid, bit, jnp.uint32(0)))
+    )
+    st["words"] = st["words"] | delta
+    st["batches"] = st["batches"] + mc.astype(jnp.int32)
+    st["items"] = st["items"] + k
+    st["deschs"] = st["deschs"] + desch.astype(jnp.int32)
+
+    # ---- ack: delivery + cumulative-ACK processing, merged --------
+    jad = jnp.where(ma, j_sel, t_budget)
+    fa = st["txf"][jad]
+    sa = st["txs"][jad]
+    st["tack"] = st["tack"].at[jad].set(inf)  # consume
+    fad = jnp.where(ma, fa, f_cnt)
+    t_a = jnp.where(ma, t_ack, 0.0)
+    wi = sa >> 5
+    bsh = (sa & 31).astype(jnp.uint32)
+    old_w = st["rwords"][fad, wi]
+    dup_seg = (old_w >> bsh) & 1 == 1  # DSACK: receiver saw it before
+    st["rwords"] = (
+        st["rwords"].at[fad, wi].set(old_w | jnp.left_shift(jnp.uint32(1), bsh))
+    )
+    pref = _recv_prefix(st["rwords"][fad], max_pkts)
+    ackno = pref - 1  # cumulative ACK == received prefix - 1
+
+    alive = ma & ~st["done"][fad]
+    # spurious retransmit: raise the reordering threshold + Eifel undo
+    dsk = alive & dup_seg
+    st["spur"] = st["spur"].at[fad].add(dsk)
+    st["reo"] = st["reo"].at[fad].set(
+        jnp.where(dsk, jnp.minimum(st["reo"][fad] + 4, max_reo), st["reo"][fad])
+    )
+    undo = dsk & (st["cwnd_before"][fad] > st["cwnd"][fad])
+    st["cwnd"] = st["cwnd"].at[fad].set(
+        jnp.where(undo, st["cwnd_before"][fad], st["cwnd"][fad])
+    )
+    # cumulative advance: window growth + completion check
+    adv = alive & (ackno > st["high_ack"][fad])
+    newly = (ackno - st["high_ack"][fad]).astype(jnp.float32)
+    st["infl"] = st["infl"].at[fad].set(
+        jnp.where(
+            adv,
+            jnp.maximum(0, st["infl"][fad] - (ackno - st["high_ack"][fad])),
+            st["infl"][fad],
+        )
+    )
+    cw = st["cwnd"][fad]
+    growth = jnp.where(cw < st["ssthresh"][fad], newly, newly / cw)
+    st["cwnd"] = st["cwnd"].at[fad].set(jnp.where(adv, cw + growth, cw))
+    st["high_ack"] = st["high_ack"].at[fad].set(
+        jnp.where(adv, ackno, st["high_ack"][fad])
+    )
+    done_now = adv & (ackno >= n_pad[fad] - 1)
+    st["done"] = st["done"].at[fad].set(st["done"][fad] | done_now)
+    st["t_done"] = st["t_done"].at[fad].set(jnp.where(done_now, t_a, st["t_done"][fad]))
+    # dup-ACK path: fast retransmit at the adaptive threshold
+    dupinc = alive & ~adv & ~dup_seg
+    dnew = st["dup"][fad] + 1
+    fire = dupinc & (dnew >= st["reo"][fad])
+    missing = st["high_ack"][fad] + 1
+    do_rtx = (
+        fire
+        & (missing < n_pad[fad])
+        & (missing != st["last_retx"][fad])
+        & (st["pend"][fad] < 0)
+    )
+    st["pend"] = st["pend"].at[fad].set(jnp.where(do_rtx, missing, st["pend"][fad]))
+    st["retx"] = st["retx"].at[fad].add(do_rtx)
+    st["last_retx"] = st["last_retx"].at[fad].set(
+        jnp.where(do_rtx, missing, st["last_retx"][fad])
+    )
+    st["infl"] = st["infl"].at[fad].set(
+        jnp.where(do_rtx, jnp.maximum(0, st["infl"][fad] - 1), st["infl"][fad])
+    )
+    cw2 = st["cwnd"][fad]
+    ss_cut = jnp.maximum(2.0, cw2 * beta)
+    st["cwnd_before"] = st["cwnd_before"].at[fad].set(
+        jnp.where(do_rtx, cw2, st["cwnd_before"][fad])
+    )
+    st["ssthresh"] = st["ssthresh"].at[fad].set(
+        jnp.where(do_rtx, ss_cut, st["ssthresh"][fad])
+    )
+    st["cwnd"] = st["cwnd"].at[fad].set(jnp.where(do_rtx, ss_cut, cw2))
+    st["dup"] = st["dup"].at[fad].set(
+        jnp.where(adv | fire, 0, jnp.where(dupinc, dnew, st["dup"][fad]))
+    )
+    # the window may have opened: the flow can send again at t_a
+    st["t_ready"] = st["t_ready"].at[fad].set(
+        jnp.where(alive & ~done_now, t_a, st["t_ready"][fad])
+    )
+
+    # ---- RTO sweep: everything stalled, resend from the hole ------
+    mrf = mr & live
+    missing_r = st["high_ack"] + 1
+    cond = mrf & (missing_r < n_pad)
+    st["ssthresh"] = jnp.where(mrf, jnp.maximum(2.0, st["cwnd"] * beta), st["ssthresh"])
+    st["cwnd"] = jnp.where(mrf, tcp.init_cwnd, st["cwnd"])
+    st["infl"] = jnp.where(mrf, 0, st["infl"])
+    st["dup"] = jnp.where(mrf, 0, st["dup"])
+    st["retx"] = st["retx"] + (cond & (st["pend"] != missing_r)).astype(jnp.int32)
+    st["pend"] = jnp.where(cond, missing_r, st["pend"])
+    st["last_retx"] = jnp.where(cond, missing_r, st["last_retx"])
+    st["t_ready"] = jnp.where(mrf, st["t_now"] + tcp.rto, st["t_ready"])
+
+    return st, None
+
+
+def _tcp_outputs(st, t_start, n_flows: int, tx_budget: int):
+    f_cnt = n_flows
+    tw = (tx_budget + 31) // 32
+    done = st["done"][:, :f_cnt]
+    fct = jnp.where(done, st["t_done"][:, :f_cnt] - t_start, jnp.inf)
+    words = st["words"][:, :tw]
+    pop = jnp.sum(jax.lax.population_count(words), axis=-1).astype(jnp.int32)
+    return dict(
+        fct=fct,
+        done=done,
+        retx=st["retx"][:, :f_cnt],
+        spur=st["spur"][:, :f_cnt],
+        sends=st["nsend"],
+        batches=st["batches"],
+        items=st["items"],
+        deschs=st["deschs"],
+        words=words,
+        popcount=pop,
+    )
+
+
+def _tcp_core(
+    blocks,
+    pols,
+    n_pkts,
+    t_start,
+    n_flows: int,
+    max_pkts: int,
+    n_workers: int,
+    max_batch: int,
+    tx_budget: int,
+    s_pad: int,
+    chunk: int,
+    engine: str,
+):
+    """Advance every lane of every policy segment through the closed
+    loop; returns per-segment dicts of lane-axis arrays (safe to wrap
+    in ``shard_map``)."""
+    f_cnt, w_cnt = n_flows, n_workers
+    n_pad = jnp.concatenate([n_pkts.astype(jnp.int32), jnp.zeros(1, jnp.int32)])
+    outs = []
+    seg_states, seg_steps, seg_consts = [], [], []
+    for pol, (lp, tcp, seeds) in zip(pols, blocks):
+        lanes = seeds.shape[0]
+        # NIC-side steering is static per flow (RSS hash / shared queue 0)
+        qid_flow = pol.select_queue(jnp.arange(f_cnt, dtype=jnp.int32), w_cnt)
+        qid_flow = jnp.concatenate([qid_flow, jnp.zeros(1, jnp.int32)])
+        if pol.shared:
+            worker_queue = jnp.zeros(w_cnt, dtype=jnp.int32)
+        else:
+            worker_queue = jnp.arange(w_cnt, dtype=jnp.int32)
+        seg_steps.append(
+            functools.partial(
+                _tcp_step,
+                pol,
+                n_pad=n_pad,
+                qid_flow=qid_flow,
+                worker_queue=worker_queue,
+                n_flows=f_cnt,
+                max_pkts=max_pkts,
+                n_workers=w_cnt,
+                max_batch=max_batch,
+                tx_budget=tx_budget,
+            )
+        )
+        seg_consts.append(
+            jax.vmap(functools.partial(_tcp_setup, tx_budget=tx_budget, n_steps=s_pad))(
+                tcp, seeds
+            )
+        )
+        seg_states.append(
+            _tcp_state0(
+                lanes,
+                tcp,
+                t_start,
+                f_cnt,
+                max_pkts,
+                w_cnt,
+                max_batch,
+                tx_budget,
+            )
         )
 
-    out = jax.vmap(one_lane, in_axes=(0, 0, 0))(lane_params, tcp_params, seeds)
+    def done_fn(st):
+        return jnp.all(st["quiet"])
+
+    if engine == "reference":
+        for (lp, tcp, _), st0, step, consts in zip(
+            blocks, seg_states, seg_steps, seg_consts
+        ):
+
+            def one_lane(lp_l, tcp_l, c_l, st_l, step=step):
+                def body(s, x):
+                    return step(lp_l, tcp_l, c_l, st=s, xs=x)
+
+                st, _ = jax.lax.scan(body, st_l, (c_l["u"], c_l["stalls"]))
+                return st
+
+            st = jax.vmap(one_lane)(lp, tcp, consts, st0)
+            outs.append(_tcp_outputs(st, t_start, f_cnt, tx_budget))
+    elif engine == "compacted":
+        # one specialized chunked scan PER policy segment, all inside
+        # the one jitted call: each segment's lanes stop paying for the
+        # event budget at their own quiesce point, and each step
+        # compiles without the untaken policies' branches (a per-lane
+        # flag dispatch was measured slower than static segmentation
+        # here — the step is compute-bound at sweep lane counts)
+        for (lp, tcp, _), st0, step, consts in zip(
+            blocks, seg_states, seg_steps, seg_consts
+        ):
+
+            def body(carry, x, step=step, lp=lp, tcp=tcp, consts=consts):
+                def one(lp_l, tcp_l, c_l, st_l, u_l, s_l):
+                    return step(lp_l, tcp_l, c_l, st=st_l, xs=(u_l, s_l))[0]
+
+                return jax.vmap(one)(lp, tcp, consts, carry, x[0], x[1]), ()
+
+            st, _ = _chunked_scan(
+                body, st0, (consts["u"].T, consts["stalls"].T), done_fn, chunk
+            )
+            outs.append(_tcp_outputs(st, t_start, f_cnt, tx_budget))
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return tuple(outs)
+
+
+def _run_tcp_fused_impl(
+    blocks,
+    n_pkts,
+    t_start,
+    *,
+    pols,
+    n_flows: int,
+    max_pkts: int,
+    n_workers: int,
+    max_batch: int,
+    tx_budget: int,
+    s_pad: int,
+    chunk: int,
+    n_shards: int,
+    engine: str,
+    prefix_impl: str,
+    prefix_interpret: bool,
+):
+    core = functools.partial(
+        _tcp_core,
+        n_pkts=n_pkts,
+        t_start=t_start,
+        pols=pols,
+        n_flows=n_flows,
+        max_pkts=max_pkts,
+        n_workers=n_workers,
+        max_batch=max_batch,
+        tx_budget=tx_budget,
+        s_pad=s_pad,
+        chunk=chunk,
+        engine=engine,
+    )
+    if n_shards > 1:
+        spec = jax.sharding.PartitionSpec("lanes")
+        core = compat.shard_map(
+            core, compat.lane_mesh(n_shards), in_specs=(spec,), out_specs=spec
+        )
+    outs = core(blocks)
     # exactly-once on the claim bitmap: every transmission put on the
     # link was claimed by exactly one batch (popcount == prefix == sends)
+    words = jnp.concatenate([o["words"] for o in outs], axis=0)
+    sends = jnp.concatenate([o["sends"] for o in outs], axis=0)
     prefix = kernel_ops.done_prefix_packed(
-        out["words"],
-        out["sends"],
+        words,
+        sends,
         n_bits=tx_budget,
         impl=prefix_impl,
         interpret=prefix_interpret,
     )
-    return TcpLaneResult(
-        fct=out["fct"],
-        done=out["done"],
-        retransmissions=out["retx"],
-        spurious=out["spur"],
-        sends=out["sends"],
-        batches=out["batches"],
-        items=out["items"],
-        deschedules=out["deschs"],
-        claimed_popcount=out["popcount"],
-        claimed_prefix=prefix,
+    results, at = [], 0
+    for o in outs:
+        lanes = o["sends"].shape[0]
+        results.append(
+            TcpLaneResult(
+                fct=o["fct"],
+                done=o["done"],
+                retransmissions=o["retx"],
+                spurious=o["spur"],
+                sends=o["sends"],
+                batches=o["batches"],
+                items=o["items"],
+                deschedules=o["deschs"],
+                claimed_popcount=o["popcount"],
+                claimed_prefix=prefix[at : at + lanes],
+            )
+        )
+        at += lanes
+    return tuple(results)
+
+
+_TCP_STATICS = (
+    "pols",
+    "n_flows",
+    "max_pkts",
+    "n_workers",
+    "max_batch",
+    "tx_budget",
+    "s_pad",
+    "chunk",
+    "n_shards",
+    "engine",
+    "prefix_impl",
+    "prefix_interpret",
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _tcp_fused_jit(donate: bool):
+    return jax.jit(
+        _run_tcp_fused_impl,
+        static_argnames=_TCP_STATICS,
+        donate_argnums=(0,) if donate else (),
     )
+
+
+def run_tcp_lanes_fused(
+    requests,
+    *,
+    n_pkts=256,
+    t_start=None,
+    n_workers: int = 4,
+    max_batch: int = 64,
+    tx_budget: int | None = None,
+    n_steps: int | None = None,
+    engine: str = "compacted",
+    chunk: int = 64,
+    shards: int | str = 1,
+    prefix_impl: str = "auto",
+    prefix_interpret: bool = False,
+    timings: dict | None = None,
+):
+    """Simulate every TCP lane of every request in ONE jitted call.
+
+    ``requests`` is a sequence of dicts ``{"policy": name-or-JaxPolicy,
+    "seeds": [...], "lane_params": {...}, "tcp_params": {...}}`` — one
+    statically-bounded lane segment per request, all sharing the flow
+    layout (``n_pkts`` / ``t_start``) and budgets.  Returns one
+    :class:`TcpLaneResult` per request, in order.  ``tx_budget`` bounds
+    total transmissions (originals + retransmits; default 9/8 of the
+    packet total + 32) and ``n_steps`` the event budget — rounded up to
+    a multiple of ``chunk`` so the quiesce short-circuit can skip whole
+    chunks; flows that do not finish within them report ``done=False``
+    and an infinite ``fct``.  ``shards`` / ``timings`` behave like
+    :func:`repro.core.jaxplane.run_lanes_fused`.
+    """
+    requests = list(requests)
+    if not requests:
+        raise ValueError("run_tcp_lanes_fused: empty request list")
+    n_arr = np.atleast_1d(np.asarray(n_pkts, dtype=np.int32))
+    f_cnt = int(n_arr.shape[0])
+    max_pkts = int(n_arr.max())
+    total = int(n_arr.sum())
+    if t_start is None:
+        t_start = np.zeros(f_cnt, dtype=np.float32)
+    t_start = np.asarray(t_start, dtype=np.float32)
+    if t_start.shape != (f_cnt,):
+        raise ValueError(f"t_start shape {t_start.shape} != ({f_cnt},)")
+    if tx_budget is None:
+        tx_budget = total + total // 8 + 32
+    if n_steps is None:
+        n_steps = 3 * int(tx_budget) + f_cnt + 64
+    chunk = max(1, int(chunk))
+    s_pad = -(-int(n_steps) // chunk) * chunk
+    n_shards = _resolve_shards(shards)
+
+    pols, blocks, orig_lanes = [], [], []
+    for req in requests:
+        pol = _resolve_policy(req["policy"])
+        seeds = jnp.asarray(np.asarray(req["seeds"], dtype=np.uint32))
+        lanes = seeds.shape[0]
+        lp = tcp_lane_defaults(**(req.get("lane_params") or {}))
+        tp = default_tcp_params(**(req.get("tcp_params") or {}))
+        unknown = set(lp) - set(LaneParams._fields)
+        unknown |= set(tp) - set(TcpParams._fields)
+        if unknown:
+            raise ValueError(f"unknown sweep knobs: {sorted(unknown)}")
+        params = LaneParams(*_broadcast_lanes(lp, LaneParams._fields, lanes))
+        tcp_p = TcpParams(*_broadcast_lanes(tp, TcpParams._fields, lanes))
+        pad = (-lanes) % n_shards
+        pols.append(pol)
+        blocks.append(_pad_lanes((params, tcp_p, seeds), pad))
+        orig_lanes.append(lanes)
+
+    donate = jax.default_backend() != "cpu"
+    fn = _tcp_fused_jit(donate)
+    static = dict(
+        pols=tuple(pols),
+        n_flows=f_cnt,
+        max_pkts=max_pkts,
+        n_workers=n_workers,
+        max_batch=max_batch,
+        tx_budget=int(tx_budget),
+        s_pad=s_pad,
+        chunk=chunk,
+        n_shards=n_shards,
+        engine=engine,
+        prefix_impl=prefix_impl,
+        prefix_interpret=prefix_interpret,
+    )
+    blocks = tuple(blocks)
+    args = (blocks, jnp.asarray(n_arr), jnp.asarray(t_start))
+    if timings is None:
+        outs = fn(*args, **static)
+    else:
+        t0 = time.perf_counter()
+        compiled = fn.lower(*args, **static).compile()
+        t1 = time.perf_counter()
+        outs = compiled(*args)
+        jax.block_until_ready(outs)
+        t2 = time.perf_counter()
+        timings["compile_s"] = t1 - t0
+        timings["run_s"] = t2 - t1
+    return [
+        jax.tree_util.tree_map(lambda a: a[:lanes], res)
+        for res, lanes in zip(outs, orig_lanes)
+    ]
 
 
 def run_tcp_lanes(
@@ -559,6 +821,9 @@ def run_tcp_lanes(
     max_batch: int = 64,
     tx_budget: int | None = None,
     n_steps: int | None = None,
+    engine: str = "compacted",
+    chunk: int = 64,
+    shards: int | str = 1,
     prefix_impl: str = "auto",
     prefix_interpret: bool = False,
 ) -> TcpLaneResult:
@@ -569,48 +834,28 @@ def run_tcp_lanes(
     per-flow start times (default 0).  ``lane_params`` /
     ``tcp_params`` map knob names to scalars or [lanes] arrays exactly
     like :func:`repro.core.jaxplane.run_lanes`; ``seeds`` defines the
-    lane count.  ``tx_budget`` bounds total transmissions (originals +
-    retransmits; default 9/8 of the packet total + 32) and ``n_steps``
-    the event budget — flows that do not finish within them report
-    ``done=False`` and an infinite ``fct``.
+    lane count.  A single-segment wrapper over
+    :func:`run_tcp_lanes_fused` — see there for the budget and
+    ``engine`` / ``chunk`` / ``shards`` knobs.
     """
-    seeds = jnp.asarray(seeds, dtype=jnp.uint32)
-    lanes = seeds.shape[0]
-    n_arr = np.atleast_1d(np.asarray(n_pkts, dtype=np.int32))
-    f_cnt = int(n_arr.shape[0])
-    max_pkts = int(n_arr.max())
-    total = int(n_arr.sum())
-    if t_start is None:
-        t_start = np.zeros(f_cnt, dtype=np.float32)
-    t_start = np.asarray(t_start, dtype=np.float32)
-    if t_start.shape != (f_cnt,):
-        raise ValueError(f"t_start shape {t_start.shape} != ({f_cnt},)")
-    if tx_budget is None:
-        tx_budget = total + total // 8 + 32
-    if n_steps is None:
-        n_steps = 3 * tx_budget + f_cnt + 64
-
-    lp = tcp_lane_defaults(**(lane_params or {}))
-    tp = default_tcp_params(**(tcp_params or {}))
-    unknown = set(lp) - set(LaneParams._fields)
-    unknown |= set(tp) - set(TcpParams._fields)
-    if unknown:
-        raise ValueError(f"unknown sweep knobs: {sorted(unknown)}")
-    params = LaneParams(*_broadcast_lanes(lp, LaneParams._fields, lanes))
-    tcp_p = TcpParams(*_broadcast_lanes(tp, TcpParams._fields, lanes))
-    return _run_tcp_lanes_jit(
-        params,
-        tcp_p,
-        jnp.asarray(n_arr),
-        jnp.asarray(t_start),
-        seeds,
-        policy=policy,
-        n_flows=f_cnt,
-        max_pkts=max_pkts,
+    return run_tcp_lanes_fused(
+        [
+            dict(
+                policy=policy,
+                seeds=seeds,
+                lane_params=lane_params,
+                tcp_params=tcp_params,
+            )
+        ],
+        n_pkts=n_pkts,
+        t_start=t_start,
         n_workers=n_workers,
         max_batch=max_batch,
-        tx_budget=int(tx_budget),
-        n_steps=int(n_steps),
+        tx_budget=tx_budget,
+        n_steps=n_steps,
+        engine=engine,
+        chunk=chunk,
+        shards=shards,
         prefix_impl=prefix_impl,
         prefix_interpret=prefix_interpret,
-    )
+    )[0]

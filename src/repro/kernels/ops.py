@@ -45,6 +45,7 @@ __all__ = [
     "done_prefix",
     "done_prefix_batch",
     "done_prefix_packed",
+    "pack_bits_u32",
     "on_tpu",
 ]
 
@@ -163,8 +164,11 @@ def rwkv6(
     Tp = T + (pad if impl != "naive" else 0)
 
     if impl == "naive":
-        fn = jax.vmap(jax.vmap(ref.rwkv6_scan_ref, in_axes=(1, 1, 1, 1, 0, 0), out_axes=(1, 0)),
-                      in_axes=(0, 0, 0, 0, None, 0), out_axes=(0, 0))
+        fn = jax.vmap(
+            jax.vmap(ref.rwkv6_scan_ref, in_axes=(1, 1, 1, 1, 0, 0), out_axes=(1, 0)),
+            in_axes=(0, 0, 0, 0, None, 0),
+            out_axes=(0, 0),
+        )
         o, s = fn(r, k, v, w, u, state)
         return o, s
     if impl == "xla":
@@ -185,8 +189,14 @@ def rwkv6(
 
     uu = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
     o, s = rwkv6_pallas(
-        fold(r2), fold(k2), fold(v2), fold(w2), uu,
-        state.reshape(B * H, N, N), chunk=chunk, interpret=interpret,
+        fold(r2),
+        fold(k2),
+        fold(v2),
+        fold(w2),
+        uu,
+        state.reshape(B * H, N, N),
+        chunk=chunk,
+        interpret=interpret,
     )
     o = o.reshape(B, H, Tp, N).transpose(0, 2, 1, 3)[:, :T]
     return o, s.reshape(B, H, N, N)
@@ -245,8 +255,10 @@ def ssd(
     Tp = x2.shape[1]
 
     if impl in ("naive", "xla"):
-        core = ref.ssd_scan_ref if impl == "naive" else functools.partial(
-            ref.ssd_chunk_ref, chunk=chunk
+        core = (
+            ref.ssd_scan_ref
+            if impl == "naive"
+            else functools.partial(ref.ssd_chunk_ref, chunk=chunk)
         )
         fn = jax.vmap(  # over H
             jax.vmap(core, in_axes=(0, 0, None, 0, 0, None, 0), out_axes=(0, 0)),
@@ -263,8 +275,14 @@ def ssd(
     dtk = dt2.transpose(0, 2, 1).reshape(Bb * H, Tp)
     Ak = jnp.broadcast_to(A[None], (Bb, H)).reshape(Bb * H)
     y, s = ssd_pallas(
-        xk, dtk, Ak, fold3(Bh2), fold3(Ch2),
-        state.reshape(Bb * H, P, N), chunk=chunk, interpret=interpret,
+        xk,
+        dtk,
+        Ak,
+        fold3(Bh2),
+        fold3(Ch2),
+        state.reshape(Bb * H, P, N),
+        chunk=chunk,
+        interpret=interpret,
     )
     y = y.reshape(Bb, H, Tp, P).transpose(0, 2, 1, 3)[:, :T]
     y = y + D[None, None, :, None] * x
@@ -328,6 +346,24 @@ def done_prefix_batch(
     return done_prefix_batch_pallas(
         done, start, limit, block_n=block_n, interpret=interpret
     )
+
+
+def pack_bits_u32(bits: jax.Array) -> jax.Array:
+    """Pack a trailing bool axis into uint32 words (AtomicBitmap layout).
+
+    ``bits[..., 32*j + b]`` becomes bit ``b`` of ``words[..., j]`` —
+    the exact layout :func:`done_prefix_packed` consumes and
+    ``core/ring.py``'s AtomicBitmap keeps on the threaded plane.  The
+    lane engines pack their reconstructed claimed-masks through here in
+    one shot instead of OR-ing per-claim deltas inside the scan.
+    """
+    *lead, n = bits.shape
+    n_words = -(-n // 32)
+    pad = [(0, 0)] * len(lead) + [(0, n_words * 32 - n)]
+    b = jnp.pad(bits.astype(jnp.uint32), pad)
+    b = b.reshape(*lead, n_words, 32)
+    shifts = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(b * shifts, axis=-1, dtype=jnp.uint32)
 
 
 def done_prefix_packed(

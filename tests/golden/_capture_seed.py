@@ -59,8 +59,16 @@ def main() -> None:
     )
     g["proto_corec_n4"] = qstats(
         simulate_protocol(
-            4, "corec", 3.5, 1.0, claim_overhead=0.1, cas_retry_cost=0.2,
-            batch=16, n_jobs=20_000, service="M", seed=5,
+            4,
+            "corec",
+            3.5,
+            1.0,
+            claim_overhead=0.1,
+            cas_retry_cost=0.2,
+            batch=16,
+            n_jobs=20_000,
+            service="M",
+            seed=5,
         )
     )
 
@@ -109,7 +117,9 @@ def main() -> None:
         TcpSimConfig(policy="corec", n_workers=4, seed=1, deschedule_prob=1e-3),
     )[0]
     g["tcp_corec_single"] = {
-        "fct": r.fct, "retx": r.retransmissions, "spurious": r.spurious,
+        "fct": r.fct,
+        "retx": r.retransmissions,
+        "spurious": r.spurious,
     }
     flows = [(i, 7, i * 1.5) for i in range(48)]
     for pol in ("corec", "scaleout"):

@@ -4,9 +4,11 @@
 metric drifts past tolerance — but until now nothing tested the guard
 itself.  Covers the contract documented in its docstring: the exact
 tolerance boundary (``observed == baseline * tolerance`` passes, just
-above fails), one-sided checking (improvements never fail), missing
-results / policies / metrics fail by name, NaN fails, and a malformed
-results file fails the guard instead of crashing it.
+above fails), one-sided checking (improvements never fail), the
+opposite-direction throughput gate (``lane_points_per_s`` fails below
+``baseline * floor``, never above), missing results / policies /
+metrics fail by name, NaN fails, and a malformed results file fails
+the guard instead of crashing it.
 """
 
 from __future__ import annotations
@@ -69,6 +71,81 @@ def test_exactly_2x_boundary_passes_and_epsilon_above_fails(tmp_path):
     )
     fails = check(results, base2, 2.0)
     assert len(fails) == 1 and "p50_median regressed" in fails[0]
+
+
+def test_throughput_floor_is_one_sided_the_other_way(tmp_path):
+    # lane_points_per_s is higher-is-better: exactly baseline * floor
+    # passes, just below fails, and a big improvement never fails
+    results = _write_results(
+        tmp_path,
+        jax_policies={"corec": {"lane_points_per_s": 50.0}},
+        tcp_policies={"corec": {"lane_points_per_s": 500.0}},
+    )
+    base = _baselines(
+        tmp_path,
+        {
+            "jax_sweep/corec": {"lane_points_per_s": 100.0},
+            "jax_sweep/tcp/corec": {"lane_points_per_s": 100.0},
+        },
+    )
+    assert check(results, base, 2.0, throughput_floor=0.5) == []
+    base2 = _baselines(
+        tmp_path,
+        {"jax_sweep/corec": {"lane_points_per_s": 100.1}},
+    )
+    fails = check(results, base2, 2.0, throughput_floor=0.5)
+    assert len(fails) == 1
+    assert "lane_points_per_s regressed 50.000 <" in fails[0]
+
+
+def test_throughput_nan_fails(tmp_path):
+    results = _write_results(
+        tmp_path, jax_policies={"corec": {"lane_points_per_s": float("nan")}}
+    )
+    base = _baselines(tmp_path, {"jax_sweep/corec": {"lane_points_per_s": 100.0}})
+    fails = check(results, base, 2.0)
+    assert len(fails) == 1 and "lane_points_per_s" in fails[0]
+
+
+def test_collect_metrics_picks_up_lane_points(tmp_path):
+    results = _write_results(
+        tmp_path,
+        jax_policies={"corec": {"p50_median": 0.1, "lane_points_per_s": 9.0}},
+        tcp_policies={"corec": {"fct_p50": 1.0, "lane_points_per_s": 3.0}},
+    )
+    got = collect_metrics(results)
+    assert got["jax_sweep/corec"]["lane_points_per_s"] == 9.0
+    assert got["jax_sweep/tcp/corec"]["lane_points_per_s"] == 3.0
+
+
+def test_main_throughput_floor_flag(tmp_path, capsys):
+    results = _write_results(
+        tmp_path, jax_policies={"corec": {"lane_points_per_s": 10.0}}
+    )
+    base = _baselines(tmp_path, {"jax_sweep/corec": {"lane_points_per_s": 100.0}})
+    rc = main(
+        [
+            "--results",
+            str(results),
+            "--baselines",
+            str(base),
+            "--throughput-floor",
+            "0.05",
+        ]
+    )
+    assert rc == 0
+    rc = main(
+        [
+            "--results",
+            str(results),
+            "--baselines",
+            str(base),
+            "--throughput-floor",
+            "0.5",
+        ]
+    )
+    capsys.readouterr()
+    assert rc == 1
 
 
 def test_missing_baseline_key_fails_by_name(tmp_path):

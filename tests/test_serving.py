@@ -90,23 +90,32 @@ def test_contiguous_release_order():
 
 def test_work_conservation_under_skewed_sessions():
     """All requests in ONE session: RSS pins them to one worker's queue;
-    COREC lets both workers prefill.  COREC must not be slower."""
+    COREC lets both workers prefill.  COREC must not be slower.
+
+    Wall-clock of two threaded engines on a shared CI box is noisy, so
+    each policy's time is the best of three runs — the minimum is the
+    least-interfered estimate of the engine's own cost, which is what
+    the work-conservation claim is about.
+    """
     t = {}
     for policy in ("corec", "rss"):
-        eng = InferenceEngine(
-            TINY,
-            EngineConfig(
-                n_slots=4, max_seq=24, n_workers=2, policy=policy, eos_token=-1
-            ),
-        )
-        reqs = _requests(8, sessions=1, seed=9)
-        t0 = time.perf_counter()
-        res = eng.run(reqs, timeout=90)
-        t[policy] = time.perf_counter() - t0
-        assert len(res) == 8
-        if policy == "rss":
-            workers = {r.worker for r in res}
-            assert len(workers) == 1  # RSS pinned everything to one worker
+        best = float("inf")
+        for _ in range(3):
+            eng = InferenceEngine(
+                TINY,
+                EngineConfig(
+                    n_slots=4, max_seq=24, n_workers=2, policy=policy, eos_token=-1
+                ),
+            )
+            reqs = _requests(8, sessions=1, seed=9)
+            t0 = time.perf_counter()
+            res = eng.run(reqs, timeout=90)
+            best = min(best, time.perf_counter() - t0)
+            assert len(res) == 8
+            if policy == "rss":
+                workers = {r.worker for r in res}
+                assert len(workers) == 1  # RSS pinned everything to one worker
+        t[policy] = best
     assert t["corec"] <= t["rss"] * 1.5  # GIL-bound box: just no regression
 
 
