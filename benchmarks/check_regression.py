@@ -23,9 +23,15 @@ is for — and so does a results file that no longer parses as JSON.
 
 Gated sources: per-policy p50/p99 from ``policy_sweep.json`` (udp +
 mawi DES runs), forwarder-lane p50/p99 medians + fused-sweep
-``lane_points_per_s`` from ``jax_sweep.json``, and the TCP-lane
+``lane_points_per_s`` from ``jax_sweep.json``, the TCP-lane
 flow-completion-time p50/p99 + ``lane_points_per_s`` from the same
-file's ``tcp`` section (``jax_sweep/tcp/<policy>``).
+file's ``tcp`` section (``jax_sweep/tcp/<policy>``), and the
+degraded-mode rows from ``fault_sweep.json``
+(``fault_sweep/<policy>``): ``degraded_p99`` under the latency
+tolerance, plus two count metrics whose 0-valued baselines make them
+exact invariants — ``wedged_lanes`` (a lease-capable policy wedging at
+all fails: ``got <= 0 * tolerance``) and ``duplicates_per_fault``
+(``locked`` never reclaims, so any duplicate it reports fails).
 
 Usage (CI):
     python -m benchmarks.check_regression \
@@ -79,6 +85,19 @@ def collect_metrics(results_dir: Path) -> dict:
                 m: row[m]
                 for m in ("fct_p50", "fct_p99", "lane_points_per_s")
                 if m in row
+            }
+    fs = results_dir / "fault_sweep.json"
+    if fs.exists():
+        sweep = _load(fs)
+        for pol, row in sweep.get("policies", {}).items():
+            out[f"fault_sweep/{pol}"] = {
+                m: row[m]
+                for m in (
+                    "degraded_p99",
+                    "duplicates_per_fault",
+                    "wedged_lanes",
+                )
+                if row.get(m) is not None
             }
     return out
 

@@ -51,6 +51,7 @@ def main(argv=None) -> None:
         ("tcp_flows", {}, dict(scale=30, nflows_list=(32,))),  # Table 5, Figs 8-10
         ("policy_sweep", {}, dict(n_packets=8_000, n_tcp_flows=48)),  # registry
         ("jax_sweep", {}, dict(n_packets=400, tcp_pkts=96)),  # vectorized jax plane
+        ("fault_sweep", {}, dict(n_packets=400, n_seeds=3)),  # degraded mode
         ("kernels_bench", {}, None),  # Pallas kernel analytics
         ("serving_bench", {}, None),  # framework-level COREC serving
         ("roofline", {}, None),  # dry-run aggregation (section Roofline)

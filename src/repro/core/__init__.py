@@ -7,6 +7,7 @@ Layout (see ROADMAP.md "Module map" for the full picture):
   baseline.py      threaded queue drivers (RSS / locked / hybrid / ...)
   dispatch.py      worker pools draining any registered queue policy
   des.py           unified discrete-event core (event loop + worker plane)
+  faults.py        fault model (FaultSpec) shared by all three planes
   policy.py        RxPolicy plugins + the registry all planes share
   jaxplane.py      vectorized jax plane (lax.scan step fn, vmap lanes)
   tcpjax.py        vectorized TCP lane engine (closed loop on the jax plane)
@@ -29,6 +30,7 @@ from .baseline import (
 )
 from .des import DesItem, EventLoop, PlaneStats, WorkerPlane
 from .dispatch import DispatchResult, Item, WorkerPool, make_queue
+from .faults import FaultSpec, StrandedRunError, WorkerCrash
 from .policy import (
     RxPolicy,
     available_policies,
@@ -62,6 +64,7 @@ __all__ = [
     "make_thread_queue", "register_policy", "jax_policies",
     "make_jax_policy", "fused_jax_requests",
     "DispatchResult", "Item", "WorkerPool", "make_queue",
+    "FaultSpec", "StrandedRunError", "WorkerCrash",
     "simulate_policy", "simulate_protocol", "simulate_scale_out",
     "simulate_scale_up", "sweep_load", "sweep_policy_jax",
     "ReorderReport", "measure_reordering", "per_flow_reordering",

@@ -21,7 +21,14 @@ from __future__ import annotations
 
 import threading
 
-__all__ = ["AtomicU64", "AtomicU64Array", "AtomicBitmap", "AtomicWord", "TryLock"]
+__all__ = [
+    "AtomicU64",
+    "AtomicU64Array",
+    "AtomicBitmap",
+    "AtomicWord",
+    "AtomicLease",
+    "TryLock",
+]
 
 _WORD_BITS = 64
 _WORD_MASK = (1 << _WORD_BITS) - 1
@@ -201,6 +208,46 @@ class AtomicBitmap:
             run += span
             pos = (pos + span) % self.nbits
         return run, ops
+
+
+class AtomicLease:
+    """One claim's ownership word for lease-based reclamation.
+
+    A batch claim publishes an AtomicLease in state HELD.  Exactly one
+    of two CAS transitions wins:
+
+    * the claim owner's ``try_complete()`` (HELD -> DONE) on the normal
+      completion path, or
+    * a helper's ``try_reclaim()`` (HELD -> RECLAIMED) after the lease
+      deadline expires.
+
+    Both are single-word ``__sync_bool_compare_and_swap`` analogues, so
+    the race between a slow-but-alive owner and an impatient helper
+    resolves without blocking either: the loser's CAS simply fails and
+    it drops its copy of the batch (owner loses -> its deliveries were
+    already made and become the duplicate prefix; helper loses -> no
+    reclaim happened and exactly-once is preserved).
+    """
+
+    HELD = 1
+    DONE = 2
+    RECLAIMED = 3
+
+    __slots__ = ("_word",)
+
+    def __init__(self):
+        self._word = AtomicU64(self.HELD)
+
+    def state(self) -> int:
+        return self._word.load()
+
+    def try_complete(self) -> bool:
+        """Owner's completion CAS; False iff a helper already reclaimed."""
+        return self._word.compare_and_swap(self.HELD, self.DONE)
+
+    def try_reclaim(self) -> bool:
+        """Helper's reclamation CAS; False iff completed or already taken."""
+        return self._word.compare_and_swap(self.HELD, self.RECLAIMED)
 
 
 class TryLock:

@@ -22,7 +22,7 @@ registry in :mod:`repro.core.policy` maps policy names to these classes
 from __future__ import annotations
 
 import threading
-from typing import Any, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 from .ring import Claim, CorecRing, RingStats
 
@@ -60,9 +60,19 @@ class ScaleOutDriver:
     single-consumer special case, in which every CAS trivially succeeds.
     """
 
-    def __init__(self, n_queues: int, size: int):
+    def __init__(
+        self, n_queues: int, size: int, lease_timeout: Optional[float] = None
+    ):
         self.n_queues = n_queues
-        self.rings = [CorecRing(size) for _ in range(n_queues)]
+        self.lease_timeout = lease_timeout
+        self.rings = [
+            CorecRing(size, lease_timeout=lease_timeout) for _ in range(n_queues)
+        ]
+        # Worker ids the chaos harness declared dead.  The WorkerPool
+        # shares its own list object here so crash notifications are
+        # visible without coupling the driver to the pool.
+        self.dead_workers: List[int] = []
+        self.adoptions = 0  # dead-ring claims by live workers (diagnostic)
 
     # -- producer side -------------------------------------------------
     def produce(self, payload: Any, flow_key: int) -> bool:
@@ -89,13 +99,44 @@ class ScaleOutDriver:
 
     # -- consumer side ---------------------------------------------------
     def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
-        return self.rings[worker].claim(max_batch)
+        c = self.rings[worker].claim(max_batch)
+        if c is not None:
+            c._ring_idx = worker
+            return c
+        # Failover adoption: RSS pins flows to one consumer, so a dead
+        # worker's ring has backlog and no drainer.  Because every ring
+        # is a full MPMC CorecRing, a live worker can claim from it with
+        # no extra coordination — the claim CAS *is* the safety argument.
+        for d in self.dead_workers:
+            if d == worker:
+                continue
+            c = self.rings[d].claim(max_batch)
+            if c is not None:
+                c._ring_idx = d
+                self.adoptions += 1
+                return c
+        return None
 
     def complete(self, worker: int, claim: Claim) -> None:
-        self.rings[worker].complete(claim)
+        self.rings[getattr(claim, "_ring_idx", worker)].complete(claim)
 
     def try_release(self, worker: int) -> int:
-        return self.rings[worker].try_release()
+        n = self.rings[worker].try_release()
+        for d in self.dead_workers:
+            if d != worker:
+                n += self.rings[d].try_release()
+        return n
+
+    def reclaim_expired(self, worker: int = 0) -> List[Claim]:
+        """Lease helping across ALL rings: a live worker reclaims expired
+        claims wherever they strand (its own ring or a dead peer's)."""
+        out: List[Claim] = []
+        for r in self.rings:
+            out.extend(r.reclaim_expired())
+        return out
+
+    def leases_outstanding(self) -> int:
+        return sum(r.leases_outstanding() for r in self.rings)
 
     def backlog(self) -> int:
         return sum(r.backlog() for r in self.rings)
@@ -111,11 +152,23 @@ class LockedSharedQueue:
     work-conserving (single queue) but *blocking* — a descheduled lock
     holder stalls every peer.  Claim+copy runs under the mutex, exactly as
     a critical-section driver would.
+
+    Fault surface: ``fault_hook(worker)`` (set by the chaos harness) is
+    called *inside* the critical section, after acquire and before any
+    ring op.  A hook that raises ``WorkerCrash`` models the holder dying
+    mid-claim — deliberately no try/finally, so the mutex stays locked
+    forever and every peer wedges: a lease cannot help a design whose
+    claim is a critical section (``lease_timeout`` is accepted and
+    ignored for interface parity).  ``abort_wait()`` (also harness-set)
+    lets blocked waiters poll for shutdown instead of hanging the host
+    process on a dead mutex.
     """
 
-    def __init__(self, size: int):
+    def __init__(self, size: int, lease_timeout: Optional[float] = None):
         self.ring = CorecRing(size)
         self._mutex = threading.Lock()
+        self.fault_hook: Optional[Callable[[int], None]] = None
+        self.abort_wait: Optional[Callable[[], bool]] = None
 
     def produce(self, payload: Any, flow_key: int = 0) -> bool:
         return self.ring.produce(payload)
@@ -125,15 +178,29 @@ class LockedSharedQueue:
     ) -> int:
         return self.ring.produce_batch(payloads)
 
+    def _acquire(self) -> bool:
+        """Blocking acquire, abortable when the harness wired abort_wait."""
+        if self.abort_wait is None:
+            self._mutex.acquire()
+            return True
+        while not self._mutex.acquire(timeout=0.05):
+            if self.abort_wait():
+                return False
+        return True
+
     def claim(self, worker: int, max_batch: int = 32) -> Optional[Claim]:
-        with self._mutex:
-            c = self.ring.claim(max_batch)
-            if c is not None:
-                # Under the big lock the whole claim..release is one
-                # critical section: complete+release immediately.
-                self.ring.complete(c)
-                self.ring.try_release()
-            return c
+        if not self._acquire():
+            return None  # shutdown observed while the mutex is wedged
+        if self.fault_hook is not None:
+            self.fault_hook(worker)  # may raise WorkerCrash: mutex stays held
+        c = self.ring.claim(max_batch)
+        if c is not None:
+            # Under the big lock the whole claim..release is one
+            # critical section: complete+release immediately.
+            self.ring.complete(c)
+            self.ring.try_release()
+        self._mutex.release()
+        return c
 
     def complete(self, worker: int, claim: Claim) -> None:
         # Already done under the mutex in claim().
@@ -149,8 +216,8 @@ class LockedSharedQueue:
 class CorecSharedQueue:
     """Adapter giving ``CorecRing`` the same (worker-indexed) surface."""
 
-    def __init__(self, size: int):
-        self.ring = CorecRing(size)
+    def __init__(self, size: int, lease_timeout: Optional[float] = None):
+        self.ring = CorecRing(size, lease_timeout=lease_timeout)
 
     def produce(self, payload: Any, flow_key: int = 0) -> bool:
         return self.ring.produce(payload)
@@ -169,6 +236,12 @@ class CorecSharedQueue:
     def try_release(self, worker: int = 0) -> int:
         return self.ring.try_release()
 
+    def reclaim_expired(self, worker: int = 0) -> List[Claim]:
+        return self.ring.reclaim_expired()
+
+    def leases_outstanding(self) -> int:
+        return self.ring.leases_outstanding()
+
     def backlog(self) -> int:
         return self.ring.backlog()
 
@@ -186,8 +259,10 @@ class HybridStealDriver(ScaleOutDriver):
     and the owner can both attempt them).
     """
 
-    def __init__(self, n_queues: int, size: int):
-        super().__init__(n_queues, size)
+    def __init__(
+        self, n_queues: int, size: int, lease_timeout: Optional[float] = None
+    ):
+        super().__init__(n_queues, size, lease_timeout=lease_timeout)
         self._steal_src = [-1] * n_queues  # last foreign ring per worker
         self.steals = 0  # diagnostic only (benign count race)
 
@@ -237,8 +312,9 @@ class AdaptiveBatchSharedQueue(CorecSharedQueue):
         n_workers: int,
         min_batch: int = 1,
         max_batch: Optional[int] = None,
+        lease_timeout: Optional[float] = None,
     ):
-        super().__init__(size)
+        super().__init__(size, lease_timeout=lease_timeout)
         self.n_workers = max(1, n_workers)
         self.min_batch = max(1, min_batch)
         self.max_batch = max_batch

@@ -24,11 +24,12 @@ the paper's Fig 7 shape.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from .des import DesItem, EventLoop, WorkerPlane
+from .faults import FaultSpec
 from .policy import make_policy
 from .traffic import Packet
 
@@ -49,12 +50,21 @@ class ForwarderConfig:
     deschedule_mean: float = 30.0  # us
     seed: int = 0
     policy_kwargs: dict = field(default_factory=dict)
+    faults: Tuple[FaultSpec, ...] = ()  # chaos schedule (crash/stall/straggler)
+    lease: Optional[float] = None  # claim-lease timeout enabling reclamation
 
 
 def simulate_forwarder(
-    packets: List[Packet], cfg: ForwarderConfig
+    packets: List[Packet], cfg: ForwarderConfig, stats_out: Optional[dict] = None
 ) -> List[Tuple[float, Packet]]:
-    """Returns [(completion_time, packet)] in completion order."""
+    """Returns [(completion_time, packet)] in completion order.
+
+    With ``cfg.faults`` armed, crashed workers strand their claims and
+    (when ``cfg.lease`` is finite) peers reclaim them after the lease —
+    re-served items count as duplicates, first delivery keeps the
+    latency.  Pass ``stats_out={}`` to receive the plane's degraded-mode
+    counters (dead_workers / reclaims / duplicates / wedged, ...).
+    """
     rng = np.random.default_rng(cfg.seed)
     out: List[Tuple[float, Packet]] = []
 
@@ -74,11 +84,16 @@ def simulate_forwarder(
         claim_overhead=cfg.claim_overhead,
         deschedule_prob=cfg.deschedule_prob,
         deschedule_mean=cfg.deschedule_mean,
+        faults=cfg.faults,
+        lease=cfg.lease,
     )
     loop.on("arrive", plane.enqueue)
     for p in packets:
         loop.schedule(p.t_arrival, "arrive", DesItem(flow=p.flow, payload=p))
     loop.run()
+    stats = plane.finalize()  # stranded-claim audit (raises on fault-free runs)
+    if stats_out is not None:
+        stats_out.update(stats.snapshot())
     # Completions are appended in claim order; a stable sort by time
     # yields the same global completion order the seed's (t, tiebreak)
     # "done"-event heap produced.

@@ -73,6 +73,7 @@ __all__ = [
     "JaxPolicy",
     "LaneParams",
     "TrafficParams",
+    "FaultParams",
     "LaneResult",
     "ClaimRecord",
     "JAX_POLICIES",
@@ -143,6 +144,38 @@ def default_traffic_params(**kw) -> dict:
     return d
 
 
+class FaultParams(NamedTuple):
+    """Per-lane fault injection knobs (the jax view of ``FaultSpec``).
+
+    One crash and one straggler per lane: ``crash_worker`` dies at
+    simulated time ``crash_t`` (``+inf`` = never, the exact-identity
+    default), ``straggler_worker`` serves every packet ``straggler``
+    times slower.  ``lease`` is the reclamation deadline offset: a claim
+    stranded by a mid-claim crash re-opens to live workers at
+    ``t_claim + lease`` (``+inf`` = no lease — the stranded span is
+    never re-served and the lane reports ``undelivered > 0``; policies
+    with ``leases=False``, i.e. ``locked``, always behave as ``+inf``).
+    """
+
+    crash_t: jnp.ndarray  # fp32 crash/stall time (+inf = no fault)
+    crash_worker: jnp.ndarray  # fp32 worker index that dies
+    straggler: jnp.ndarray  # fp32 service slowdown factor (1.0 = none)
+    straggler_worker: jnp.ndarray  # fp32 worker index that runs slow
+    lease: jnp.ndarray  # fp32 reclamation deadline offset (+inf = off)
+
+
+def default_fault_params(**kw) -> dict:
+    d = dict(
+        crash_t=jnp.inf,
+        crash_worker=0,
+        straggler=1.0,
+        straggler_worker=0,
+        lease=jnp.inf,
+    )
+    d.update(kw)
+    return d
+
+
 class LaneResult(NamedTuple):
     """Per-lane outputs of :func:`run_lanes` (each field is [lanes])."""
 
@@ -158,6 +191,11 @@ class LaneResult(NamedTuple):
     claimed_popcount: jnp.ndarray  # set bits in the packed claim bitmap
     claimed_prefix: jnp.ndarray  # contiguous done prefix of that bitmap
     sojourn: jnp.ndarray  # [lanes, n] per-packet latency, or [lanes, 0]
+    # -- degraded-mode outputs (all zero / -inf-free on fault-free lanes)
+    reclaimed: jnp.ndarray  # items re-opened to live workers by a lease
+    duplicates: jnp.ndarray  # crashed-claim prefix re-served at-least-once
+    undelivered: jnp.ndarray  # items never delivered (wedged lanes only)
+    drain_t: jnp.ndarray  # last *finite* completion time (recovery edge)
 
 
 # ----------------------------------------------------------------------
@@ -174,7 +212,10 @@ class JaxPolicy(NamedTuple):
     disciplines); ``uses_lock`` serializes claims on a lock horizon
     (the Metronome-class baseline); ``steals`` lets a worker whose own
     queue is empty at claim time take the batch from the queue with the
-    largest instantaneous backlog instead (hybrid work stealing).
+    largest instantaneous backlog instead (hybrid work stealing);
+    ``leases`` marks claims reclaimable after a crash (mirrors
+    ``RxPolicy.supports_leases`` — False only for the blocking
+    ``locked``, whose stranded spans wedge forever).
     """
 
     name: str
@@ -183,6 +224,7 @@ class JaxPolicy(NamedTuple):
     select_queue: object
     next_batch: object
     steals: bool = False
+    leases: bool = True
 
 
 def _fmix32(h: jnp.ndarray) -> jnp.ndarray:
@@ -280,7 +322,9 @@ def _next_batch_adaptive(backlog, params, n_workers):
 JAX_POLICIES = {
     "corec": JaxPolicy("corec", True, False, _select_shared, _next_batch_cap),
     "scaleout": JaxPolicy("scaleout", False, False, _select_rss, _next_batch_cap),
-    "locked": JaxPolicy("locked", True, True, _select_shared, _next_batch_cap),
+    "locked": JaxPolicy(
+        "locked", True, True, _select_shared, _next_batch_cap, leases=False
+    ),
     "hybrid": JaxPolicy(
         "hybrid", False, False, _select_rss, _next_batch_cap, steals=True
     ),
@@ -394,8 +438,14 @@ class _LaneState(NamedTuple):
     free_t: jnp.ndarray  # [W] fp32 per-worker free time
     lock_t: jnp.ndarray  # fp32 lock horizon (``locked`` only)
     batches: jnp.ndarray  # int32 claims issued
-    items: jnp.ndarray  # int32 packets claimed
+    items: jnp.ndarray  # int32 packets claimed (delivered, not stranded)
     deschs: jnp.ndarray  # int32 deschedule stalls taken
+    # -- fault plane (all inert on fault-free lanes) -------------------
+    resume_t: jnp.ndarray  # [W] fp32 lease expiry gating a stranded span
+    resume_until: jnp.ndarray  # [W] int32 rank bound of the gated span
+    reclaimed: jnp.ndarray  # int32 items re-opened by a lease
+    dups: jnp.ndarray  # int32 crashed-prefix items re-served (at-least-once)
+    halted: jnp.ndarray  # bool no claimable work remains (drained OR wedged)
 
 
 class ClaimRecord(NamedTuple):
@@ -404,13 +454,17 @@ class ClaimRecord(NamedTuple):
     Emitted per scan step by the compacted engine; masked steps carry
     ``k == 0`` and the dump queue ``W``.  Everything per-packet —
     completion times, the packed claim bitmap — reconstructs from these
-    after the scan.
+    after the scan.  ``k`` is the *delivered* size: a claim truncated by
+    its worker's crash records only the pre-crash prefix, so the
+    reconstruction never assigns completion times to packets the dead
+    worker stranded.
     """
 
     q: jnp.ndarray  # int32 claimed queue (W == dump)
     ptr: jnp.ndarray  # int32 first claimed rank in that queue
-    k: jnp.ndarray  # int32 claim size (0 == masked step)
+    k: jnp.ndarray  # int32 delivered claim size (0 == masked step)
     t1: jnp.ndarray  # fp32 claim time + overhead (+ stall)
+    slow: jnp.ndarray  # fp32 straggler service multiplier (1.0 = none)
 
 
 def _init_state(lanes: int, n_workers: int) -> _LaneState:
@@ -422,19 +476,38 @@ def _init_state(lanes: int, n_workers: int) -> _LaneState:
         batches=z,
         items=z,
         deschs=z,
+        resume_t=jnp.zeros((lanes, n_workers), jnp.float32),
+        resume_until=jnp.zeros((lanes, n_workers), jnp.int32),
+        reclaimed=z,
+        dups=z,
+        halted=jnp.zeros((lanes,), bool),
     )
 
 
-def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, st, u, stall):
+def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, flt, st, u, stall):
     """One batch claim on one lane; returns the new state + its record.
 
     ``q_arr`` [W, n+1] sorted arrival rows (+inf padded), ``cumsvc``
     [W, n] per-queue prefix sums of service time in rank order.  The
     worker's busy span is the difference of two ``cumsvc`` gathers —
     no per-packet window is touched inside the step.
+
+    ``flt = (crash_w, slow_w, lease)`` is the lane's fault view:
+    ``crash_w`` [W] per-worker crash times (+inf = immortal), ``slow_w``
+    [W] straggler service multipliers, ``lease`` the reclamation offset.
+    Every fault expression is an exact identity at the defaults
+    (+inf / 1.0): ``where`` masks stay false and service spans multiply
+    by 1.0, so fault-free lanes remain bit-identical to the pre-fault
+    engine (pinned by tests/test_compaction.py).
     """
     w_count, n = cumsvc.shape
-    heads = queue_heads(q_arr, st.qptr)
+    crash_w, slow_w, lease = flt
+    heads_raw = queue_heads(q_arr, st.qptr)
+    # Lease gate: a span stranded by a mid-claim crash re-opens only at
+    # resume_t (the claim time + lease); until qptr passes the stranded
+    # bound the queue's head is pushed out to the lease expiry.
+    gated = st.qptr < st.resume_until
+    heads = jnp.where(gated, jnp.maximum(heads_raw, st.resume_t), heads_raw)
     if pol.steals:
         # work conserving: a worker wakes for the earliest unclaimed
         # arrival in ANY queue (it can steal), not just its own
@@ -442,24 +515,44 @@ def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, st, u, stall):
     elif pol.shared:
         arr_next = jnp.broadcast_to(heads[0], (w_count,))
     else:
-        arr_next = heads
+        # scaleout failover: worker v wakes for its own queue's head, or
+        # for a CRASHED peer's head (never before that peer's death) —
+        # the lease-style adoption of a dead worker's pinned backlog.
+        # With crash_w = +inf every cross landing is +inf: identity.
+        eye = jnp.eye(w_count, dtype=bool)
+        avail = jnp.maximum(heads[None, :], jnp.where(eye, -jnp.inf, crash_w[None, :]))
+        arr_next = jnp.min(avail, axis=1)
     t_cand = jnp.maximum(st.free_t, arr_next)
     if pol.uses_lock:
         t_cand = jnp.maximum(t_cand, st.lock_t)
+    # dead-worker mask: a worker whose next feasible claim would start
+    # at/after its crash time never claims again (crash-between-claims)
+    t_cand = jnp.where(t_cand >= crash_w, jnp.inf, t_cand)
     w = jnp.argmin(t_cand).astype(jnp.int32)
     t0 = t_cand[w]
     active = jnp.isfinite(t0)
     if pol.steals:
-        q, backlog_q = steal_choice(q_arr, st.qptr, w, t0)
-        q = q.astype(jnp.int32)
+        # inline gated steal: identical to steal_choice() when no span
+        # is lease-gated, but a helper never steals a stranded span
+        # before its lease expires
+        backlog_q = rows_arrived(q_arr, t0) - st.qptr
+        bgate = gated & (st.resume_t > t0)
+        backlog_q = jnp.where(bgate, 0, backlog_q)
+        q = jnp.where(backlog_q[w] > 0, w, jnp.argmax(backlog_q)).astype(jnp.int32)
         backlog = backlog_q[q]
     elif pol.shared:
         q = jnp.int32(0)
         n_arrived = jnp.searchsorted(q_arr[0], t0, side="right")
         backlog = n_arrived.astype(jnp.int32) - st.qptr[0]
     else:
-        q = w
-        backlog = rows_arrived(q_arr, t0)[q] - st.qptr[q]
+        # own queue when it is claimable at t0, else the first claimable
+        # dead peer's queue (the failover wake-up above guarantees one)
+        backlog_q = rows_arrived(q_arr, t0) - st.qptr
+        gate_t = jnp.where(gated, st.resume_t, -jnp.inf)
+        can = (jnp.arange(w_count) == w) | (crash_w <= t0)
+        has = can & (backlog_q > 0) & (t0 >= gate_t)
+        q = jnp.where(has[w], w, jnp.argmax(has)).astype(jnp.int32)
+        backlog = backlog_q[q]
     k = pol.next_batch(backlog, params, w_count)
     k = jnp.clip(k, 1, jnp.minimum(backlog, mb))
     k = jnp.where(active, k, 0).astype(jnp.int32)
@@ -468,27 +561,59 @@ def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, st, u, stall):
     t1 = t0 + params.claim_overhead + stall_t
     ptr = st.qptr[q]
     base = jnp.where(ptr > 0, cumsvc[q, jnp.maximum(ptr - 1, 0)], 0.0)
-    last = cumsvc[q, jnp.clip(ptr + k - 1, 0, n - 1)]
-    t_end = t1 + jnp.where(k > 0, last - base, 0.0)
-    free_t = st.free_t.at[w].set(jnp.where(active, t_end, st.free_t[w]))
+    # Straggler inflation + crash truncation: worker w serves at slow x
+    # real time; it delivers the longest prefix of its claim that
+    # finishes strictly before its crash time c.
+    slow = slow_w[w]
+    c = crash_w[w]
+    svc_budget = base + (c - t1) / slow
+    k_eff = jnp.searchsorted(cumsvc[q], svc_budget, side="right").astype(
+        jnp.int32
+    ) - ptr
+    k_eff = jnp.where(active, jnp.clip(k_eff, 0, k), 0).astype(jnp.int32)
+    crashed = active & (k_eff < k)
+    last = cumsvc[q, jnp.clip(ptr + k_eff - 1, 0, n - 1)]
+    t_end = t1 + jnp.where(k_eff > 0, (last - base) * slow, 0.0)
+    free_t_w = jnp.where(crashed, jnp.inf, jnp.where(active, t_end, st.free_t[w]))
+    free_t = st.free_t.at[w].set(free_t_w)
     if pol.uses_lock:
-        # lock held through claim + stall; service runs outside it
-        lock_t = jnp.where(active, t1, st.lock_t)
+        # lock held through claim + stall; service runs outside it.  A
+        # holder that dies inside the window [t0, t1] dies INSIDE the
+        # critical section: the horizon goes to +inf and every peer
+        # wedges — the paper's blocking pathology under real failure.
+        lock_dead = active & (c <= t1)
+        lock_t = jnp.where(active, jnp.where(lock_dead, jnp.inf, t1), st.lock_t)
     else:
         lock_t = st.lock_t
+    # A truncated claim strands [ptr + k_eff, ptr + k): gate the span
+    # until the lease expires (t0 + lease; +inf lease = wedged forever).
+    lease_v = lease if pol.leases else jnp.float32(jnp.inf)
+    resume_t = jnp.where(
+        crashed, st.resume_t.at[q].set(t0 + lease_v), st.resume_t
+    )
+    resume_until = jnp.where(
+        crashed, st.resume_until.at[q].set(ptr + k), st.resume_until
+    )
+    will_reclaim = crashed & jnp.isfinite(lease_v)
     st2 = _LaneState(
-        qptr=st.qptr.at[q].add(k),
+        qptr=st.qptr.at[q].add(k_eff),
         free_t=free_t,
         lock_t=lock_t,
         batches=st.batches + active.astype(jnp.int32),
-        items=st.items + k,
+        items=st.items + k_eff,
         deschs=st.deschs + desch.astype(jnp.int32),
+        resume_t=resume_t,
+        resume_until=resume_until,
+        reclaimed=st.reclaimed + jnp.where(will_reclaim, k - k_eff, 0),
+        dups=st.dups + jnp.where(will_reclaim, k_eff, 0),
+        halted=st.halted | ~active,
     )
     rec = ClaimRecord(
-        q=jnp.where(k > 0, q, w_count),
-        ptr=jnp.where(k > 0, ptr, 0),
-        k=k,
+        q=jnp.where(k_eff > 0, q, w_count),
+        ptr=jnp.where(k_eff > 0, ptr, 0),
+        k=k_eff,
         t1=t1,
+        slow=slow,
     )
     return st2, rec
 
@@ -517,9 +642,12 @@ def _scatter_claims(rec: ClaimRecord, qid, rank, cumsvc):
     t1_p = rec.t1[safe]
     ptr_p = rec.ptr[safe]
     k_p = rec.k[safe]
+    slow_p = rec.slow[safe]
     base_p = jnp.where(ptr_p > 0, cumsvc[qid, jnp.maximum(ptr_p - 1, 0)], 0.0)
     in_claim = (cid_p >= 0) & (rank < ptr_p + k_p)
-    done = jnp.where(in_claim, t1_p + (cumsvc[qid, rank] - base_p), jnp.inf)
+    done = jnp.where(
+        in_claim, t1_p + (cumsvc[qid, rank] - base_p) * slow_p, jnp.inf
+    )
     return done, in_claim
 
 
@@ -533,6 +661,7 @@ def _lane_setup(
     n_draws: int,
     params: LaneParams,
     traffic: TrafficParams,
+    fparams: FaultParams,
     seed,
 ):
     """Pre-draw one lane's traffic and build its per-queue views."""
@@ -554,6 +683,11 @@ def _lane_setup(
     ku, ke = jax.random.split(kd)
     u_desch = jax.random.uniform(ku, (n_draws,))
     stalls = jax.random.exponential(ke, (n_draws,)).astype(jnp.float32)
+    # per-worker fault views along the worker axis (identity defaults:
+    # +inf crash time, 1.0 service multiplier)
+    widx = jnp.arange(n_workers, dtype=jnp.float32)
+    crash_w = jnp.where(widx == fparams.crash_worker, fparams.crash_t, jnp.inf)
+    slow_w = jnp.where(widx == fparams.straggler_worker, fparams.straggler, 1.0)
     return dict(
         arr=arr,
         qid=qid,
@@ -562,6 +696,9 @@ def _lane_setup(
         cumsvc=cumsvc,
         u=u_desch,
         stalls=stalls,
+        crash_w=crash_w.astype(jnp.float32),
+        slow_w=slow_w.astype(jnp.float32),
+        lease=jnp.float32(fparams.lease),
     )
 
 
@@ -575,6 +712,7 @@ def _reference_lane(pol: JaxPolicy, mb: int, params, su):
     """
     q_arr, cumsvc = su["q_arr"], su["cumsvc"]
     qid, rank = su["qid"], su["rank"]
+    flt = (su["crash_w"], su["slow_w"], su["lease"])
     w_count, n = cumsvc.shape
     cs_pad = jnp.concatenate(
         [cumsvc, jnp.broadcast_to(cumsvc[:, -1:], (w_count, mb))], axis=1
@@ -586,11 +724,11 @@ def _reference_lane(pol: JaxPolicy, mb: int, params, su):
     def step(carry, xs):
         st, done_qr = carry
         u, stall = xs
-        st2, rec = _claim_step(pol, mb, params, q_arr, cumsvc, st, u, stall)
+        st2, rec = _claim_step(pol, mb, params, q_arr, cumsvc, flt, st, u, stall)
         row = jax.lax.dynamic_slice(done_qr, (rec.q, rec.ptr), (1, mb))[0]
         cs = jax.lax.dynamic_slice(cs_pad, (rec.q, rec.ptr), (1, mb))[0]
         base = jnp.where(rec.ptr > 0, cs_pad[rec.q, jnp.maximum(rec.ptr - 1, 0)], 0.0)
-        comp = rec.t1 + (cs - base)
+        comp = rec.t1 + (cs - base) * rec.slow
         neww = jnp.where(jnp.arange(mb) < rec.k, comp, row)
         done_qr = jax.lax.dynamic_update_slice(done_qr, neww[None], (rec.q, rec.ptr))
         return (st2, done_qr), None
@@ -659,18 +797,18 @@ def _sweep_core(
     dicts of lane-axis arrays (safe to wrap in ``shard_map``)."""
     n, mb = n_packets, max_batch
     setups, states = [], []
-    for pol, (params, traffic, seeds) in zip(pols, blocks):
+    for pol, (params, traffic, fparams, seeds) in zip(pols, blocks):
         setup = jax.vmap(
             functools.partial(
                 _lane_setup, pol, workload, service, n, n_flows, n_workers, s_pad
             )
-        )(params, traffic, seeds)
+        )(params, traffic, fparams, seeds)
         setups.append(setup)
         states.append(_init_state(seeds.shape[0], n_workers))
 
     if engine == "reference":
         finals = []
-        for pol, (params, _, _), su in zip(pols, blocks, setups):
+        for pol, (params, _, _, _), su in zip(pols, blocks, setups):
             ref = jax.vmap(functools.partial(_reference_lane, pol, mb))(params, su)
             finals.append(ref)
     elif engine == "compacted":
@@ -682,17 +820,21 @@ def _sweep_core(
         # segmentation here — the step is compute-bound, not
         # dispatch-bound, at sweep lane counts)
         finals = []
-        for pol, (params, _, _), su, st0 in zip(pols, blocks, setups, states):
+        for pol, (params, _, _, _), su, st0 in zip(pols, blocks, setups, states):
             step = functools.partial(_claim_step, pol, mb)
 
             def body(carry, x, step=step, params=params, su=su):
                 u, stall = x
+                flt = (su["crash_w"], su["slow_w"], su["lease"])
                 return jax.vmap(step)(
-                    params, su["q_arr"], su["cumsvc"], carry, u, stall
+                    params, su["q_arr"], su["cumsvc"], flt, carry, u, stall
                 )
 
             def done_fn(st):
-                return jnp.all(st.items >= n)
+                # a lane is finished when it drained OR wedged (no
+                # claimable work remains: dead lock holder, unleased
+                # stranded span) — wedged lanes must not burn the budget
+                return jnp.all(st.halted | (st.items >= n))
 
             st, rec = _chunked_scan(
                 body, st0, (su["u"].T, su["stalls"].T), done_fn, chunk
@@ -711,7 +853,13 @@ def _sweep_core(
         sojourn = done - su["arr"]
         ratio, max_dist = jax.vmap(reorder_metrics)(done)
         pct = jnp.percentile(sojourn, jnp.asarray([50.0, 99.0]), axis=-1)
-        span = jnp.max(done, axis=-1) - jnp.min(su["arr"], axis=-1)
+        # Undelivered items (wedged lanes) carry done=+inf; the recovery
+        # edge is the last *finite* completion, and the busy span uses it
+        # so faulted lanes still report a finite throughput denominator.
+        drain_t = jnp.max(
+            jnp.where(jnp.isfinite(done), done, -jnp.inf), axis=-1
+        )
+        span = drain_t - jnp.min(su["arr"], axis=-1)
         outs.append(
             dict(
                 p50=pct[0],
@@ -727,6 +875,10 @@ def _sweep_core(
                     jax.lax.population_count(words), axis=-1
                 ).astype(jnp.int32),
                 words=words,
+                reclaimed=st.reclaimed,
+                duplicates=st.dups,
+                undelivered=(n - st.items).astype(jnp.int32),
+                drain_t=drain_t,
                 sojourn=sojourn if return_times else sojourn[:, :0],
             )
         )
@@ -798,6 +950,10 @@ def _run_fused_impl(
                 claimed_popcount=o["claimed_popcount"],
                 claimed_prefix=prefix[at : at + lanes],
                 sojourn=o["sojourn"],
+                reclaimed=o["reclaimed"],
+                duplicates=o["duplicates"],
+                undelivered=o["undelivered"],
+                drain_t=o["drain_t"],
             )
         )
         at += lanes
@@ -918,15 +1074,18 @@ def run_lanes_fused(
         lanes = seeds.shape[0]
         lp = default_lane_params(**(req.get("lane_params") or {}))
         tp = default_traffic_params(**(req.get("traffic_params") or {}))
+        fp = default_fault_params(**(req.get("fault_params") or {}))
         unknown = set(lp) - set(LaneParams._fields)
         unknown |= set(tp) - set(TrafficParams._fields)
+        unknown |= set(fp) - set(FaultParams._fields)
         if unknown:
             raise ValueError(f"unknown sweep knobs: {sorted(unknown)}")
         params = LaneParams(*_broadcast_lanes(lp, LaneParams._fields, lanes))
         traffic = TrafficParams(*_broadcast_lanes(tp, TrafficParams._fields, lanes))
+        fparams = FaultParams(*_broadcast_lanes(fp, FaultParams._fields, lanes))
         pad = (-lanes) % n_shards
         pols.append(pol)
-        blocks.append(_pad_lanes((params, traffic, seeds), pad))
+        blocks.append(_pad_lanes((params, traffic, fparams, seeds), pad))
         orig_lanes.append(lanes)
 
     donate = jax.default_backend() != "cpu"
@@ -970,6 +1129,7 @@ def run_lanes(
     seeds,
     lane_params: dict | None = None,
     traffic_params: dict | None = None,
+    fault_params: dict | None = None,
     workload: str = "udp",
     service: str = "fwd",
     n_packets: int = 2000,
@@ -1000,6 +1160,7 @@ def run_lanes(
                 seeds=seeds,
                 lane_params=lane_params,
                 traffic_params=traffic_params,
+                fault_params=fault_params,
             )
         ],
         workload=workload,

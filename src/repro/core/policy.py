@@ -96,6 +96,16 @@ class RxPolicy:
     #: registry name, set by the subclass
     name: str = "?"
 
+    #: Lease-based claim reclamation capability.  True for every
+    #: non-blocking policy: a claim is a CAS, so a live worker can
+    #: re-issue an expired peer claim without entering anyone's critical
+    #: section.  The blocking 'locked' policy opts out — a lease on a
+    #: mutex-guarded claim would have to break the mutex, which is
+    #: exactly the operation a lock-based design cannot express — so a
+    #: dead lock holder wedges every peer (paper section 3.3 under real
+    #: failure instead of a transient deschedule).
+    supports_leases: bool = True
+
     def __init__(self, n_workers: int, batch: int = 32, n_queues: int = 1):
         self.n_workers = n_workers
         self.batch = batch
@@ -114,6 +124,23 @@ class RxPolicy:
 
     def backlog(self) -> int:
         return sum(len(q) for q in self.queues)
+
+    def next_batch_dead(self, worker: int, dead_queues) -> List[DesItem]:
+        """Failover drain: adopt backlog pinned to a dead peer's queue.
+
+        RSS-class policies pin flows to one consumer, so a dead worker
+        leaves its queue without a drainer; a live worker with no work
+        of its own pops the dead peer's queue head instead (lease-style
+        helping at steering granularity).  Shared-queue policies have a
+        single queue every live worker already drains — nothing extra
+        to adopt.
+        """
+        if len(self.queues) <= 1:
+            return []
+        for q_idx in dead_queues:
+            if q_idx < len(self.queues) and self.queues[q_idx]:
+                return self._pop(self.queues[q_idx], self.batch)
+        return []
 
     # -- serialization hooks (blocking policies only) -------------------
     def claim_start(self, worker: int, t: float) -> float:
@@ -175,6 +202,7 @@ class LockedPolicy(SharedQueuePolicy):
     """
 
     name = "locked"
+    supports_leases = False
 
     def __init__(self, n_workers: int, batch: int = 32):
         super().__init__(n_workers, batch)
@@ -273,6 +301,10 @@ class PolicySpec:
     #: discipline has no array formulation yet (plugins may opt out).
     #: Kept lazy so the registry imports without jax installed.
     jax_factory: Optional[Callable[[], Any]] = None
+    #: whether claims made under this policy can carry a reclamation
+    #: lease (see RxPolicy.supports_leases) — False only for blocking
+    #: disciplines, whose faulted runs wedge instead of recovering.
+    leases: bool = True
 
 
 _REGISTRY: Dict[str, PolicySpec] = {}
@@ -391,6 +423,7 @@ register_policy(
         thread_factory=lambda n, size, **kw: LockedSharedQueue(size, **kw),
         doc="one shared queue behind a mutex (Metronome-class baseline)",
         jax_factory=_jax_factory("locked"),
+        leases=False,
     )
 )
 register_policy(

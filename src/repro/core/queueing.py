@@ -120,6 +120,7 @@ def _run_jobs(
                 arr[i], "arrive", DesItem(flow=i, payload=i, queue_hint=int(hints[i]))
             )
     loop.run()
+    plane.finalize()  # raises StrandedRunError on silent slot-stranding
     return done
 
 

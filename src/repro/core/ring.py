@@ -59,10 +59,12 @@ so within ``[claim_head, head)`` a set bit always means "this epoch".
 
 from __future__ import annotations
 
+import threading
+import time
 from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
-from .atomics import AtomicBitmap, AtomicU64, AtomicU64Array, TryLock
+from .atomics import AtomicBitmap, AtomicLease, AtomicU64, AtomicU64Array, TryLock
 
 __all__ = ["Claim", "CorecRing", "RingStats"]
 
@@ -100,9 +102,28 @@ class RingStats:
     full_producer_polls: int = 0
     batch_publishes: int = 0
     atomic_ops: int = 0  # every atomic load/store/RMW on the hot paths
+    reclaims: int = 0  # expired-lease claims re-issued by a helper
+    reclaimed_items: int = 0  # slots covered by those reclaims
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
+
+
+@dataclass
+class _LeaseEntry:
+    """One in-flight claim's reclamation record (lease table row).
+
+    The ``word`` is the single CAS arbiter between the owner's
+    ``complete()`` and a helper's ``reclaim_expired()``; ``payloads`` is
+    the snapshot a helper re-serves, since the owner moved the originals
+    out of the ring cells at claim time.
+    """
+
+    word: AtomicLease
+    start: int
+    n: int
+    deadline: float
+    payloads: List[Any]
 
 
 class CorecRing:
@@ -113,14 +134,37 @@ class CorecRing:
 
     ``packed`` selects the word-packed fast path (default) or the per-item
     reference path (see module docstring).
+
+    ``lease_timeout`` (seconds on ``clock``, default ``time.monotonic``)
+    arms lease-based claim reclamation: every claim registers a
+    :class:`_LeaseEntry`, ``complete()`` retires it with a CAS, and
+    :meth:`reclaim_expired` lets any live worker CAS-reclaim a claim
+    whose owner died or stalled past the deadline — publishing the whole
+    span as done (done-marks are lost at batch granularity) and handing
+    the payload snapshot back for re-service.  Exactly-once degrades to
+    at-least-once for reclaimed spans only; with ``lease_timeout=None``
+    (default) behaviour is byte-identical to the lease-free ring.
     """
 
-    def __init__(self, size: int, packed: bool = True):
+    def __init__(
+        self,
+        size: int,
+        packed: bool = True,
+        lease_timeout: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         if size <= 0 or size & (size - 1):
             raise ValueError("ring size must be a power of two")
         self.size = size
         self.mask = size - 1
         self.packed = packed
+        self.lease_timeout = lease_timeout
+        self._clock = clock
+        # Lease table: claim-start ticket -> _LeaseEntry.  The dict itself
+        # is bookkeeping (guarded by a mutex never held across work); the
+        # owner/helper race is decided by each entry's AtomicLease CAS.
+        self._leases: dict = {}
+        self._lease_mtx = threading.Lock()
         # Payload cells. Only the exclusive owner of a ticket touches cell
         # ticket & mask, so plain list slots are safe.
         self._cells: List[Any] = [None] * size
@@ -296,6 +340,15 @@ class CorecRing:
             self._cells[idx] = None
         self.stats.claims += 1
         self.stats.claimed_items += n
+        if self.lease_timeout is not None:
+            with self._lease_mtx:
+                self._leases[start] = _LeaseEntry(
+                    AtomicLease(),
+                    start,
+                    n,
+                    self._clock() + self.lease_timeout,
+                    list(payloads),
+                )
         return Claim(start, start + n, payloads)
 
     def complete(self, claim: Claim) -> None:
@@ -304,10 +357,60 @@ class CorecRing:
         Slot->bit mapping is unambiguous without epoch tags because a slot
         cannot be re-claimed before its bit is cleared by a release (the
         producer has no credit for it until TAIL moves past it).
+
+        Under a lease, completion must first win the entry's CAS: a
+        slow-but-alive owner racing a helper that already reclaimed its
+        claim loses here and backs off — the helper owns the span's done
+        bits and its deliveries stand (the owner's copies surface as
+        duplicates in the pool's seqno dedup, never as ring corruption).
         """
+        if self.lease_timeout is not None:
+            with self._lease_mtx:
+                ent = self._leases.pop(claim.start, None)
+            # a missing entry means a helper reclaimed AND retired the
+            # span already — publishing again could stamp done bits onto
+            # slots the producer has since refilled
+            if ent is None or not ent.word.try_complete():
+                return
         self.stats.atomic_ops += self._done.set_range(
             claim.start & self.mask, claim.end - claim.start
         )
+
+    def reclaim_expired(self, now: Optional[float] = None) -> List[Claim]:
+        """Non-blocking helping: re-issue claims whose lease expired.
+
+        Any live worker may call this.  For each expired entry the helper
+        CASes HELD -> RECLAIMED (losing the race to a late ``complete()``
+        is a free non-event), publishes the whole span into READ_DONE so
+        the TAIL release can progress past the dead owner's hole, and
+        returns the payload snapshot as a fresh :class:`Claim` for
+        re-service.  Callers process the returned payloads but must NOT
+        ``complete()`` them again — the span is already marked.
+        """
+        if self.lease_timeout is None:
+            return []
+        t = self._clock() if now is None else now
+        with self._lease_mtx:
+            expired = [e for e in self._leases.values() if e.deadline <= t]
+        out: List[Claim] = []
+        for ent in expired:
+            if not ent.word.try_reclaim():
+                continue
+            self.stats.atomic_ops += 1  # the winning reclamation CAS
+            self.stats.atomic_ops += self._done.set_range(
+                ent.start & self.mask, ent.n
+            )
+            with self._lease_mtx:
+                self._leases.pop(ent.start, None)
+            self.stats.reclaims += 1
+            self.stats.reclaimed_items += ent.n
+            out.append(Claim(ent.start, ent.start + ent.n, list(ent.payloads)))
+        return out
+
+    def leases_outstanding(self) -> int:
+        """In-flight lease entries (diagnostic; 0 when leases disabled)."""
+        with self._lease_mtx:
+            return len(self._leases)
 
     def try_release(self) -> int:
         """Listing 2 lines 35-42: trylock, free the contiguous done-prefix.

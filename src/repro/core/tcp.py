@@ -245,6 +245,7 @@ def simulate_tcp(
     for f in fl.values():
         loop.schedule(f.t_start, "start", f.fid)
     loop.run(on_idle=rto_sweep)
+    plane.finalize()  # raises StrandedRunError on silent slot-stranding
 
     return [
         FlowResult(

@@ -71,12 +71,14 @@ import numpy as np
 from .. import compat
 from ..kernels import ops as kernel_ops
 from .jaxplane import (
+    FaultParams,
     LaneParams,
     _broadcast_lanes,
     _chunked_scan,
     _pad_lanes,
     _resolve_policy,
     _resolve_shards,
+    default_fault_params,
     default_lane_params,
     queue_heads,
     rows_arrived,
@@ -296,6 +298,11 @@ def _tcp_step(
     t_cand = jnp.maximum(st["freet"], arr_next)
     if policy.uses_lock:
         t_cand = jnp.maximum(t_cand, st["lockt"])
+    # fault plane: a worker whose next claim would land at/after its
+    # crash time is dead — crash-between-claims semantics (its queue
+    # strands; stealing peers adopt the backlog, static-steer flows RTO
+    # into the hole until the budget ends and report done=False)
+    t_cand = jnp.where(t_cand >= consts["crash_w"], inf, t_cand)
     w_sel = jnp.argmin(t_cand).astype(jnp.int32)
     t_claim = t_cand[w_sel]
 
@@ -367,7 +374,8 @@ def _tcp_step(
     g = jax.lax.dynamic_slice(st["qidx"], (q, st["qptr"][q]), (1, mb))[0]
     valid = jnp.arange(mb) < k
     gj = jnp.where(valid, g, t_budget)
-    sv = jnp.where(valid, svc_pad[gj], 0.0)
+    # straggler inflation (exact ×1.0 identity on fault-free lanes)
+    sv = jnp.where(valid, svc_pad[gj], 0.0) * consts["slow_w"][w_sel]
     comp = t1 + jnp.cumsum(sv)
     st["tack"] = st["tack"].at[gj].set(jnp.where(valid, comp + 2 * tcp.prop_delay, inf))
     t_end = t1 + jnp.sum(sv)
@@ -528,7 +536,7 @@ def _tcp_core(
     n_pad = jnp.concatenate([n_pkts.astype(jnp.int32), jnp.zeros(1, jnp.int32)])
     outs = []
     seg_states, seg_steps, seg_consts = [], [], []
-    for pol, (lp, tcp, seeds) in zip(pols, blocks):
+    for pol, (lp, tcp, fparams, seeds) in zip(pols, blocks):
         lanes = seeds.shape[0]
         # NIC-side steering is static per flow (RSS hash / shared queue 0)
         qid_flow = pol.select_queue(jnp.arange(f_cnt, dtype=jnp.int32), w_cnt)
@@ -551,11 +559,23 @@ def _tcp_core(
                 tx_budget=tx_budget,
             )
         )
-        seg_consts.append(
-            jax.vmap(functools.partial(_tcp_setup, tx_budget=tx_budget, n_steps=s_pad))(
-                tcp, seeds
-            )
-        )
+        consts = jax.vmap(
+            functools.partial(_tcp_setup, tx_budget=tx_budget, n_steps=s_pad)
+        )(tcp, seeds)
+        # per-worker fault axes [lanes, W]: crash horizon + service
+        # slowdown (crash_t=+inf / straggler=1.0 on fault-free lanes)
+        widx = jnp.arange(w_cnt, dtype=jnp.float32)
+        consts["crash_w"] = jnp.where(
+            widx[None, :] == fparams.crash_worker[:, None],
+            fparams.crash_t[:, None],
+            jnp.inf,
+        ).astype(jnp.float32)
+        consts["slow_w"] = jnp.where(
+            widx[None, :] == fparams.straggler_worker[:, None],
+            fparams.straggler[:, None],
+            1.0,
+        ).astype(jnp.float32)
+        seg_consts.append(consts)
         seg_states.append(
             _tcp_state0(
                 lanes,
@@ -573,7 +593,7 @@ def _tcp_core(
         return jnp.all(st["quiet"])
 
     if engine == "reference":
-        for (lp, tcp, _), st0, step, consts in zip(
+        for (lp, tcp, _, _), st0, step, consts in zip(
             blocks, seg_states, seg_steps, seg_consts
         ):
 
@@ -593,7 +613,7 @@ def _tcp_core(
         # compiles without the untaken policies' branches (a per-lane
         # flag dispatch was measured slower than static segmentation
         # here — the step is compute-bound at sweep lane counts)
-        for (lp, tcp, _), st0, step, consts in zip(
+        for (lp, tcp, _, _), st0, step, consts in zip(
             blocks, seg_states, seg_steps, seg_consts
         ):
 
@@ -764,15 +784,21 @@ def run_tcp_lanes_fused(
         lanes = seeds.shape[0]
         lp = tcp_lane_defaults(**(req.get("lane_params") or {}))
         tp = default_tcp_params(**(req.get("tcp_params") or {}))
+        # crash-between-claims + straggler only on this plane: claims
+        # here never crash mid-batch, so the ``lease`` knob is accepted
+        # for request-shape parity but has nothing to reclaim
+        fp = default_fault_params(**(req.get("fault_params") or {}))
         unknown = set(lp) - set(LaneParams._fields)
         unknown |= set(tp) - set(TcpParams._fields)
+        unknown |= set(fp) - set(FaultParams._fields)
         if unknown:
             raise ValueError(f"unknown sweep knobs: {sorted(unknown)}")
         params = LaneParams(*_broadcast_lanes(lp, LaneParams._fields, lanes))
         tcp_p = TcpParams(*_broadcast_lanes(tp, TcpParams._fields, lanes))
+        fparams = FaultParams(*_broadcast_lanes(fp, FaultParams._fields, lanes))
         pad = (-lanes) % n_shards
         pols.append(pol)
-        blocks.append(_pad_lanes((params, tcp_p, seeds), pad))
+        blocks.append(_pad_lanes((params, tcp_p, fparams, seeds), pad))
         orig_lanes.append(lanes)
 
     donate = jax.default_backend() != "cpu"
@@ -817,6 +843,7 @@ def run_tcp_lanes(
     t_start=None,
     lane_params: dict | None = None,
     tcp_params: dict | None = None,
+    fault_params: dict | None = None,
     n_workers: int = 4,
     max_batch: int = 64,
     tx_budget: int | None = None,
@@ -845,6 +872,7 @@ def run_tcp_lanes(
                 seeds=seeds,
                 lane_params=lane_params,
                 tcp_params=tcp_params,
+                fault_params=fault_params,
             )
         ],
         n_pkts=n_pkts,

@@ -20,7 +20,9 @@ import pytest
 from benchmarks.check_regression import check, collect_metrics, main
 
 
-def _write_results(tmp_path, jax_policies=None, tcp_policies=None, udp=None):
+def _write_results(
+    tmp_path, jax_policies=None, tcp_policies=None, udp=None, fault_policies=None
+):
     results = tmp_path / "quick"
     results.mkdir(exist_ok=True)
     sweep = {"policies": jax_policies or {}}
@@ -30,6 +32,9 @@ def _write_results(tmp_path, jax_policies=None, tcp_policies=None, udp=None):
     if udp is not None:
         ps = {"workloads": {"udp": udp, "mawi": {}}}
         (results / "policy_sweep.json").write_text(json.dumps(ps))
+    if fault_policies is not None:
+        fs = {"policies": fault_policies}
+        (results / "fault_sweep.json").write_text(json.dumps(fs))
     return results
 
 
@@ -221,6 +226,67 @@ def test_collect_metrics_flattens_all_three_sources(tmp_path):
     assert got["jax_sweep/corec"] == {"p50_median": 0.1, "p99_median": 0.2}
     assert got["jax_sweep/tcp/hybrid"] == {"fct_p50": 1.0, "fct_p99": 2.0}
     assert got["policy_sweep/udp/locked"] == {"p50_us": 0.3, "p99_us": 40.0}
+
+
+def test_collect_metrics_fault_sweep_rows_and_null_recovery(tmp_path):
+    # degraded-mode rows flatten like the other sources; a null
+    # recovery_median (all lanes wedged) must not leak a None metric
+    results = _write_results(
+        tmp_path,
+        fault_policies={
+            "corec": {
+                "degraded_p99": 8.0,
+                "duplicates_per_fault": 2.1,
+                "wedged_lanes": 0,
+                "recovery_median": None,
+            }
+        },
+    )
+    got = collect_metrics(results)
+    assert got["fault_sweep/corec"] == {
+        "degraded_p99": 8.0,
+        "duplicates_per_fault": 2.1,
+        "wedged_lanes": 0,
+    }
+
+
+def test_zero_wedged_baseline_is_an_exact_invariant_gate(tmp_path):
+    # wedged_lanes baseline 0: any wedge fails at ANY tolerance (a
+    # lease-capable policy wedging is breakage, not drift), while a
+    # clean run and in-tolerance degraded p99 pass
+    base = _baselines(
+        tmp_path,
+        {
+            "fault_sweep/corec": {
+                "degraded_p99": 8.0,
+                "duplicates_per_fault": 2.0,
+                "wedged_lanes": 0,
+            }
+        },
+    )
+    ok = _write_results(
+        tmp_path,
+        fault_policies={
+            "corec": {
+                "degraded_p99": 15.9,
+                "duplicates_per_fault": 1.0,
+                "wedged_lanes": 0,
+            }
+        },
+    )
+    assert check(ok, base, 2.0) == []
+    bad = _write_results(
+        tmp_path,
+        fault_policies={
+            "corec": {
+                "degraded_p99": 8.0,
+                "duplicates_per_fault": 2.0,
+                "wedged_lanes": 1,
+            }
+        },
+    )
+    fails = check(bad, base, 100.0)
+    assert len(fails) == 1 and "wedged_lanes regressed" in fails[0]
 
 
 @pytest.mark.parametrize("ok", [True, False])

@@ -1,0 +1,273 @@
+"""Fault plane on the vectorized jax engines, vs the DES plane.
+
+Covers the degraded-mode guarantees of the jax execution plane:
+
+* per-worker fault arrays thread through ``run_lanes`` /
+  ``run_tcp_lanes`` and unknown knobs raise by name,
+* lease reclamation: a worker crashing mid-claim strands its span for
+  exactly ``lease`` time, then a live worker re-claims the remainder —
+  every lease-capable policy drains (``undelivered == 0``) with
+  duplicates bounded by one batch per fault,
+* no lease (+inf) strands the span forever: the lane reports
+  ``undelivered > 0`` instead of hanging, and ``locked``
+  (``leases=False``) wedges even when a lease is requested,
+* the claim-compacted engine stays bit-identical to the reference
+  engine under faults (the fault-free identity is pinned separately by
+  tests/test_compaction.py),
+* distributional parity with the faulted DES plane on matched configs:
+  same crash, same lease, first-delivery latency on both sides,
+* the TCP lanes degrade the same way: stealing policies adopt a dead
+  worker's backlog, static steering strands its flows (done=False),
+  and a straggler inflates FCT.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import jaxplane as jp  # noqa: E402
+from repro.core import make_policy, tcpjax as tj  # noqa: E402
+from repro.core.des import DesItem, EventLoop, WorkerPlane  # noqa: E402
+from repro.core.faults import FaultSpec  # noqa: E402
+from repro.core.policy import get_spec, jax_policies  # noqa: E402
+
+N_WORKERS = 4
+JAX_POLS = jax_policies()
+LEASE_POLS = [p for p in JAX_POLS if get_spec(p).leases]
+
+#: matched-config crash scenario used across the module: worker 1 dies
+#: at t=5 with a finite lease, small lanes so claims straddle the crash
+CRASH = dict(crash_t=5.0, crash_worker=1.0, lease=3.0)
+
+
+def _lanes(name, seeds=3, n=300, fault_params=None, **kw):
+    kw.setdefault("lane_params", dict(batch=8, max_batch=16))
+    return jp.run_lanes(
+        name,
+        np.arange(seeds),
+        fault_params=fault_params,
+        n_packets=n,
+        n_workers=N_WORKERS,
+        max_batch=16,
+        **kw,
+    )
+
+
+def test_unknown_fault_knob_raises_by_name():
+    with pytest.raises(ValueError, match="crash_tim"):
+        _lanes("corec", fault_params=dict(crash_tim=5.0))
+
+
+@pytest.mark.parametrize("name", LEASE_POLS)
+def test_crash_with_lease_reclaims_and_drains(name):
+    res = _lanes(name, fault_params=dict(**CRASH))
+    undel = np.asarray(res.undelivered)
+    assert (undel == 0).all(), (name, undel)
+    assert (np.asarray(res.items) == 300).all()
+    # exactly-once claim accounting survives reclamation: the remainder
+    # of the stranded span is re-claimed, never double-claimed
+    assert (np.asarray(res.claimed_prefix) == 300).all()
+    assert (np.asarray(res.claimed_popcount) == 300).all()
+    # at least one lane lost a mid-flight claim and recovered it
+    assert (np.asarray(res.reclaimed) >= 1).any(), name
+    # at-least-once is bounded: one batch's delivered prefix per fault
+    assert (np.asarray(res.duplicates) <= 16).all(), name
+    assert np.isfinite(np.asarray(res.drain_t)).all()
+
+
+def test_no_lease_strands_the_span_and_reports_it():
+    # default lease=+inf: the mid-claim crash wedges the victim's queue
+    # positionally — the run still returns, with the loss quantified
+    res = _lanes("corec", fault_params=dict(crash_t=5.0, crash_worker=1.0))
+    undel = np.asarray(res.undelivered)
+    assert (undel > 0).all(), undel
+    assert (np.asarray(res.items) < 300).all()
+    assert (np.asarray(res.reclaimed) == 0).all()
+    # survivors' deliveries still have a finite recovery edge
+    assert np.isfinite(np.asarray(res.drain_t)).all()
+
+
+def test_locked_wedges_despite_requested_lease():
+    # locked has no lease capability (supports_leases=False): the dead
+    # lock holder wedges every peer; reported, not hung
+    res = _lanes("locked", fault_params=dict(**CRASH))
+    undel = np.asarray(res.undelivered)
+    assert (undel > 0).any(), undel
+    assert (np.asarray(res.reclaimed) == 0).all()
+    assert (np.asarray(res.duplicates) == 0).all()
+
+
+def test_straggler_inflates_tail_without_loss():
+    base = _lanes("corec")
+    slow = _lanes(
+        "corec", fault_params=dict(straggler=6.0, straggler_worker=0.0)
+    )
+    assert (np.asarray(slow.undelivered) == 0).all()
+    assert (np.asarray(slow.items) == 300).all()
+    assert float(np.mean(np.asarray(slow.p99))) > float(
+        np.mean(np.asarray(base.p99))
+    )
+
+
+@pytest.mark.parametrize("name", JAX_POLS)
+def test_faulted_compacted_matches_reference_engine(name):
+    fp = dict(straggler=3.0, straggler_worker=0.0, **CRASH)
+    com = _lanes(name, fault_params=fp, engine="compacted")
+    ref = _lanes(name, fault_params=fp, engine="reference")
+    for field in (
+        "items",
+        "batches",
+        "reclaimed",
+        "duplicates",
+        "undelivered",
+        "claimed_prefix",
+        "claimed_popcount",
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(com, field)),
+            np.asarray(getattr(ref, field)),
+            err_msg=f"{name}: {field}",
+        )
+    for field in ("p50", "p99", "drain_t"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(com, field)),
+            np.asarray(getattr(ref, field)),
+            rtol=1e-6,
+            err_msg=f"{name}: {field}",
+        )
+
+
+# ---------------------------------------------------------------------
+# Distributional parity vs the faulted DES plane on matched configs
+# ---------------------------------------------------------------------
+P50_RTOL = 0.15
+P99_RTOL = 0.35
+RATE = 30.0
+CRASH_T = 10.0
+LEASE = 2.0
+
+
+def _des_faulted_pcts(name, n, seeds, batch, overhead):
+    """Faulted DES percentiles, jax-matched steering and fault schedule.
+
+    Latency is FIRST delivery on both planes: a reclaimed batch's
+    re-served items keep their original completion time, so the guard
+    below drops the duplicate (later) deliveries.
+    """
+    p50s, p99s = [], []
+    for seed in seeds:
+        rng = np.random.default_rng(1000 + seed)
+        arr = np.cumsum(rng.exponential(1.0 / RATE, size=n))
+        flows = rng.integers(0, 256, size=n)
+        hints = jp.rss_hash32(flows, N_WORKERS).astype(int)
+        mean = 0.07 + 1e-5 * 64.0
+        sigma = 0.25
+        done = np.full(n, np.inf)
+
+        def svc(item, rng=rng, mean=mean, sigma=sigma):
+            mu = np.log(mean) - sigma**2 / 2
+            return float(rng.lognormal(mu, sigma))
+
+        def first(t, item, done=done):
+            done[item.payload] = min(done[item.payload], t)
+
+        loop = EventLoop()
+        plane = WorkerPlane(
+            loop,
+            make_policy(name, N_WORKERS, batch=batch),
+            N_WORKERS,
+            service_fn=svc,
+            on_complete=first,
+            rng=rng,
+            claim_overhead=overhead,
+            faults=[FaultSpec(worker=1, t=CRASH_T)],
+            lease=LEASE,
+        )
+        loop.on("arrive", plane.enqueue)
+        for i in range(n):
+            loop.schedule(
+                float(arr[i]),
+                "arrive",
+                DesItem(flow=int(flows[i]), payload=i, queue_hint=int(hints[i])),
+            )
+        loop.run()
+        plane.finalize()
+        soj = done - arr
+        assert np.isfinite(soj).all(), f"{name}: DES lost items under lease"
+        p50s.append(np.percentile(soj, 50))
+        p99s.append(np.percentile(soj, 99))
+    return float(np.mean(p50s)), float(np.mean(p99s))
+
+
+@pytest.mark.parametrize("name", ["corec", "hybrid"])
+def test_faulted_distributional_parity_with_des_plane(name):
+    n, batch, overhead = 2000, 8, 0.05
+    res = jp.run_lanes(
+        name,
+        np.arange(10),
+        lane_params=dict(
+            batch=batch,
+            max_batch=batch,
+            claim_overhead=overhead,
+            deschedule_prob=0.0,
+        ),
+        traffic_params=dict(rate=RATE, pkt_size=64.0),
+        fault_params=dict(crash_t=CRASH_T, crash_worker=1.0, lease=LEASE),
+        workload="udp",
+        n_packets=n,
+        n_workers=N_WORKERS,
+        max_batch=batch,
+    )
+    assert (np.asarray(res.undelivered) == 0).all()
+    j50 = float(np.mean(np.asarray(res.p50)))
+    j99 = float(np.mean(np.asarray(res.p99)))
+    d50, d99 = _des_faulted_pcts(name, n, range(3), batch, overhead)
+    assert j50 == pytest.approx(d50, rel=P50_RTOL), (name, j50, d50)
+    assert j99 == pytest.approx(d99, rel=P99_RTOL), (name, j99, d99)
+
+
+# ---------------------------------------------------------------------
+# TCP lanes: crash-between-claims masking + straggler service inflation
+# ---------------------------------------------------------------------
+def _tcp(name, fault_params=None, **kw):
+    kw.setdefault("n_pkts", (24, 24, 24, 24))
+    kw.setdefault("t_start", (0.0, 0.1, 0.2, 0.3))
+    return tj.run_tcp_lanes(
+        name,
+        np.arange(3),
+        fault_params=fault_params,
+        n_workers=N_WORKERS,
+        max_batch=8,
+        **kw,
+    )
+
+
+def test_tcp_stealing_policy_adopts_dead_workers_backlog():
+    res = _tcp("hybrid", fault_params=dict(crash_t=5.0, crash_worker=1.0))
+    assert np.asarray(res.done).all()
+    assert np.isfinite(np.asarray(res.fct)).all()
+
+
+def test_tcp_static_steer_strands_dead_workers_flows():
+    # with 4 flows the RSS hash steers flows 1 and 3 to queue 3 (and
+    # none to queue 1) — kill the worker that actually owns flows
+    res = _tcp("scaleout", fault_params=dict(crash_t=0.5, crash_worker=3.0))
+    done = np.asarray(res.done)
+    # the dead worker's flows RTO into the hole until the budget ends;
+    # the run reports them unfinished instead of hanging
+    assert not done.all()
+    assert done.any()
+
+
+def test_tcp_straggler_inflates_fct():
+    base = _tcp("corec")
+    slow = _tcp(
+        "corec", fault_params=dict(straggler=4.0, straggler_worker=0.0)
+    )
+    assert np.asarray(base.done).all() and np.asarray(slow.done).all()
+    b = np.asarray(base.fct).mean()
+    s = np.asarray(slow.fct).mean()
+    assert s > b, (s, b)
