@@ -31,7 +31,12 @@ degraded-mode rows from ``fault_sweep.json``
 tolerance, plus two count metrics whose 0-valued baselines make them
 exact invariants — ``wedged_lanes`` (a lease-capable policy wedging at
 all fails: ``got <= 0 * tolerance``) and ``duplicates_per_fault``
-(``locked`` never reclaims, so any duplicate it reports fails).
+(``locked`` never reclaims, so any duplicate it reports fails).  The
+open-loop serving rows from ``serving_sweep.json``
+(``serving_sweep/<policy>``) gate ``p99_median`` under the latency
+tolerance and ``slo_attainment`` one-sided as a floor (it lives in
+THROUGHPUT_METRICS: attainment *dropping* below baseline * floor
+fails, improving never does).
 
 Usage (CI):
     python -m benchmarks.check_regression \
@@ -50,7 +55,7 @@ from pathlib import Path
 HERE = Path(__file__).resolve().parent
 
 #: metrics where bigger is better: gated one-sided against a floor
-THROUGHPUT_METRICS = frozenset({"lane_points_per_s"})
+THROUGHPUT_METRICS = frozenset({"lane_points_per_s", "slo_attainment"})
 
 
 def _load(path: Path) -> dict:
@@ -97,6 +102,15 @@ def collect_metrics(results_dir: Path) -> dict:
                     "duplicates_per_fault",
                     "wedged_lanes",
                 )
+                if row.get(m) is not None
+            }
+    sv = results_dir / "serving_sweep.json"
+    if sv.exists():
+        sweep = _load(sv)
+        for pol, row in sweep.get("policies", {}).items():
+            out[f"serving_sweep/{pol}"] = {
+                m: row[m]
+                for m in ("slo_attainment", "p99_median")
                 if row.get(m) is not None
             }
     return out
@@ -172,7 +186,9 @@ def main(argv=None) -> int:
         "(lane_points_per_s fails below baseline * floor)",
     )
     args = ap.parse_args(argv)
-    failures = check(args.results, args.baselines, args.tolerance, args.throughput_floor)
+    failures = check(
+        args.results, args.baselines, args.tolerance, args.throughput_floor
+    )
     if failures:
         print(f"REGRESSION GUARD FAILED ({len(failures)}):", file=sys.stderr)
         for f in failures:

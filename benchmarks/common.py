@@ -1,13 +1,50 @@
-"""Shared benchmark helpers: timing, CSV emission, result storage."""
+"""Shared benchmark helpers: timing, CSV emission, result storage, and
+the sweep-scale CLI flags every fused jax benchmark shares."""
 
 from __future__ import annotations
 
 import json
 import time
 from pathlib import Path
-from typing import Callable
+from typing import Callable, Union
 
 RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def add_sweep_args(ap, *, quick: bool = False) -> None:
+    """Attach the shared fused-sweep flags to an ``argparse`` parser.
+
+    Every jax-plane benchmark (``jax_sweep`` / ``fault_sweep`` /
+    ``serving_sweep``) takes the same scale knobs; defining them here
+    keeps the flags and help text identical across entry points.
+    ``quick`` additionally registers ``--quick`` (shrunk sizes +
+    results/quick/ redirect) for benchmarks that support standalone
+    smoke runs.
+    """
+    ap.add_argument(
+        "--lanes-scale",
+        type=float,
+        default=1.0,
+        help="multiply the seed axis: lane counts scale linearly with "
+        "no extra compiles",
+    )
+    ap.add_argument(
+        "--shards",
+        default="1",
+        help="partition the lane axis over this many local devices "
+        "('auto' = all, incl. --xla_force_host_platform_device_count)",
+    )
+    if quick:
+        ap.add_argument(
+            "--quick",
+            action="store_true",
+            help="shrunk sizes, results under results/quick/",
+        )
+
+
+def parse_shards(value: Union[int, str]) -> Union[int, str]:
+    """Normalize a ``--shards`` value: 'auto' stays a string, else int."""
+    return value if value == "auto" else int(value)
 
 
 def use_quick_results_dir() -> Path:

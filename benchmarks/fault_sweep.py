@@ -2,11 +2,11 @@
 
 The robustness counterpart of ``jax_sweep.py``: every (crash-time,
 straggler-factor, seed) lane of every jax-capable policy runs in ONE
-fused jitted call on the claim-compacted engine
-(:func:`repro.core.jaxplane.run_lanes_fused`) with the fault plane
-armed — worker 1 crashes at ``crash_t`` (its in-flight batch strands
-and, after the claim ``lease`` expires, a live worker reclaims the
-remainder), worker 0 runs ``straggler`` x slower.  Each policy row
+fused jitted call on the claim-compacted engine (via
+:func:`repro.core.run_sweep`) with the fault plane armed — worker 1
+crashes at ``crash_t`` (its in-flight batch strands and, after the
+claim ``lease`` expires, a live worker reclaims the remainder), worker
+0 runs ``straggler`` x slower.  Each policy row
 reports the paper-style health metrics next to the recovery ones:
 
 * ``healthy_p99`` / ``degraded_p99`` — median per-lane p99 sojourn on
@@ -40,7 +40,7 @@ import math
 
 import numpy as np
 
-from .common import emit, save_json
+from .common import add_sweep_args, emit, parse_shards, save_json
 
 N_WORKERS = 4
 MAX_BATCH = 32
@@ -58,6 +58,8 @@ def run(
     n_seeds: int = N_SEEDS,
     lease: float = 3.0,
     workload: str = "udp",
+    lanes_scale: float = 1.0,
+    shards: int | str = 1,
 ):
     try:
         import jax  # noqa: F401
@@ -66,9 +68,10 @@ def run(
         emit("fault_sweep/SKIPPED", 0.0, notice)
         return {"skipped": notice}
 
-    from repro.core.jaxplane import run_lanes_fused
-    from repro.core.policy import fused_jax_requests, get_spec, jax_policies
+    from repro.core import SweepRequest, run_sweep
+    from repro.core.policy import get_spec, jax_policies
 
+    n_seeds = max(1, round(n_seeds * lanes_scale))
     pols = jax_policies()
     configs = [(ct, sf) for ct in CRASH_TS for sf in STRAGGLERS]
     n_cfg = len(configs)
@@ -84,16 +87,23 @@ def run(
         straggler_worker=float(STRAGGLER_WORKER),
         lease=float(lease),
     )
-    requests = fused_jax_requests(seeds, policies=pols, fault_params=fault_kw)
     timings: dict = {}
-    results = run_lanes_fused(
-        requests,
-        workload=workload,
-        n_packets=n_packets,
-        n_workers=N_WORKERS,
-        max_batch=MAX_BATCH,
+    sweep = run_sweep(
+        SweepRequest(
+            scenario="forwarder",
+            policies=pols,
+            seeds=seeds,
+            arrival={"udp": "poisson", "mawi": "bursty"}.get(workload, workload),
+            service="fwd",
+            fault_params=fault_kw,
+            n_packets=n_packets,
+            n_workers=N_WORKERS,
+            max_batch=MAX_BATCH,
+            shards=shards,
+        ),
         timings=timings,
     )
+    results = [sweep[p] for p in pols]
     lanes = seeds.shape[0]
     compile_s, run_s = timings["compile_s"], timings["run_s"]
     lane_points = lanes * len(pols) / run_s
@@ -198,12 +208,15 @@ def main(argv=None):
     ap.add_argument("--n-seeds", type=int, default=N_SEEDS)
     ap.add_argument("--lease", type=float, default=3.0)
     ap.add_argument("--workload", default="udp")
+    add_sweep_args(ap)
     args = ap.parse_args(argv)
     run(
         n_packets=args.n_packets,
         n_seeds=args.n_seeds,
         lease=args.lease,
         workload=args.workload,
+        lanes_scale=args.lanes_scale,
+        shards=parse_shards(args.shards),
     )
 
 

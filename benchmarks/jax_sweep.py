@@ -5,16 +5,16 @@ where ``policy_sweep.py`` evaluates one (policy, config, seed) point
 per Python event loop, this benchmark evaluates the whole parameter
 grid of EVERY jax-capable policy — claim batch x offered rate x
 deschedule probability x seeds, >= 1000 lanes per policy — in a SINGLE
-fused jitted call (:func:`repro.core.jaxplane.run_lanes_fused`), with
-latency percentiles and RFC-4737 reordering computed in-graph and the
-exactly-once invariant checked from the packed claim bitmaps
-(multi-ring done-prefix kernel).
+fused jitted call through the unified sweep API
+(:func:`repro.core.run_sweep`), with latency percentiles and RFC-4737
+reordering computed in-graph and the exactly-once invariant checked
+from the packed claim bitmaps (multi-ring done-prefix kernel).
 
 The TCP section does the same for the closed loop
-(:mod:`repro.core.tcpjax.run_tcp_lanes_fused`): claim batch x
-deschedule probability x sender link rate x seeds, >= 1000 TCP lanes
-per policy fused into one call, reporting flow-completion-time p50/p99
-and retransmit counts next to the forwarder latency percentiles.
+(``SweepRequest(scenario="tcp")``): claim batch x deschedule
+probability x sender link rate x seeds, >= 1000 TCP lanes per policy
+fused into one call, reporting flow-completion-time p50/p99 and
+retransmit counts next to the forwarder latency percentiles.
 
 Compile time is measured separately from steady-state execution
 through the AOT lower/compile path: every row reports ``compile_s``
@@ -39,10 +39,13 @@ import argparse
 
 import numpy as np
 
-from .common import emit, save_json
+from .common import add_sweep_args, emit, parse_shards, save_json
 
 N_WORKERS = 4
 MAX_BATCH = 64
+
+#: run() ``workload`` values -> SweepRequest arrival processes
+ARRIVALS = {"udp": "poisson", "mawi": "bursty", "diurnal": "diurnal"}
 
 #: the sweep grid: 6 x 4 x 3 = 72 configs; x 14 seeds = 1008 lanes/policy
 AXES = {
@@ -75,14 +78,10 @@ def run(
         emit("jax_sweep/SKIPPED", 0.0, notice)
         return {"skipped": notice}
 
-    from repro.core.jaxplane import (
-        LaneParams,
-        TrafficParams,
-        lane_grid,
-        run_lanes_fused,
-    )
-    from repro.core.policy import fused_jax_requests, jax_policies
-    from repro.core.tcpjax import TcpParams, run_tcp_lanes_fused
+    from repro.core import SweepRequest, run_sweep
+    from repro.core.jaxplane import LaneParams, TrafficParams, lane_grid
+    from repro.core.policy import jax_policies
+    from repro.core.tcpjax import TcpParams
 
     n_seeds = max(1, round(n_seeds * lanes_scale))
     pols = jax_policies()
@@ -93,19 +92,23 @@ def run(
     lane_kw = {k: v for k, v in lanes_arrays.items() if k in LaneParams._fields}
     traffic_kw = {k: v for k, v in lanes_arrays.items() if k in TrafficParams._fields}
 
-    requests = fused_jax_requests(
-        seeds, lane_params=lane_kw, policies=pols, traffic_params=traffic_kw
-    )
     timings: dict = {}
-    results = run_lanes_fused(
-        requests,
-        workload=workload,
-        n_packets=n_packets,
-        n_workers=N_WORKERS,
-        max_batch=MAX_BATCH,
-        shards=shards,
+    sweep = run_sweep(
+        SweepRequest(
+            scenario="forwarder",
+            policies=pols,
+            seeds=seeds,
+            arrival=ARRIVALS[workload],
+            lane_params=lane_kw,
+            traffic_params=traffic_kw,
+            n_packets=n_packets,
+            n_workers=N_WORKERS,
+            max_batch=MAX_BATCH,
+            shards=shards,
+        ),
         timings=timings,
     )
+    results = [sweep[p] for p in pols]
     lanes_total = lanes * len(pols)
     compile_s, run_s = timings["compile_s"], timings["run_s"]
     lane_points = lanes_total / run_s
@@ -188,19 +191,23 @@ def run(
     n_flows = 2
     flow_pkts = np.full(n_flows, max(8, tcp_pkts // n_flows), dtype=np.int32)
     flow_start = np.arange(n_flows, dtype=np.float32) * 37.0
-    tcp_requests = fused_jax_requests(
-        tcp_seeds, lane_params=tcp_lane_kw, policies=pols, tcp_params=tcp_tcp_kw
-    )
     tcp_timings: dict = {}
-    tcp_results = run_tcp_lanes_fused(
-        tcp_requests,
-        n_pkts=flow_pkts,
-        t_start=flow_start,
-        n_workers=N_WORKERS,
-        max_batch=MAX_BATCH,
-        shards=shards,
+    tcp_sweep = run_sweep(
+        SweepRequest(
+            scenario="tcp",
+            policies=pols,
+            seeds=tcp_seeds,
+            lane_params=tcp_lane_kw,
+            tcp_params=tcp_tcp_kw,
+            n_packets=flow_pkts,
+            t_start=flow_start,
+            n_workers=N_WORKERS,
+            max_batch=MAX_BATCH,
+            shards=shards,
+        ),
         timings=tcp_timings,
     )
+    tcp_results = [tcp_sweep[p] for p in pols]
     t_total = t_lanes * len(pols)
     t_compile, t_run = tcp_timings["compile_s"], tcp_timings["run_s"]
     t_points = t_total / t_run
@@ -282,21 +289,9 @@ def main(argv=None):
     ap.add_argument("--n-seeds", type=int, default=N_SEEDS)
     ap.add_argument("--workload", default="udp")
     ap.add_argument("--tcp-pkts", type=int, default=256)
-    ap.add_argument(
-        "--lanes-scale",
-        type=float,
-        default=1.0,
-        help="multiply the seed axis: lane counts scale linearly with "
-        "no extra compiles (2.0 -> 2016 lanes/policy)",
-    )
-    ap.add_argument(
-        "--shards",
-        default="1",
-        help="partition the lane axis over this many local devices "
-        "('auto' = all, incl. --xla_force_host_platform_device_count)",
-    )
+    add_sweep_args(ap)
     args = ap.parse_args(argv)
-    shards = args.shards if args.shards == "auto" else int(args.shards)
+    shards = parse_shards(args.shards)
     run(
         n_packets=args.n_packets,
         n_seeds=args.n_seeds,

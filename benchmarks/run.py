@@ -52,6 +52,7 @@ def main(argv=None) -> None:
         ("policy_sweep", {}, dict(n_packets=8_000, n_tcp_flows=48)),  # registry
         ("jax_sweep", {}, dict(n_packets=400, tcp_pkts=96)),  # vectorized jax plane
         ("fault_sweep", {}, dict(n_packets=400, n_seeds=3)),  # degraded mode
+        ("serving_sweep", {}, dict(capacity=200, n_seeds=2)),  # open-loop serving
         ("kernels_bench", {}, None),  # Pallas kernel analytics
         ("serving_bench", {}, None),  # framework-level COREC serving
         ("roofline", {}, None),  # dry-run aggregation (section Roofline)

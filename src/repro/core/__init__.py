@@ -14,9 +14,17 @@ Layout (see ROADMAP.md "Module map" for the full picture):
   queueing.py      M/G/N vs N x M/G/1 scenario layer (sec 3.2)
   forwarder.py     open-loop L3-forwarder scenario layer (sec 4.3.1)
   tcp.py           TCP-over-forwarder scenario layer (sec 4.3.2)
+  servingjax.py    open-loop million-user serving scenario (both planes)
+  sweep.py         SweepRequest / run_sweep — the one sweep entry point
   reorder.py       RFC 4737 reordering metrics (sec 4.3)
   traffic.py       UDP / MAWI-mix / flow traffic generators
   protocol_sim.py  stepped interleaving model for property tests
+
+Sweep API: build a :class:`SweepRequest` (scenario, policies, lane
+grid, arrival process, engine/shards) and call :func:`run_sweep`.  The
+per-scenario entry points ``sweep_forwarder_jax`` / ``sweep_policy_jax``
+/ ``sweep_tcp_jax`` / ``run_lanes_fused`` / ``fused_jax_requests`` are
+deprecated shims over the same engine.
 """
 
 from .atomics import AtomicU64, TryLock
@@ -41,6 +49,7 @@ from .policy import (
     make_policy,
     make_thread_queue,
     register_policy,
+    serving_defaults,
 )
 from .queueing import (
     simulate_policy,
@@ -52,6 +61,14 @@ from .queueing import (
 )
 from .reorder import ReorderReport, measure_reordering, per_flow_reordering
 from .ring import Claim, CorecRing, RingStats
+from .servingjax import (
+    ServingPolicy,
+    ServingResult,
+    ServingSimConfig,
+    simulate_serving_des,
+    sweep_serving_jax,
+)
+from .sweep import SweepRequest, SweepResult, run_sweep
 from .tcp import FlowResult, TcpSimConfig, simulate_tcp, sweep_tcp_jax
 from .traffic import MSS, FlowSpec, Packet, flow_packets, mawi_mix, udp_stream
 
@@ -62,7 +79,10 @@ __all__ = [
     "DesItem", "EventLoop", "PlaneStats", "WorkerPlane",
     "RxPolicy", "available_policies", "get_spec", "make_policy",
     "make_thread_queue", "register_policy", "jax_policies",
-    "make_jax_policy", "fused_jax_requests",
+    "make_jax_policy", "fused_jax_requests", "serving_defaults",
+    "SweepRequest", "SweepResult", "run_sweep",
+    "ServingPolicy", "ServingResult", "ServingSimConfig",
+    "simulate_serving_des", "sweep_serving_jax",
     "DispatchResult", "Item", "WorkerPool", "make_queue",
     "FaultSpec", "StrandedRunError", "WorkerCrash",
     "simulate_policy", "simulate_protocol", "simulate_scale_out",

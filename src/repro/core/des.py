@@ -109,6 +109,7 @@ class PlaneStats:
     batches: int = 0
     items: int = 0
     deschedules: int = 0
+    rejected: int = 0  # items shed by admission control (serving runs)
     idle_with_backlog: int = 0  # dispatch sweeps that left a free worker
     # while some queue was non-empty (0 for any work-conserving policy)
     per_worker_items: List[int] = field(default_factory=list)
@@ -198,6 +199,7 @@ class WorkerPlane:
         deschedule_mean: float = 0.0,
         faults: Optional[Sequence[FaultSpec]] = None,
         lease: Optional[float] = None,
+        on_reject: Optional[Callable[[float, DesItem], None]] = None,
     ):
         if getattr(policy, "n_workers", n_workers) != n_workers:
             raise ValueError(
@@ -208,6 +210,7 @@ class WorkerPlane:
         self.n_workers = n_workers
         self.service_fn = service_fn
         self.on_complete = on_complete
+        self.on_reject = on_reject
         self.rng = rng
         self.claim_overhead = claim_overhead
         self.deschedule_prob = deschedule_prob
@@ -350,6 +353,14 @@ class WorkerPlane:
         policy = self.policy
         stats = self.stats
         fault_t = self.fault_t
+        # Serving-scenario hooks, both optional on the policy object
+        # (see repro.core.servingjax.ServingPolicy): ``claim_gate``
+        # models an autoscaled pool — a gated worker may not claim yet —
+        # and ``shed_batch`` is dequeue-side admission control, run by
+        # the claiming worker right before it forms its batch (the jax
+        # plane's shed-at-claim, event for event).
+        gate_fn = getattr(policy, "claim_gate", None)
+        shed_fn = getattr(policy, "shed_batch", None)
         dead_queues = (
             [w for w in range(self.n_workers) if dead[w]]
             if self.stats.dead_workers
@@ -362,6 +373,8 @@ class WorkerPlane:
                 # crash-between-claims: due (or overdue) fault fires
                 # before this worker can take another batch
                 self._kill(w)
+                continue
+            if gate_fn is not None and not gate_fn(w, t):
                 continue
             # Non-blocking helping first: a live worker that observes an
             # expired lease re-claims the stranded span.  This bypasses
@@ -393,6 +406,11 @@ class WorkerPlane:
                 free[w] = False
                 self.loop.schedule(start, self._RETRY, w)
                 continue
+            if shed_fn is not None:
+                for item in shed_fn(w, start):
+                    stats.rejected += 1
+                    if self.on_reject is not None:
+                        self.on_reject(start, item)
             batch = policy.next_batch(w)
             if not batch and dead_queues and self._leases_enabled():
                 # Failover helping: adopt backlog stranded in a dead
@@ -403,7 +421,10 @@ class WorkerPlane:
             free[w] = False
             self._run_batch(w, start, batch)
         if policy.backlog() and any(
-            free[w] and not dead[w] and t < fault_t[w]
+            free[w]
+            and not dead[w]
+            and t < fault_t[w]
+            and (gate_fn is None or gate_fn(w, t))
             for w in range(self.n_workers)
         ):
             stats.idle_with_backlog += 1

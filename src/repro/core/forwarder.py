@@ -23,6 +23,7 @@ the paper's Fig 7 shape.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
@@ -112,17 +113,22 @@ def sweep_forwarder_jax(
     traffic_params: dict | None = None,
     **kw,
 ):
-    """Vectorized counterpart of :func:`simulate_forwarder` sweeps.
+    """Deprecated vectorized counterpart of :func:`simulate_forwarder`.
 
-    Evaluates one forwarder configuration per (lane-param, seed) lane —
-    all lanes in a single jitted scan on the jax plane
-    (:mod:`repro.core.jaxplane`) with the same per-size lognormal cost
-    model, returning per-lane p50/p99/mean sojourn and RFC-4737
-    reordering computed in-graph.  ``workload`` is ``'udp'`` (Fig 7
-    regime) or ``'mawi'`` (Table 4 regime); scalars in ``lane_params``
-    / ``traffic_params`` broadcast, arrays sweep.  Requires jax; import
-    is deferred so this module stays importable without it.
+    Use ``repro.core.SweepRequest(scenario="forwarder", policies=[policy],
+    ...)`` with :func:`repro.core.run_sweep` instead; this shim forwards
+    to the same fused engine (results are bit-identical, pinned by
+    ``tests/test_sweep_api.py``) and will be removed once external
+    callers have migrated.  ``workload`` is ``'udp'`` (Fig 7 regime) or
+    ``'mawi'`` (Table 4 regime); scalars in ``lane_params`` /
+    ``traffic_params`` broadcast, arrays sweep.
     """
+    warnings.warn(
+        "sweep_forwarder_jax is deprecated; build a repro.core.SweepRequest"
+        '(scenario="forwarder") and call repro.core.run_sweep instead',
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from . import jaxplane
 
     return jaxplane.run_lanes(

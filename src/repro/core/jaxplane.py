@@ -44,6 +44,26 @@ claim's completion window inside the step (the pre-compaction
 formulation): ``tests/test_compaction.py`` pins the compacted engine
 bit-identical to it for every registry policy.
 
+**Serving mode** (``serving=True``, used by :mod:`repro.core.
+servingjax`): the same scan becomes an open-loop serving sweep.  Each
+packet is one user request; :class:`ServingParams` adds per-lane
+admission control (``admit_limit`` — a claiming worker sheds up to
+``max_batch`` over-limit requests from the queue head before serving,
+the dequeue-side drop of a real driver), an autoscaled worker pool
+(worker ``w >= base_workers`` wakes only once its queue's unclaimed
+backlog reaches ``(w - base_workers + 1) * scale_backlog`` — expressed
+as a wake-time gate on the threshold-th unclaimed arrival so the
+event-driven formulation stays exact), and a generation ``horizon``
+(arrivals after it never happen: the open-loop reformulation of the
+fixed ``n_packets`` budget — ``offered`` counts the arrivals that do).
+Every serving knob is an exact IEEE identity at its ``+inf`` default
+(the :class:`FaultParams` convention), so serving-mode lanes with
+default knobs reproduce the classic engine's dynamics and the
+compacted/reference bit-identity pin covers the serving step too.
+SLO attainment (fraction of *offered* users whose sojourn meets
+``slo_target``) and delivered-only latency percentiles are computed
+in-graph.
+
 Model semantics (matching the DES plane's dynamics, not its RNG stream
 — parity is distributional, see ``tests/test_jaxplane.py``): packets
 are pre-drawn per lane exactly like the scenario layers pre-draw them;
@@ -60,6 +80,7 @@ from __future__ import annotations
 
 import functools
 import time
+import warnings
 from typing import NamedTuple, Tuple
 
 import jax
@@ -74,6 +95,7 @@ __all__ = [
     "LaneParams",
     "TrafficParams",
     "FaultParams",
+    "ServingParams",
     "LaneResult",
     "ClaimRecord",
     "JAX_POLICIES",
@@ -114,7 +136,10 @@ class TrafficParams(NamedTuple):
     base_service: jnp.ndarray  # per-packet CPU cost
     per_byte: jnp.ndarray  # per-byte cache-touch cost
     service_jitter: jnp.ndarray  # lognormal sigma of service times
-    mean_service: jnp.ndarray  # mean for the M/D/LN service kinds
+    mean_service: jnp.ndarray  # mean for the M/D/LN/HT service kinds
+    diurnal_amp: jnp.ndarray  # diurnal rate modulation depth in [0, 0.95]
+    diurnal_period: jnp.ndarray  # diurnal cycle length (sim time units)
+    session_alpha: jnp.ndarray  # Pareto tail index of the HT service kind
 
 
 def default_lane_params(**kw) -> dict:
@@ -139,6 +164,9 @@ def default_traffic_params(**kw) -> dict:
         per_byte=1e-5,
         service_jitter=0.25,
         mean_service=1.0,
+        diurnal_amp=0.6,
+        diurnal_period=50.0,
+        session_alpha=1.8,
     )
     d.update(kw)
     return d
@@ -176,6 +204,55 @@ def default_fault_params(**kw) -> dict:
     return d
 
 
+class ServingParams(NamedTuple):
+    """Per-lane serving-scenario knobs (open-loop SLO sweeps).
+
+    Like :class:`FaultParams`, every field is an *exact IEEE identity*
+    at its ``+inf`` default: admission never sheds
+    (``max(backlog - inf, 0) == 0``), no worker is autoscale-gated
+    (``w >= inf`` is false for every worker index), the generation
+    horizon masks nothing (``arr <= inf``), and the SLO comparison only
+    feeds the attainment metric — so default-knob serving lanes stay
+    bit-identical to the classic engine.
+
+    ``admit_limit``
+        backlog cap: a claiming worker first sheds up to ``max_batch``
+        requests over the cap from its queue head (dequeue-side drop;
+        must be >= 1 when finite).
+    ``base_workers`` / ``scale_backlog``
+        autoscaled pool: worker ``w >= base_workers`` joins only once
+        its wake queue's unclaimed backlog reaches
+        ``(w - base_workers + 1) * scale_backlog`` (clamped >= 1).
+        ``base_workers=+inf`` = the full static pool;
+        ``scale_backlog=+inf`` with finite ``base_workers`` = a fixed
+        pool of exactly ``base_workers`` workers.
+    ``horizon``
+        open-loop generation cutoff: arrivals after it never happen
+        (``offered`` counts the ones that do; the lane drains when
+        ``items + shed == offered``).
+    ``slo_target``
+        per-user sojourn target for the SLO-attainment metric.
+    """
+
+    admit_limit: jnp.ndarray  # fp32 backlog cap (+inf = admit everything)
+    base_workers: jnp.ndarray  # fp32 always-on worker count (+inf = all)
+    scale_backlog: jnp.ndarray  # fp32 backlog per extra worker (+inf = off)
+    horizon: jnp.ndarray  # fp32 arrival-generation cutoff (+inf = open)
+    slo_target: jnp.ndarray  # fp32 sojourn target (+inf = any delivery)
+
+
+def default_serving_params(**kw) -> dict:
+    d = dict(
+        admit_limit=jnp.inf,
+        base_workers=jnp.inf,
+        scale_backlog=jnp.inf,
+        horizon=jnp.inf,
+        slo_target=jnp.inf,
+    )
+    d.update(kw)
+    return d
+
+
 class LaneResult(NamedTuple):
     """Per-lane outputs of :func:`run_lanes` (each field is [lanes])."""
 
@@ -196,6 +273,10 @@ class LaneResult(NamedTuple):
     duplicates: jnp.ndarray  # crashed-claim prefix re-served at-least-once
     undelivered: jnp.ndarray  # items never delivered (wedged lanes only)
     drain_t: jnp.ndarray  # last *finite* completion time (recovery edge)
+    # -- serving-mode outputs (offered == n, shed == 0 off serving mode)
+    offered: jnp.ndarray  # arrivals inside the generation horizon
+    shed: jnp.ndarray  # requests dropped by admission control
+    slo_attained: jnp.ndarray  # fraction of offered meeting slo_target
 
 
 # ----------------------------------------------------------------------
@@ -385,9 +466,29 @@ def _gen_traffic(
         zipf = 1.0 / np.arange(1, n_flows + 1) ** 1.1
         zipf = jnp.asarray(zipf / zipf.sum())
         flows = jax.random.choice(kf, n_flows, (n,), p=zipf)
+    elif workload == "diurnal":
+        # Nonhomogeneous Poisson, lambda(t) = rate * (1 + amp sin(wt)):
+        # time-rescaling — draw a unit-rate process, invert the
+        # cumulative intensity Lambda(t) = rate*(t + amp/w*(1 - cos wt))
+        # by vectorized Newton (lambda >= rate*(1 - amp) > 0 bounds the
+        # derivative away from 0, so a dozen damped steps converge).
+        s = jnp.cumsum(jax.random.exponential(kg, (n,)))
+        amp = jnp.clip(tp.diurnal_amp, 0.0, 0.95)
+        w = 2.0 * jnp.pi / tp.diurnal_period
+        lam_min = tp.rate * (1.0 - amp)
+        t = s / tp.rate
+        for _ in range(12):
+            big = tp.rate * (t + amp / w * (1.0 - jnp.cos(w * t)))
+            lam = tp.rate * (1.0 + amp * jnp.sin(w * t))
+            t = jnp.maximum(t - (big - s) / jnp.maximum(lam, lam_min), 0.0)
+        gaps = None
+        arr = jax.lax.cummax(t)  # Newton residue must not break sortedness
+        sizes = jnp.full((n,), tp.pkt_size, dtype=jnp.float32)
+        flows = jax.random.randint(kf, (n,), 0, n_flows)
     else:
         raise ValueError(f"unknown workload {workload!r}")
-    arr = jnp.cumsum(gaps)
+    if gaps is not None:
+        arr = jnp.cumsum(gaps)
     if service == "fwd":  # the forwarder's per-size lognormal cost model
         mean = tp.base_service + tp.per_byte * sizes
         sj = tp.service_jitter
@@ -400,6 +501,13 @@ def _gen_traffic(
         sigma = 0.8
         mu = jnp.log(tp.mean_service) - sigma**2 / 2
         svc = jnp.exp(jax.random.normal(kv, (n,)) * sigma + mu)
+    elif service == "HT":
+        # Heavy-tailed session sizes: Pareto with tail index alpha > 1,
+        # scaled so the (truncated at u >= 1e-4, i.e. ~p99.99) mean is
+        # mean_service — inverse-CDF u^(-1/alpha) on a clipped uniform.
+        alpha = tp.session_alpha
+        u = jnp.maximum(jax.random.uniform(kv, (n,)), 1e-4)
+        svc = tp.mean_service * (alpha - 1.0) / alpha * u ** (-1.0 / alpha)
     else:
         raise ValueError(f"unknown service kind {service!r}")
     return arr.astype(jnp.float32), svc.astype(jnp.float32), flows
@@ -446,18 +554,22 @@ class _LaneState(NamedTuple):
     reclaimed: jnp.ndarray  # int32 items re-opened by a lease
     dups: jnp.ndarray  # int32 crashed-prefix items re-served (at-least-once)
     halted: jnp.ndarray  # bool no claimable work remains (drained OR wedged)
+    shed: jnp.ndarray  # int32 requests dropped by admission (serving mode)
 
 
 class ClaimRecord(NamedTuple):
     """One batch claim: queue, start rank, size, post-overhead time.
 
     Emitted per scan step by the compacted engine; masked steps carry
-    ``k == 0`` and the dump queue ``W``.  Everything per-packet —
-    completion times, the packed claim bitmap — reconstructs from these
-    after the scan.  ``k`` is the *delivered* size: a claim truncated by
-    its worker's crash records only the pre-crash prefix, so the
-    reconstruction never assigns completion times to packets the dead
-    worker stranded.
+    ``k == shed == 0`` and the dump queue ``W``.  Everything per-packet
+    — completion times, the packed claim bitmap — reconstructs from
+    these after the scan.  ``k`` is the *delivered* size: a claim
+    truncated by its worker's crash records only the pre-crash prefix,
+    so the reconstruction never assigns completion times to packets the
+    dead worker stranded.  ``shed`` (serving mode, else 0) is the
+    admission-dropped span [ptr, ptr + shed): claimed — a real driver's
+    drop still sets the descriptor-done bit — but never served, so
+    service starts at rank ``ptr + shed``.
     """
 
     q: jnp.ndarray  # int32 claimed queue (W == dump)
@@ -465,6 +577,7 @@ class ClaimRecord(NamedTuple):
     k: jnp.ndarray  # int32 delivered claim size (0 == masked step)
     t1: jnp.ndarray  # fp32 claim time + overhead (+ stall)
     slow: jnp.ndarray  # fp32 straggler service multiplier (1.0 = none)
+    shed: jnp.ndarray  # int32 admission-dropped span before the claim
 
 
 def _init_state(lanes: int, n_workers: int) -> _LaneState:
@@ -481,10 +594,23 @@ def _init_state(lanes: int, n_workers: int) -> _LaneState:
         reclaimed=z,
         dups=z,
         halted=jnp.zeros((lanes,), bool),
+        shed=z,
     )
 
 
-def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, flt, st, u, stall):
+def _claim_step(
+    pol: JaxPolicy,
+    mb: int,
+    serving: bool,
+    params,
+    sparams,
+    q_arr,
+    cumsvc,
+    flt,
+    st,
+    u,
+    stall,
+):
     """One batch claim on one lane; returns the new state + its record.
 
     ``q_arr`` [W, n+1] sorted arrival rows (+inf padded), ``cumsvc``
@@ -499,6 +625,10 @@ def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, flt, st, u, stal
     (+inf / 1.0): ``where`` masks stay false and service spans multiply
     by 1.0, so fault-free lanes remain bit-identical to the pre-fault
     engine (pinned by tests/test_compaction.py).
+
+    ``serving`` (static) arms the :class:`ServingParams` knobs in
+    ``sparams`` — the autoscale wake gate and shed-at-claim admission —
+    both exact identities at the +inf defaults, on the same convention.
     """
     w_count, n = cumsvc.shape
     crash_w, slow_w, lease = flt
@@ -525,6 +655,29 @@ def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, flt, st, u, stal
     t_cand = jnp.maximum(st.free_t, arr_next)
     if pol.uses_lock:
         t_cand = jnp.maximum(t_cand, st.lock_t)
+    if serving:
+        # Autoscale wake gate: worker w >= base_workers may not claim
+        # before the ((w - base + 1) * scale_backlog)-th unclaimed
+        # arrival of its wake queue exists — "add a worker per
+        # scale_backlog of standing backlog", stated as a wake time so
+        # the gate dissolves exactly as the claim pointer advances.
+        # base_workers = +inf makes ``scaled`` all-false and the gate
+        # a max with -inf: the identity.
+        widx_f = jnp.arange(w_count, dtype=jnp.float32)
+        scaled = widx_f >= sparams.base_workers
+        thr_raw = (widx_f - sparams.base_workers + 1.0) * jnp.maximum(
+            sparams.scale_backlog, 1.0
+        )
+        thr_i = jnp.where(scaled, jnp.clip(thr_raw, 1.0, 2.0**30), 1.0).astype(
+            jnp.int32
+        )
+        if pol.shared:
+            qsel = jnp.zeros((w_count,), jnp.int32)
+        else:
+            qsel = jnp.arange(w_count, dtype=jnp.int32)
+        gate_idx = jnp.clip(st.qptr[qsel] + thr_i - 1, 0, n)
+        t_scale = jnp.where(scaled, q_arr[qsel, gate_idx], -jnp.inf)
+        t_cand = jnp.maximum(t_cand, t_scale)
     # dead-worker mask: a worker whose next feasible claim would start
     # at/after its crash time never claims again (crash-between-claims)
     t_cand = jnp.where(t_cand >= crash_w, jnp.inf, t_cand)
@@ -553,14 +706,30 @@ def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, flt, st, u, stal
         has = can & (backlog_q > 0) & (t0 >= gate_t)
         q = jnp.where(has[w], w, jnp.argmax(has)).astype(jnp.int32)
         backlog = backlog_q[q]
+    if serving:
+        # Shed-at-claim admission: before serving, the claiming worker
+        # drops up to max_batch over-limit requests from the queue head
+        # (a real driver's dequeue-side drop still sets the done bit,
+        # so shed items stay in the claim bitmap).  admit_limit = +inf
+        # makes excess exactly 0.0: the identity.
+        excess = jnp.maximum(
+            backlog.astype(jnp.float32) - sparams.admit_limit, 0.0
+        )
+        shed = jnp.where(
+            active, jnp.minimum(excess, float(mb)).astype(jnp.int32), 0
+        )
+        backlog = backlog - shed
+    else:
+        shed = jnp.zeros((), jnp.int32)
     k = pol.next_batch(backlog, params, w_count)
-    k = jnp.clip(k, 1, jnp.minimum(backlog, mb))
+    k = jnp.clip(k, jnp.minimum(backlog, 1), jnp.minimum(backlog, mb))
     k = jnp.where(active, k, 0).astype(jnp.int32)
     desch = active & (u < params.deschedule_prob)
     stall_t = jnp.where(desch, stall * params.deschedule_mean, 0.0)
     t1 = t0 + params.claim_overhead + stall_t
     ptr = st.qptr[q]
-    base = jnp.where(ptr > 0, cumsvc[q, jnp.maximum(ptr - 1, 0)], 0.0)
+    ptr_s = ptr + shed  # first *served* rank (== ptr off serving mode)
+    base = jnp.where(ptr_s > 0, cumsvc[q, jnp.maximum(ptr_s - 1, 0)], 0.0)
     # Straggler inflation + crash truncation: worker w serves at slow x
     # real time; it delivers the longest prefix of its claim that
     # finishes strictly before its crash time c.
@@ -569,10 +738,10 @@ def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, flt, st, u, stal
     svc_budget = base + (c - t1) / slow
     k_eff = jnp.searchsorted(cumsvc[q], svc_budget, side="right").astype(
         jnp.int32
-    ) - ptr
+    ) - ptr_s
     k_eff = jnp.where(active, jnp.clip(k_eff, 0, k), 0).astype(jnp.int32)
     crashed = active & (k_eff < k)
-    last = cumsvc[q, jnp.clip(ptr + k_eff - 1, 0, n - 1)]
+    last = cumsvc[q, jnp.clip(ptr_s + k_eff - 1, 0, n - 1)]
     t_end = t1 + jnp.where(k_eff > 0, (last - base) * slow, 0.0)
     free_t_w = jnp.where(crashed, jnp.inf, jnp.where(active, t_end, st.free_t[w]))
     free_t = st.free_t.at[w].set(free_t_w)
@@ -592,11 +761,12 @@ def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, flt, st, u, stal
         crashed, st.resume_t.at[q].set(t0 + lease_v), st.resume_t
     )
     resume_until = jnp.where(
-        crashed, st.resume_until.at[q].set(ptr + k), st.resume_until
+        crashed, st.resume_until.at[q].set(ptr_s + k), st.resume_until
     )
     will_reclaim = crashed & jnp.isfinite(lease_v)
+    has = (k_eff + shed) > 0 if serving else k_eff > 0
     st2 = _LaneState(
-        qptr=st.qptr.at[q].add(k_eff),
+        qptr=st.qptr.at[q].add(shed + k_eff),
         free_t=free_t,
         lock_t=lock_t,
         batches=st.batches + active.astype(jnp.int32),
@@ -607,13 +777,15 @@ def _claim_step(pol: JaxPolicy, mb: int, params, q_arr, cumsvc, flt, st, u, stal
         reclaimed=st.reclaimed + jnp.where(will_reclaim, k - k_eff, 0),
         dups=st.dups + jnp.where(will_reclaim, k_eff, 0),
         halted=st.halted | ~active,
+        shed=st.shed + shed,
     )
     rec = ClaimRecord(
-        q=jnp.where(k_eff > 0, q, w_count),
-        ptr=jnp.where(k_eff > 0, ptr, 0),
+        q=jnp.where(has, q, w_count),
+        ptr=jnp.where(has, ptr, 0),
         k=k_eff,
         t1=t1,
         slow=slow,
+        shed=jnp.broadcast_to(shed, k_eff.shape).astype(jnp.int32),
     )
     return st2, rec
 
@@ -632,21 +804,23 @@ def _scatter_claims(rec: ClaimRecord, qid, rank, cumsvc):
     s_total = rec.k.shape[0]
     s_idx = jnp.arange(s_total, dtype=jnp.int32)
     # masked steps (and skipped-chunk zero records) go to the dump row
-    qe = jnp.where(rec.k > 0, rec.q, w_count)
-    pe = jnp.where(rec.k > 0, rec.ptr, 0)
+    live = (rec.k + rec.shed) > 0
+    qe = jnp.where(live, rec.q, w_count)
+    pe = jnp.where(live, rec.ptr, 0)
     start = jnp.full((w_count + 1, n + 1), -1, jnp.int32)
-    start = start.at[qe, pe].set(jnp.where(rec.k > 0, s_idx, -1))
+    start = start.at[qe, pe].set(jnp.where(live, s_idx, -1))
     cid = jax.lax.cummax(start[:w_count], axis=1)  # forward fill
     cid_p = cid[qid, rank]  # [n] claim id covering each packet (-1: none)
     safe = jnp.maximum(cid_p, 0)
     t1_p = rec.t1[safe]
-    ptr_p = rec.ptr[safe]
+    ptr_p = rec.ptr[safe] + rec.shed[safe]  # first *served* rank
     k_p = rec.k[safe]
     slow_p = rec.slow[safe]
     base_p = jnp.where(ptr_p > 0, cumsvc[qid, jnp.maximum(ptr_p - 1, 0)], 0.0)
     in_claim = (cid_p >= 0) & (rank < ptr_p + k_p)
+    served = in_claim & (rank >= ptr_p)  # shed span: claimed, not served
     done = jnp.where(
-        in_claim, t1_p + (cumsvc[qid, rank] - base_p) * slow_p, jnp.inf
+        served, t1_p + (cumsvc[qid, rank] - base_p) * slow_p, jnp.inf
     )
     return done, in_claim
 
@@ -659,15 +833,23 @@ def _lane_setup(
     n_flows: int,
     n_workers: int,
     n_draws: int,
+    serving: bool,
     params: LaneParams,
     traffic: TrafficParams,
     fparams: FaultParams,
+    sparams: ServingParams,
     seed,
 ):
     """Pre-draw one lane's traffic and build its per-queue views."""
     key = jax.random.PRNGKey(seed)
     kt, kd = jax.random.split(key)
     arr, svc, flows = _gen_traffic(kt, traffic, workload, service, n, n_flows)
+    if serving:
+        # Generation horizon: arrivals after it never happen.  They keep
+        # their rank slots as +inf pad (arrivals are monotone, so the
+        # masked set is a per-queue rank suffix and rows stay sorted);
+        # ``offered`` is the lane's true open-loop load.
+        arr = jnp.where(arr <= sparams.horizon, arr, jnp.inf)
     qid = pol.select_queue(flows, n_workers)  # [n] in [0, W)
     # rank of each packet within its queue (arrival order is global order)
     rank = jnp.zeros(n, dtype=jnp.int32)
@@ -688,7 +870,7 @@ def _lane_setup(
     widx = jnp.arange(n_workers, dtype=jnp.float32)
     crash_w = jnp.where(widx == fparams.crash_worker, fparams.crash_t, jnp.inf)
     slow_w = jnp.where(widx == fparams.straggler_worker, fparams.straggler, 1.0)
-    return dict(
+    su = dict(
         arr=arr,
         qid=qid,
         rank=rank,
@@ -700,15 +882,20 @@ def _lane_setup(
         slow_w=slow_w.astype(jnp.float32),
         lease=jnp.float32(fparams.lease),
     )
+    if serving:
+        su["offered"] = jnp.sum(jnp.isfinite(arr)).astype(jnp.int32)
+    return su
 
 
-def _reference_lane(pol: JaxPolicy, mb: int, params, su):
+def _reference_lane(pol: JaxPolicy, mb: int, serving: bool, params, sparams, su):
     """The pre-compaction per-claim scan: windows written inside the step.
 
     Shares :func:`_claim_step` with the compacted engine and applies
     each record's completion window to a (queue, rank) grid immediately
     — the formulation ``tests/test_compaction.py`` pins the compacted
-    reconstruction against, bit for bit.
+    reconstruction against, bit for bit.  In serving mode a separate
+    claimed grid is maintained (shed spans are claimed but never get a
+    finite completion, so ``isfinite(done)`` no longer implies claimed).
     """
     q_arr, cumsvc = su["q_arr"], su["cumsvc"]
     qid, rank = su["qid"], su["rank"]
@@ -719,23 +906,44 @@ def _reference_lane(pol: JaxPolicy, mb: int, params, su):
     )
     cs_pad = jnp.concatenate([cs_pad, jnp.zeros((1, n + mb), jnp.float32)])
     done_qr0 = jnp.full((w_count + 1, n + mb), jnp.inf, dtype=jnp.float32)
+    clm_qr0 = jnp.zeros((w_count + 1, n + mb), dtype=bool)
     lane_st0 = jax.tree_util.tree_map(lambda x: x[0], _init_state(1, w_count))
 
     def step(carry, xs):
-        st, done_qr = carry
+        st, done_qr, clm_qr = carry
         u, stall = xs
-        st2, rec = _claim_step(pol, mb, params, q_arr, cumsvc, flt, st, u, stall)
-        row = jax.lax.dynamic_slice(done_qr, (rec.q, rec.ptr), (1, mb))[0]
-        cs = jax.lax.dynamic_slice(cs_pad, (rec.q, rec.ptr), (1, mb))[0]
-        base = jnp.where(rec.ptr > 0, cs_pad[rec.q, jnp.maximum(rec.ptr - 1, 0)], 0.0)
+        st2, rec = _claim_step(
+            pol, mb, serving, params, sparams, q_arr, cumsvc, flt, st, u, stall
+        )
+        ptr_s = rec.ptr + rec.shed  # first *served* rank
+        row = jax.lax.dynamic_slice(done_qr, (rec.q, ptr_s), (1, mb))[0]
+        cs = jax.lax.dynamic_slice(cs_pad, (rec.q, ptr_s), (1, mb))[0]
+        base = jnp.where(ptr_s > 0, cs_pad[rec.q, jnp.maximum(ptr_s - 1, 0)], 0.0)
         comp = rec.t1 + (cs - base) * rec.slow
         neww = jnp.where(jnp.arange(mb) < rec.k, comp, row)
-        done_qr = jax.lax.dynamic_update_slice(done_qr, neww[None], (rec.q, rec.ptr))
-        return (st2, done_qr), None
+        done_qr = jax.lax.dynamic_update_slice(done_qr, neww[None], (rec.q, ptr_s))
+        if serving:
+            # shed window [ptr, ptr+shed) and served window [ptr_s,
+            # ptr_s+k) — both <= mb wide, together the full claim
+            idx = jnp.arange(mb)
+            crow = jax.lax.dynamic_slice(clm_qr, (rec.q, rec.ptr), (1, mb))[0]
+            crow = crow | (idx < rec.shed)
+            clm_qr = jax.lax.dynamic_update_slice(
+                clm_qr, crow[None], (rec.q, rec.ptr)
+            )
+            srow = jax.lax.dynamic_slice(clm_qr, (rec.q, ptr_s), (1, mb))[0]
+            srow = srow | (idx < rec.k)
+            clm_qr = jax.lax.dynamic_update_slice(
+                clm_qr, srow[None], (rec.q, ptr_s)
+            )
+        return (st2, done_qr, clm_qr), None
 
-    (st, done_qr), _ = jax.lax.scan(step, (lane_st0, done_qr0), (su["u"], su["stalls"]))
+    (st, done_qr, clm_qr), _ = jax.lax.scan(
+        step, (lane_st0, done_qr0, clm_qr0), (su["u"], su["stalls"])
+    )
     done = done_qr[qid, rank]
-    return st, done, jnp.isfinite(done)
+    claimed = clm_qr[qid, rank] if serving else jnp.isfinite(done)
+    return st, done, claimed
 
 
 # ----------------------------------------------------------------------
@@ -779,6 +987,22 @@ def _chunked_scan(body, carry0, xs, done_fn, chunk: int):
 # ----------------------------------------------------------------------
 # The fused core: every policy segment in one scan, one jitted call
 # ----------------------------------------------------------------------
+def _masked_percentile(svals, n_del, qv: float):
+    """np.percentile (linear interpolation) over the first ``n_del``
+    entries of each pre-sorted row (+inf tail = undelivered pad)."""
+    nd = jnp.maximum(n_del, 1)
+    pos = qv / 100.0 * (nd - 1).astype(jnp.float32)
+    lo = jnp.floor(pos).astype(jnp.int32)
+    frac = pos - lo.astype(jnp.float32)
+    vlo = jnp.take_along_axis(svals, lo[:, None], axis=-1)[:, 0]
+    vhi = jnp.take_along_axis(
+        svals, jnp.minimum(lo + 1, nd - 1)[:, None], axis=-1
+    )[:, 0]
+    # frac == 0 exact ranks skip the lerp (vhi may be the +inf pad on
+    # empty lanes; 0 * inf would poison the result with NaN)
+    return jnp.where(frac > 0, vlo + frac * (vhi - vlo), vlo)
+
+
 def _sweep_core(
     blocks,
     pols,
@@ -791,25 +1015,36 @@ def _sweep_core(
     s_pad: int,
     chunk: int,
     engine: str,
+    serving: bool,
     return_times: bool,
 ):
     """Simulate every lane of every policy segment; returns per-segment
     dicts of lane-axis arrays (safe to wrap in ``shard_map``)."""
     n, mb = n_packets, max_batch
     setups, states = [], []
-    for pol, (params, traffic, fparams, seeds) in zip(pols, blocks):
+    for pol, (params, traffic, fparams, sparams, seeds) in zip(pols, blocks):
         setup = jax.vmap(
             functools.partial(
-                _lane_setup, pol, workload, service, n, n_flows, n_workers, s_pad
+                _lane_setup,
+                pol,
+                workload,
+                service,
+                n,
+                n_flows,
+                n_workers,
+                s_pad,
+                serving,
             )
-        )(params, traffic, fparams, seeds)
+        )(params, traffic, fparams, sparams, seeds)
         setups.append(setup)
         states.append(_init_state(seeds.shape[0], n_workers))
 
     if engine == "reference":
         finals = []
-        for pol, (params, _, _, _), su in zip(pols, blocks, setups):
-            ref = jax.vmap(functools.partial(_reference_lane, pol, mb))(params, su)
+        for pol, (params, _, _, sparams, _), su in zip(pols, blocks, setups):
+            ref = jax.vmap(functools.partial(_reference_lane, pol, mb, serving))(
+                params, sparams, su
+            )
             finals.append(ref)
     elif engine == "compacted":
         # one specialized chunked scan PER policy segment, all inside
@@ -820,20 +1055,26 @@ def _sweep_core(
         # segmentation here — the step is compute-bound, not
         # dispatch-bound, at sweep lane counts)
         finals = []
-        for pol, (params, _, _, _), su, st0 in zip(pols, blocks, setups, states):
-            step = functools.partial(_claim_step, pol, mb)
+        for pol, (params, _, _, sparams, _), su, st0 in zip(
+            pols, blocks, setups, states
+        ):
+            step = functools.partial(_claim_step, pol, mb, serving)
 
-            def body(carry, x, step=step, params=params, su=su):
+            def body(carry, x, step=step, params=params, sparams=sparams, su=su):
                 u, stall = x
                 flt = (su["crash_w"], su["slow_w"], su["lease"])
                 return jax.vmap(step)(
-                    params, su["q_arr"], su["cumsvc"], flt, carry, u, stall
+                    params, sparams, su["q_arr"], su["cumsvc"], flt, carry, u, stall
                 )
 
-            def done_fn(st):
+            def done_fn(st, su=su):
                 # a lane is finished when it drained OR wedged (no
                 # claimable work remains: dead lock holder, unleased
-                # stranded span) — wedged lanes must not burn the budget
+                # stranded span) — wedged lanes must not burn the budget.
+                # Serving lanes drain at their own offered load (shed
+                # requests count: they consumed a claim slot).
+                if serving:
+                    return jnp.all(st.halted | (st.items + st.shed >= su["offered"]))
                 return jnp.all(st.halted | (st.items >= n))
 
             st, rec = _chunked_scan(
@@ -848,26 +1089,60 @@ def _sweep_core(
         raise ValueError(f"unknown engine {engine!r}")
 
     outs = []
-    for su, (st, done, claimed) in zip(setups, finals):
+    for (_, _, _, sparams, _), su, (st, done, claimed) in zip(
+        blocks, setups, finals
+    ):
         words = kernel_ops.pack_bits_u32(claimed)
-        sojourn = done - su["arr"]
         ratio, max_dist = jax.vmap(reorder_metrics)(done)
-        pct = jnp.percentile(sojourn, jnp.asarray([50.0, 99.0]), axis=-1)
-        # Undelivered items (wedged lanes) carry done=+inf; the recovery
-        # edge is the last *finite* completion, and the busy span uses it
-        # so faulted lanes still report a finite throughput denominator.
-        drain_t = jnp.max(
-            jnp.where(jnp.isfinite(done), done, -jnp.inf), axis=-1
-        )
-        span = drain_t - jnp.min(su["arr"], axis=-1)
+        if serving:
+            # Open-loop metrics: only delivered requests have latencies
+            # (shed and stranded carry done=+inf, horizon-masked slots
+            # carry arr=done=+inf), so every aggregate masks on
+            # delivery and percentiles interpolate over the delivered
+            # prefix of the sorted row — matching np.percentile on the
+            # delivered subset exactly (pinned by tests).
+            delivered = jnp.isfinite(done)
+            sojourn = jnp.where(delivered, done - su["arr"], jnp.inf)
+            n_del = jnp.sum(delivered, axis=-1).astype(jnp.int32)
+            svals = jnp.sort(sojourn, axis=-1)
+            p50 = _masked_percentile(svals, n_del, 50.0)
+            p99 = _masked_percentile(svals, n_del, 99.0)
+            mean = jnp.sum(
+                jnp.where(delivered, sojourn, 0.0), axis=-1
+            ) / jnp.maximum(n_del, 1)
+            offered = su["offered"].astype(jnp.int32)
+            ok = delivered & (sojourn <= sparams.slo_target[:, None])
+            slo_att = jnp.sum(ok, axis=-1) / jnp.maximum(offered, 1)
+            drain_t = jnp.max(jnp.where(delivered, done, -jnp.inf), axis=-1)
+            t_first = jnp.min(su["arr"], axis=-1)
+            span = jnp.maximum(drain_t - t_first, 1e-9)
+            throughput = st.items / span
+            undelivered = (offered - st.items - st.shed).astype(jnp.int32)
+        else:
+            sojourn = done - su["arr"]
+            pct = jnp.percentile(sojourn, jnp.asarray([50.0, 99.0]), axis=-1)
+            p50, p99 = pct[0], pct[1]
+            mean = jnp.mean(sojourn, axis=-1)
+            offered = jnp.full(st.items.shape, n, dtype=jnp.int32)
+            # closed loop: every request is offered and none shed, so
+            # attainment degenerates to the delivered fraction
+            slo_att = st.items.astype(jnp.float32) / n
+            # Undelivered items (wedged lanes) carry done=+inf; the
+            # recovery edge is the last *finite* completion, and the
+            # busy span uses it so faulted lanes still report a finite
+            # throughput denominator.
+            drain_t = jnp.max(jnp.where(jnp.isfinite(done), done, -jnp.inf), axis=-1)
+            span = drain_t - jnp.min(su["arr"], axis=-1)
+            throughput = n / span
+            undelivered = (n - st.items).astype(jnp.int32)
         outs.append(
             dict(
-                p50=pct[0],
-                p99=pct[1],
-                mean=jnp.mean(sojourn, axis=-1),
+                p50=p50,
+                p99=p99,
+                mean=mean,
                 reorder_pct=100.0 * ratio,
                 max_distance=max_dist,
-                throughput=n / span,
+                throughput=throughput,
                 batches=st.batches,
                 items=st.items,
                 deschedules=st.deschs,
@@ -877,8 +1152,11 @@ def _sweep_core(
                 words=words,
                 reclaimed=st.reclaimed,
                 duplicates=st.dups,
-                undelivered=(n - st.items).astype(jnp.int32),
+                undelivered=undelivered,
                 drain_t=drain_t,
+                offered=offered,
+                shed=st.shed,
+                slo_attained=slo_att.astype(jnp.float32),
                 sojourn=sojourn if return_times else sojourn[:, :0],
             )
         )
@@ -899,6 +1177,7 @@ def _run_fused_impl(
     chunk: int,
     n_shards: int,
     engine: str,
+    serving: bool,
     prefix_impl: str,
     prefix_interpret: bool,
     return_times: bool,
@@ -915,6 +1194,7 @@ def _run_fused_impl(
         s_pad=s_pad,
         chunk=chunk,
         engine=engine,
+        serving=serving,
         return_times=return_times,
     )
     if n_shards > 1:
@@ -954,6 +1234,9 @@ def _run_fused_impl(
                 duplicates=o["duplicates"],
                 undelivered=o["undelivered"],
                 drain_t=o["drain_t"],
+                offered=o["offered"],
+                shed=o["shed"],
+                slo_attained=o["slo_attained"],
             )
         )
         at += lanes
@@ -972,6 +1255,7 @@ _FUSED_STATICS = (
     "chunk",
     "n_shards",
     "engine",
+    "serving",
     "prefix_impl",
     "prefix_interpret",
     "return_times",
@@ -1018,7 +1302,7 @@ def _resolve_shards(shards) -> int:
     return max(1, int(shards))
 
 
-def run_lanes_fused(
+def _fused_lanes(
     requests,
     *,
     workload: str = "udp",
@@ -1028,6 +1312,7 @@ def run_lanes_fused(
     max_batch: int = 64,
     n_flows: int = 256,
     engine: str = "compacted",
+    serving: bool = False,
     claim_budget: int | None = None,
     chunk: int = 64,
     shards: int | str = 1,
@@ -1043,7 +1328,10 @@ def run_lanes_fused(
     one statically-bounded lane segment per request, all advanced by
     the same claim-compacted scan (policies resolve through the
     registry, so runtime-registered plugins fuse too).  Returns one
-    :class:`LaneResult` per request, in order.
+    :class:`LaneResult` per request, in order.  The supported public
+    surface is :func:`repro.core.run_sweep` (a ``SweepRequest`` maps
+    onto these request dicts); :func:`run_lanes` remains the
+    single-segment convenience wrapper.
 
     ``claim_budget`` bounds claim events per lane (rounded UP to the
     next multiple of ``chunk`` — the effective scan length); the
@@ -1057,10 +1345,18 @@ def run_lanes_fused(
     is dropped from the results.  ``timings``, when a dict is passed,
     receives ``compile_s`` / ``run_s`` measured through the AOT
     lower/compile path.
+
+    ``serving`` (or any request carrying ``serving_params``) switches
+    the open-loop serving scenario on: ``n_packets`` becomes the lane's
+    generation *capacity* rather than its load — the per-lane
+    :class:`ServingParams` horizon decides how many of those drawn
+    arrivals are offered — and results report ``offered`` / ``shed`` /
+    ``slo_attained`` with delivery-masked latency aggregates.
     """
     requests = list(requests)
     if not requests:
         raise ValueError("run_lanes_fused: empty request list")
+    serving = serving or any(req.get("serving_params") for req in requests)
     n_shards = _resolve_shards(shards)
     budget = n_packets if claim_budget is None else int(claim_budget)
     budget = max(1, min(budget, n_packets))
@@ -1075,17 +1371,20 @@ def run_lanes_fused(
         lp = default_lane_params(**(req.get("lane_params") or {}))
         tp = default_traffic_params(**(req.get("traffic_params") or {}))
         fp = default_fault_params(**(req.get("fault_params") or {}))
+        sp = default_serving_params(**(req.get("serving_params") or {}))
         unknown = set(lp) - set(LaneParams._fields)
         unknown |= set(tp) - set(TrafficParams._fields)
         unknown |= set(fp) - set(FaultParams._fields)
+        unknown |= set(sp) - set(ServingParams._fields)
         if unknown:
             raise ValueError(f"unknown sweep knobs: {sorted(unknown)}")
         params = LaneParams(*_broadcast_lanes(lp, LaneParams._fields, lanes))
         traffic = TrafficParams(*_broadcast_lanes(tp, TrafficParams._fields, lanes))
         fparams = FaultParams(*_broadcast_lanes(fp, FaultParams._fields, lanes))
+        sparams = ServingParams(*_broadcast_lanes(sp, ServingParams._fields, lanes))
         pad = (-lanes) % n_shards
         pols.append(pol)
-        blocks.append(_pad_lanes((params, traffic, fparams, seeds), pad))
+        blocks.append(_pad_lanes((params, traffic, fparams, sparams, seeds), pad))
         orig_lanes.append(lanes)
 
     donate = jax.default_backend() != "cpu"
@@ -1102,6 +1401,7 @@ def run_lanes_fused(
         chunk=chunk,
         n_shards=n_shards,
         engine=engine,
+        serving=serving,
         prefix_impl=prefix_impl,
         prefix_interpret=prefix_interpret,
         return_times=return_times,
@@ -1124,12 +1424,29 @@ def run_lanes_fused(
     ]
 
 
+def run_lanes_fused(requests, **kw):
+    """Deprecated alias of the fused engine entry point.
+
+    Use :func:`repro.core.run_sweep` with a ``SweepRequest`` instead —
+    this shim forwards verbatim (same results, bit for bit) and will be
+    removed once downstream callers migrate.
+    """
+    warnings.warn(
+        "run_lanes_fused is deprecated; build a repro.core.SweepRequest "
+        "and call repro.core.run_sweep instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _fused_lanes(requests, **kw)
+
+
 def run_lanes(
     policy: str,
     seeds,
     lane_params: dict | None = None,
     traffic_params: dict | None = None,
     fault_params: dict | None = None,
+    serving_params: dict | None = None,
     workload: str = "udp",
     service: str = "fwd",
     n_packets: int = 2000,
@@ -1153,7 +1470,7 @@ def run_lanes(
     wrapper over :func:`run_lanes_fused` — see there for the
     ``engine`` / ``claim_budget`` / ``chunk`` / ``shards`` knobs.
     """
-    return run_lanes_fused(
+    return _fused_lanes(
         [
             dict(
                 policy=policy,
@@ -1161,6 +1478,7 @@ def run_lanes(
                 lane_params=lane_params,
                 traffic_params=traffic_params,
                 fault_params=fault_params,
+                serving_params=serving_params,
             )
         ],
         workload=workload,

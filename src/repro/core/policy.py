@@ -50,9 +50,10 @@ Built-in policies and their paper anchors:
 
 from __future__ import annotations
 
+import warnings
 from collections import deque
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional
 
 from .baseline import (
     AdaptiveBatchSharedQueue,
@@ -79,6 +80,7 @@ __all__ = [
     "make_policy",
     "make_thread_queue",
     "make_jax_policy",
+    "serving_defaults",
     "fused_jax_requests",
 ]
 
@@ -305,6 +307,15 @@ class PolicySpec:
     #: lease (see RxPolicy.supports_leases) — False only for blocking
     #: disciplines, whose faulted runs wedge instead of recovering.
     leases: bool = True
+    #: Baseline admission/autoscale knobs for the open-loop serving
+    #: scenario (:mod:`repro.core.servingjax`): keys are
+    #: :class:`repro.core.jaxplane.ServingParams` fields.  ``admit_limit``
+    #: caps the backlog of the queue a claiming worker drains, so
+    #: per-worker-queue disciplines carry ~1/N of the shared-queue cap
+    #: for a comparable total admission budget.  Serving sweeps merge
+    #: caller overrides on top (``repro.core.run_sweep``); an empty
+    #: mapping means "no per-policy preset".
+    serving_defaults: Mapping[str, float] = field(default_factory=dict)
 
 
 _REGISTRY: Dict[str, PolicySpec] = {}
@@ -361,12 +372,17 @@ def jax_policies() -> List[str]:
     return sorted(n for n, s in _REGISTRY.items() if s.jax_factory is not None)
 
 
-def fused_jax_requests(seeds, lane_params=None, policies=None, **knob_dicts):
+def serving_defaults(name: str) -> dict:
+    """The policy's baseline serving knobs (a fresh, mergeable dict)."""
+    return dict(get_spec(name).serving_defaults)
+
+
+def _fused_requests(seeds, lane_params=None, policies=None, **knob_dicts):
     """Registry-wide request list for the fused jax-plane sweeps.
 
     Builds one request dict per jax-capable policy (or per name in
-    ``policies``) for :func:`repro.core.jaxplane.run_lanes_fused` /
-    :func:`repro.core.tcpjax.run_tcp_lanes_fused`, applying the
+    ``policies``) for the fused lane engines
+    (:func:`repro.core.run_sweep` resolves through this), applying the
     sweep convention that ``adaptive-batch``'s swept knob is the
     adaptive clamp: when ``lane_params`` sweeps ``batch`` and no
     explicit ``max_batch`` is given, the batch axis is mirrored into
@@ -387,6 +403,23 @@ def fused_jax_requests(seeds, lane_params=None, policies=None, **knob_dicts):
     return requests
 
 
+def fused_jax_requests(seeds, lane_params=None, policies=None, **knob_dicts):
+    """Deprecated alias of the registry-wide request-list builder.
+
+    Use :func:`repro.core.run_sweep` with a ``SweepRequest`` instead —
+    this shim forwards verbatim (same request dicts, same results).
+    """
+    warnings.warn(
+        "fused_jax_requests is deprecated; build a repro.core.SweepRequest "
+        "and call repro.core.run_sweep instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _fused_requests(
+        seeds, lane_params=lane_params, policies=policies, **knob_dicts
+    )
+
+
 def _jax_factory(name: str) -> Callable[[], Any]:
     # Lazy import: the registry must resolve DES/threaded policies on
     # hosts without jax; only touching the jax plane requires it.
@@ -405,6 +438,11 @@ register_policy(
         thread_factory=lambda n, size, **kw: CorecSharedQueue(size, **kw),
         doc="one shared non-blocking queue, batch claims (the paper)",
         jax_factory=_jax_factory("corec"),
+        serving_defaults={
+            "admit_limit": 96.0,
+            "base_workers": 2.0,
+            "scale_backlog": 48.0,
+        },
     )
 )
 register_policy(
@@ -414,6 +452,13 @@ register_policy(
         thread_factory=lambda n, size, **kw: ScaleOutDriver(n, size, **kw),
         doc="RSS: N per-worker queues, per-flow hash pinning (DPDK default)",
         jax_factory=_jax_factory("scaleout"),
+        # per-worker queues: the admission cap applies per queue, so it
+        # carries ~1/N of the shared-queue budget (N=4 reference pool)
+        serving_defaults={
+            "admit_limit": 24.0,
+            "base_workers": 2.0,
+            "scale_backlog": 12.0,
+        },
     )
 )
 register_policy(
@@ -424,6 +469,11 @@ register_policy(
         doc="one shared queue behind a mutex (Metronome-class baseline)",
         jax_factory=_jax_factory("locked"),
         leases=False,
+        serving_defaults={
+            "admit_limit": 96.0,
+            "base_workers": 2.0,
+            "scale_backlog": 48.0,
+        },
     )
 )
 register_policy(
@@ -433,6 +483,11 @@ register_policy(
         thread_factory=lambda n, size, **kw: HybridStealDriver(n, size, **kw),
         doc="RSS steering + work stealing from the longest backlog",
         jax_factory=_jax_factory("hybrid"),
+        serving_defaults={
+            "admit_limit": 24.0,
+            "base_workers": 2.0,
+            "scale_backlog": 12.0,
+        },
     )
 )
 register_policy(
@@ -442,5 +497,10 @@ register_policy(
         thread_factory=lambda n, size, **kw: AdaptiveBatchSharedQueue(size, n, **kw),
         doc="shared queue, claim size scales with backlog in [min,max]",
         jax_factory=_jax_factory("adaptive-batch"),
+        serving_defaults={
+            "admit_limit": 96.0,
+            "base_workers": 2.0,
+            "scale_backlog": 48.0,
+        },
     )
 )

@@ -26,6 +26,7 @@ physically exhibit (calibrated against measured costs).
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -234,16 +235,22 @@ def sweep_policy_jax(
     lane_params: dict | None = None,
     **kw,
 ):
-    """Vectorized counterpart of :func:`simulate_policy`.
+    """Deprecated vectorized counterpart of :func:`simulate_policy`.
 
-    One M/G/system configuration per (lane-param, seed) lane, all lanes
-    in a single jitted scan on the jax plane — the sweep-scale view of
-    the section 3.2 discipline comparison.  ``service`` is 'M'/'D'/'LN'
-    as in :func:`_service_samples`; ``rate``/``batch``/
-    ``claim_overhead`` may be scalars or per-lane arrays.  Requires
-    jax; the import is deferred so this module stays importable
-    without it.
+    Use ``repro.core.SweepRequest(scenario="queueing", policies=[policy],
+    ...)`` with :func:`repro.core.run_sweep` instead; this shim forwards
+    to the same fused engine (results are bit-identical, pinned by
+    ``tests/test_sweep_api.py``) and will be removed once external
+    callers have migrated.  ``service`` is 'M'/'D'/'LN' as in
+    :func:`_service_samples`; ``rate``/``batch``/``claim_overhead`` may
+    be scalars or per-lane arrays.
     """
+    warnings.warn(
+        "sweep_policy_jax is deprecated; build a repro.core.SweepRequest"
+        '(scenario="queueing") and call repro.core.run_sweep instead',
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from . import jaxplane
 
     lp = dict(lane_params or {})

@@ -1,0 +1,337 @@
+"""Open-loop million-user serving scenario, on both planes.
+
+The north star asks whether the paper's receive-side claim (one shared
+non-blocking queue => work conservation => tail-latency wins) survives
+at *serving* scale: open-loop arrivals (Poisson, bursty MAWI-style, or
+diurnal nonhomogeneous-Poisson), heavy-tailed per-user session sizes,
+admission control, and an autoscaled worker pool — with SLO attainment
+(fraction of offered users whose sojourn meets a latency target) as the
+headline metric instead of drain-time percentiles.  Flow-Director-style
+static steering (``scaleout``) is expected to shed and strand more
+under bursts than the work-conserving shared queue; this module makes
+that measurable.
+
+Two implementations share one model:
+
+* :func:`simulate_serving_des` — the DES plane.  A
+  :class:`ServingPolicy` wrapper adds the two serving decisions to any
+  registered :class:`~repro.core.policy.RxPolicy` through the worker
+  plane's optional hooks: ``claim_gate`` (autoscale — worker ``w >=
+  base_workers`` may claim only once its wake queue's backlog reaches
+  ``(w - base_workers + 1) * scale_backlog``) and ``shed_batch``
+  (admission — the claiming worker first drops the over-``admit_limit``
+  tail of its queue head, up to one batch per claim).
+* :func:`sweep_serving_jax` — the vectorized jax plane.  The same knobs
+  run in-graph as :class:`~repro.core.jaxplane.ServingParams` on the
+  claim-compacted engine: thousands of (policy-knob, seed) lanes, each
+  with O(10^3) simulated users, per fused jit call.  The generation
+  ``horizon`` reformulates the engine's fixed packet budget as
+  open-loop capacity: ``capacity`` arrivals are drawn, the horizon
+  masks the suffix that "never happens", and ``offered`` counts the
+  rest.
+
+Parity between the two is distributional (same bands as the classic
+forwarder parity: medians over seeds within 15% at p50 / 35% at p99,
+plus SLO attainment itself — see ``tests/test_servingjax.py``).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .des import DesItem, EventLoop, PlaneStats, WorkerPlane
+from .policy import make_policy
+from .traffic import diurnal_times, heavy_tail_service
+
+__all__ = [
+    "ARRIVAL_WORKLOADS",
+    "ServingSimConfig",
+    "ServingPolicy",
+    "ServingResult",
+    "simulate_serving_des",
+    "sweep_serving_jax",
+]
+
+#: arrival-process name -> jax-plane workload implementing it
+ARRIVAL_WORKLOADS = {"poisson": "udp", "bursty": "mawi", "diurnal": "diurnal"}
+
+
+@dataclass
+class ServingSimConfig:
+    """One DES serving run (the per-lane config of the jax sweep)."""
+
+    policy: str = "corec"
+    n_workers: int = 4
+    batch: int = 32
+    arrival: str = "poisson"  # poisson | bursty | diurnal
+    rate: float = 4.0  # mean arrivals per unit time
+    burstiness: float = 0.9  # lognormal sigma (bursty arrivals)
+    diurnal_amp: float = 0.6
+    diurnal_period: float = 50.0
+    mean_service: float = 1.0  # mean session size (service time)
+    session_alpha: float = 1.8  # Pareto tail index of session sizes
+    capacity: int = 2000  # arrivals drawn (jax plane's n_packets)
+    horizon: float = math.inf  # generation cutoff (offered = arrivals <= it)
+    admit_limit: float = math.inf  # backlog cap per drained queue
+    base_workers: float = math.inf  # always-on worker count
+    scale_backlog: float = math.inf  # backlog per extra autoscaled worker
+    slo_target: float = math.inf  # sojourn target for SLO attainment
+    claim_overhead: float = 0.05
+    deschedule_prob: float = 0.0
+    deschedule_mean: float = 30.0
+    n_flows: int = 256
+    seed: int = 0
+    policy_kwargs: dict = field(default_factory=dict)
+    #: per-flow steering override (flow id -> queue): parity tests feed
+    #: the jax plane's 32-bit hash so both planes steer identically.
+    queue_hints: Optional[Dict[int, int]] = None
+
+
+class ServingPolicy:
+    """Admission + autoscale decorator over any registered RxPolicy.
+
+    Delegates every queue operation to the wrapped policy and adds the
+    two optional hooks the DES worker plane probes for — so any
+    discipline in the registry serves open-loop traffic without
+    modification, exactly as the jax plane arms
+    :class:`~repro.core.jaxplane.ServingParams` on any
+    :class:`~repro.core.jaxplane.JaxPolicy`.  Both knobs are inert at
+    their ``+inf`` defaults (the gate admits every worker, the shed
+    drops nothing), mirroring the jax plane's exact-identity convention.
+    """
+
+    def __init__(
+        self,
+        inner,
+        admit_limit: float = math.inf,
+        base_workers: float = math.inf,
+        scale_backlog: float = math.inf,
+    ):
+        self._inner = inner
+        self.admit_limit = admit_limit
+        self.base_workers = base_workers
+        self.scale_backlog = scale_backlog
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    # -- the two serving decisions -------------------------------------
+    def _wake_queue(self, worker: int):
+        """The queue whose backlog wakes/feeds this worker."""
+        queues = self._inner.queues
+        return queues[0] if len(queues) == 1 else queues[worker]
+
+    def claim_gate(self, worker: int, t: float) -> bool:
+        """Autoscale: may this worker claim at all yet?
+
+        Worker ``w >= base_workers`` joins the pool only once its wake
+        queue's unclaimed backlog reaches ``(w - base_workers + 1) *
+        scale_backlog`` — the DES statement of the jax plane's wake-time
+        gate (the threshold-th unclaimed arrival must exist).
+        """
+        if worker < self.base_workers:
+            return True
+        thr = (worker - self.base_workers + 1.0) * max(self.scale_backlog, 1.0)
+        if math.isinf(thr):
+            return False
+        return len(self._wake_queue(worker)) >= thr
+
+    def _drain_queue(self, worker: int):
+        """The queue ``next_batch(worker)`` would pop — mirrored here so
+        admission sheds from the same head the claim serves."""
+        inner = self._inner
+        queues = inner.queues
+        if len(queues) == 1:
+            return queues[0]
+        own = queues[worker]
+        if own or not hasattr(inner, "steals"):  # scaleout: always own
+            return own
+        victim = max(range(inner.n_workers), key=lambda i: len(queues[i]))
+        return queues[victim]
+
+    def shed_batch(self, worker: int, t: float) -> List[DesItem]:
+        """Admission: drop the over-limit tail before forming the batch.
+
+        The claiming worker pops up to one batch of requests beyond
+        ``admit_limit`` from its drain queue's head (dequeue-side drop —
+        a real driver still writes the descriptor-done bit for dropped
+        frames).  Returns the dropped items for accounting.
+        """
+        q = self._drain_queue(worker)
+        excess = len(q) - self.admit_limit
+        if excess <= 0:
+            return []
+        cap = getattr(self._inner, "max_batch", None) or self._inner.batch
+        drop = int(min(excess, cap))
+        return [q.popleft() for _ in range(drop)]
+
+
+@dataclass
+class ServingResult:
+    """One DES serving run's outputs (the jax LaneResult's counterpart)."""
+
+    policy: str
+    offered: int  # arrivals inside the generation horizon
+    delivered: int  # requests served to completion
+    shed: int  # requests dropped by admission control
+    undelivered: int  # offered - delivered - shed (stranded/gated)
+    slo_attained: float  # delivered-within-target / offered
+    p50: float  # delivered-only sojourn percentiles
+    p99: float
+    mean_sojourn: float
+    sojourns: np.ndarray  # delivered sojourns, arrival order
+    stats: PlaneStats
+
+
+def _gen_arrivals(cfg: ServingSimConfig, rng) -> tuple:
+    """Draw ``capacity`` open-loop arrivals + flows (pre-horizon-mask)."""
+    n = cfg.capacity
+    if cfg.arrival == "poisson":
+        t = np.cumsum(rng.exponential(1.0 / cfg.rate, size=n))
+        flows = rng.integers(0, cfg.n_flows, size=n)
+    elif cfg.arrival == "bursty":
+        sigma = cfg.burstiness
+        mu = np.log(1.0 / cfg.rate) - sigma**2 / 2
+        t = np.cumsum(rng.lognormal(mu, sigma, size=n))
+        zipf = 1.0 / np.arange(1, cfg.n_flows + 1) ** 1.1
+        flows = rng.choice(cfg.n_flows, size=n, p=zipf / zipf.sum())
+    elif cfg.arrival == "diurnal":
+        t = diurnal_times(
+            n, cfg.rate, cfg.diurnal_amp, cfg.diurnal_period, rng=rng
+        )
+        flows = rng.integers(0, cfg.n_flows, size=n)
+    else:
+        raise ValueError(f"unknown arrival process {cfg.arrival!r}")
+    return t, flows
+
+
+def simulate_serving_des(cfg: ServingSimConfig) -> ServingResult:
+    """One open-loop serving run on the unified DES worker plane.
+
+    Matches the jax plane's model point for point: ``capacity`` arrivals
+    are drawn, the generation ``horizon`` masks the suffix, heavy-tailed
+    session sizes are pre-drawn per request, and the wrapped policy
+    sheds/gates at claim time.  An autoscale-gated tail that never wakes
+    (static steering under a fading diurnal load) strands as
+    ``undelivered`` — reported, not raised.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    t_all, flows_all = _gen_arrivals(cfg, rng)
+    svc_all = heavy_tail_service(
+        cfg.capacity, cfg.mean_service, cfg.session_alpha, rng=rng
+    )
+    keep = t_all <= cfg.horizon
+    arr = t_all[keep]
+    flows = flows_all[keep]
+    svc = svc_all[keep]
+    offered = int(arr.shape[0])
+
+    loop = EventLoop()
+    policy = ServingPolicy(
+        make_policy(cfg.policy, cfg.n_workers, cfg.batch, **cfg.policy_kwargs),
+        admit_limit=cfg.admit_limit,
+        base_workers=cfg.base_workers,
+        scale_backlog=cfg.scale_backlog,
+    )
+    done: Dict[int, float] = {}
+    plane = WorkerPlane(
+        loop,
+        policy,
+        cfg.n_workers,
+        service_fn=lambda item: float(svc[item.payload]),
+        on_complete=lambda tt, item: done.__setitem__(item.payload, tt),
+        rng=rng,
+        claim_overhead=cfg.claim_overhead,
+        deschedule_prob=cfg.deschedule_prob,
+        deschedule_mean=cfg.deschedule_mean,
+    )
+    hints = cfg.queue_hints or {}
+    loop.on(
+        "arrive",
+        lambda t, i: plane.enqueue(
+            t,
+            DesItem(
+                flow=int(flows[i]), payload=i, queue_hint=hints.get(int(flows[i]))
+            ),
+        ),
+    )
+    for i in range(offered):
+        loop.schedule(float(arr[i]), "arrive", i)
+    loop.run()
+    # Open loop: a gated/stranded tail is the measured degraded mode,
+    # never a protocol bug to raise on.
+    stats = plane.finalize(strict=False)
+
+    idx = np.fromiter(sorted(done), dtype=np.int64, count=len(done))
+    sojourns = (
+        np.array([done[i] for i in idx]) - arr[idx]
+        if len(idx)
+        else np.empty(0)
+    )
+    delivered = int(len(idx))
+    ok = int(np.sum(sojourns <= cfg.slo_target)) if delivered else 0
+    return ServingResult(
+        policy=cfg.policy,
+        offered=offered,
+        delivered=delivered,
+        shed=stats.rejected,
+        undelivered=offered - delivered - stats.rejected,
+        slo_attained=ok / max(offered, 1),
+        p50=float(np.percentile(sojourns, 50)) if delivered else math.inf,
+        p99=float(np.percentile(sojourns, 99)) if delivered else math.inf,
+        mean_sojourn=float(np.mean(sojourns)) if delivered else math.inf,
+        sojourns=sojourns,
+        stats=stats,
+    )
+
+
+def sweep_serving_jax(
+    policy: str,
+    seeds,
+    capacity: int = 2000,
+    arrival: str = "poisson",
+    lane_params: dict | None = None,
+    traffic_params: dict | None = None,
+    serving_params: dict | None = None,
+    fault_params: dict | None = None,
+    n_workers: int = 4,
+    max_batch: int = 64,
+    **kw,
+):
+    """Vectorized counterpart of :func:`simulate_serving_des` sweeps.
+
+    One serving configuration per (knob, seed) lane, all lanes advanced
+    by the claim-compacted engine in a single jitted call, with SLO
+    attainment / offered / shed computed in-graph — see
+    :class:`~repro.core.jaxplane.ServingParams` for the knob dicts.
+    ``capacity`` is the generation capacity (the jax plane's
+    ``n_packets``); the per-lane ``horizon`` decides how much of it is
+    offered.  Imports jax lazily so this module stays importable on
+    DES-only hosts.  Multi-policy fused serving sweeps go through
+    :func:`repro.core.run_sweep` (``scenario="serving"``).
+    """
+    from .jaxplane import _fused_lanes
+
+    return _fused_lanes(
+        [
+            dict(
+                policy=policy,
+                seeds=seeds,
+                lane_params=lane_params,
+                traffic_params=traffic_params,
+                fault_params=fault_params,
+                serving_params=serving_params or {},
+            )
+        ],
+        workload=ARRIVAL_WORKLOADS[arrival],
+        service="HT",
+        serving=True,
+        n_packets=capacity,
+        n_workers=n_workers,
+        max_batch=max_batch,
+        **kw,
+    )[0]

@@ -29,6 +29,7 @@ hurt via reordering, reproducing Table 5's percent-level FCT deltas.
 
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -271,18 +272,22 @@ def sweep_tcp_jax(
     max_batch: int = 64,
     **kw,
 ):
-    """Vectorized counterpart of :func:`simulate_tcp` sweeps.
+    """Deprecated vectorized counterpart of :func:`simulate_tcp` sweeps.
 
-    Evaluates one TCP configuration per (lane-param, seed) lane — all
-    lanes in a single jitted scan on the jax plane
-    (:mod:`repro.core.tcpjax`) with the same NewReno control laws and
-    forwarder batch-claim dynamics, returning per-flow flow-completion
-    times, retransmission and spurious-retransmit counts, and the
-    packed-claim-bitmap exactly-once check.  ``n_pkts`` / ``t_start``
-    give the flow layout (shared by all lanes); knob dicts behave like
-    :func:`repro.core.forwarder.sweep_forwarder_jax`'s.  Imports jax
-    lazily so this module stays importable on DES-only hosts.
+    Use ``repro.core.SweepRequest(scenario="tcp", policies=[policy],
+    ...)`` with :func:`repro.core.run_sweep` instead; this shim forwards
+    to the same fused engine (results are bit-identical, pinned by
+    ``tests/test_sweep_api.py``) and will be removed once external
+    callers have migrated.  ``n_pkts`` / ``t_start`` give the flow
+    layout (shared by all lanes); knob dicts behave like the forwarder
+    scenario's.
     """
+    warnings.warn(
+        "sweep_tcp_jax is deprecated; build a repro.core.SweepRequest"
+        '(scenario="tcp") and call repro.core.run_sweep instead',
+        DeprecationWarning,
+        stacklevel=2,
+    )
     from .tcpjax import run_tcp_lanes
 
     return run_tcp_lanes(

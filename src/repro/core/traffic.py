@@ -19,7 +19,15 @@ from typing import List
 
 import numpy as np
 
-__all__ = ["Packet", "udp_stream", "mawi_mix", "flow_packets", "FlowSpec"]
+__all__ = [
+    "Packet",
+    "udp_stream",
+    "mawi_mix",
+    "flow_packets",
+    "FlowSpec",
+    "diurnal_times",
+    "heavy_tail_service",
+]
 
 MSS = 1460  # bytes of TCP payload per full-size packet
 
@@ -55,7 +63,9 @@ def udp_stream(
         f = int(flows[i])
         s = flow_seq.get(f, 0)
         flow_seq[f] = s + 1
-        out.append(Packet(seqno=i, flow=f, flow_seq=s, size=size, t_arrival=float(t[i])))
+        out.append(
+            Packet(seqno=i, flow=f, flow_seq=s, size=size, t_arrival=float(t[i]))
+        )
     return out
 
 
@@ -92,9 +102,60 @@ def mawi_mix(
         s = flow_seq.get(f, 0)
         flow_seq[f] = s + 1
         out.append(
-            Packet(seqno=i, flow=f, flow_seq=s, size=int(sizes[i]), t_arrival=float(t[i]))
+            Packet(
+                seqno=i,
+                flow=f,
+                flow_seq=s,
+                size=int(sizes[i]),
+                t_arrival=float(t[i]),
+            )
         )
     return out
+
+
+def diurnal_times(
+    n: int,
+    mean_rate_pps: float,
+    amp: float = 0.6,
+    period: float = 50.0,
+    seed: int = 0,
+    rng=None,
+) -> np.ndarray:
+    """Nonhomogeneous-Poisson arrival times, lambda(t) = rate(1 + amp sin wt).
+
+    Time-rescaling: draw a unit-rate process, invert the cumulative
+    intensity Lambda(t) = rate*(t + amp/w*(1 - cos wt)) by damped Newton
+    (lambda >= rate*(1 - amp) > 0 bounds the derivative away from 0).
+    The numpy mirror of the jax plane's "diurnal" workload — same
+    intensity, same inversion — used by the DES serving scenario
+    (:mod:`repro.core.servingjax`) for distributional parity.
+    """
+    rng = np.random.default_rng(seed) if rng is None else rng
+    s = np.cumsum(rng.exponential(size=n))
+    amp = float(np.clip(amp, 0.0, 0.95))
+    w = 2.0 * np.pi / period
+    lam_min = mean_rate_pps * (1.0 - amp)
+    t = s / mean_rate_pps
+    for _ in range(12):
+        big = mean_rate_pps * (t + amp / w * (1.0 - np.cos(w * t)))
+        lam = mean_rate_pps * (1.0 + amp * np.sin(w * t))
+        t = np.maximum(t - (big - s) / np.maximum(lam, lam_min), 0.0)
+    return np.maximum.accumulate(t)
+
+
+def heavy_tail_service(
+    n: int, mean: float, alpha: float = 1.8, seed: int = 0, rng=None
+) -> np.ndarray:
+    """Heavy-tailed per-request service times (user session sizes).
+
+    Pareto with tail index ``alpha > 1`` via inverse-CDF ``u^(-1/alpha)``
+    on a uniform clipped at 1e-4 (~p99.99 truncation), scaled so the
+    truncated mean is ``mean`` — matching the jax plane's "HT" service
+    kind draw for draw in distribution.
+    """
+    rng = np.random.default_rng(seed) if rng is None else rng
+    u = np.maximum(rng.uniform(size=n), 1e-4)
+    return mean * (alpha - 1.0) / alpha * u ** (-1.0 / alpha)
 
 
 @dataclass

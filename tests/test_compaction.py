@@ -34,7 +34,7 @@ import pytest
 jax = pytest.importorskip("jax")
 
 from repro.core import jax_policies  # noqa: E402
-from repro.core.jaxplane import LaneResult, run_lanes, run_lanes_fused  # noqa: E402
+from repro.core.jaxplane import LaneResult, _fused_lanes, run_lanes  # noqa: E402
 from repro.core.tcpjax import TcpLaneResult, run_tcp_lanes  # noqa: E402
 
 JAX_POLS = jax_policies()
@@ -97,7 +97,7 @@ def test_fused_call_matches_per_policy_calls():
         dict(policy=p, seeds=np.arange(3), lane_params=FWD_KW["lane_params"])
         for p in JAX_POLS
     ]
-    fused = run_lanes_fused(
+    fused = _fused_lanes(
         reqs, n_packets=FWD_KW["n_packets"], n_workers=4, return_times=True
     )
     for p, res in zip(JAX_POLS, fused):
@@ -108,7 +108,7 @@ def test_fused_call_matches_per_policy_calls():
 def test_fused_timings_report_compile_and_run():
     timings: dict = {}
     reqs = [dict(policy="corec", seeds=np.arange(2))]
-    run_lanes_fused(reqs, n_packets=100, timings=timings)
+    _fused_lanes(reqs, n_packets=100, timings=timings)
     assert timings["compile_s"] > 0 and timings["run_s"] > 0
 
 

@@ -24,8 +24,7 @@ jax = pytest.importorskip("jax")
 from repro.core import jax_policies, make_jax_policy, make_policy  # noqa: E402
 from repro.core import jaxplane as jp  # noqa: E402
 from repro.core.des import DesItem, EventLoop, WorkerPlane  # noqa: E402
-from repro.core.forwarder import sweep_forwarder_jax  # noqa: E402
-from repro.core.queueing import sweep_policy_jax  # noqa: E402
+from repro.core.sweep import SweepRequest, run_sweep  # noqa: E402
 from repro.core.reorder import measure_reordering  # noqa: E402
 from repro.kernels import ops, ref  # noqa: E402
 
@@ -236,13 +235,16 @@ def test_distributional_parity_with_des_plane(name):
 # Scenario-layer entry points
 # ---------------------------------------------------------------------
 def test_forwarder_scenario_wrapper_mawi():
-    res = sweep_forwarder_jax(
-        "corec",
-        np.arange(4),
-        workload="mawi",
-        n_packets=300,
-        traffic_params=dict(rate=35.0),
-    )
+    res = run_sweep(
+        SweepRequest(
+            scenario="forwarder",
+            policies=["corec"],
+            seeds=np.arange(4),
+            arrival="bursty",
+            n_packets=300,
+            traffic_params=dict(rate=35.0),
+        )
+    )["corec"]
     assert np.asarray(res.p99).shape == (4,)
     assert (np.asarray(res.claimed_prefix) == 300).all()
     pct = np.asarray(res.reorder_pct)
@@ -251,22 +253,17 @@ def test_forwarder_scenario_wrapper_mawi():
 
 def test_queueing_scenario_wrapper_md_service():
     # deterministic service at rho ~0.8: scale-up beats scale-out on p99
-    up = sweep_policy_jax(
-        "corec",
-        np.arange(6),
-        rate=3.2,
-        mean_service=1.0,
-        n_workers=4,
-        n_jobs=1500,
-        service="D",
+    res = run_sweep(
+        SweepRequest(
+            scenario="queueing",
+            policies=["corec", "scaleout"],
+            seeds=np.arange(6),
+            service="D",
+            n_packets=1500,
+            n_workers=4,
+            lane_params=dict(batch=1, claim_overhead=0.0),
+            traffic_params=dict(rate=3.2, mean_service=1.0),
+        )
     )
-    out = sweep_policy_jax(
-        "scaleout",
-        np.arange(6),
-        rate=3.2,
-        mean_service=1.0,
-        n_workers=4,
-        n_jobs=1500,
-        service="D",
-    )
+    up, out = res["corec"], res["scaleout"]
     assert float(np.median(np.asarray(up.p99))) < float(np.median(np.asarray(out.p99)))

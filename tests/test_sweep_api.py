@@ -1,0 +1,152 @@
+"""Unified SweepRequest API vs the deprecated per-scenario entry points.
+
+Every pre-redesign entry point (``sweep_forwarder_jax``,
+``sweep_policy_jax``, ``sweep_tcp_jax``, ``run_lanes_fused``,
+``fused_jax_requests``) must keep producing bit-identical artifacts
+through its DeprecationWarning shim, and the equivalent
+:class:`SweepRequest` must reproduce them exactly — same engine, same
+lanes, same bits.  This is the migration contract: downstream callers
+can switch entry points in either order without renumbering results.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (  # noqa: E402
+    SweepRequest,
+    fused_jax_requests,
+    run_sweep,
+    sweep_policy_jax,
+    sweep_tcp_jax,
+)
+from repro.core.forwarder import sweep_forwarder_jax  # noqa: E402
+from repro.core.jaxplane import run_lanes_fused  # noqa: E402
+from repro.core.policy import _fused_requests  # noqa: E402
+
+SEEDS = np.arange(3)
+
+
+def _deprecated(fn, *args, **kw):
+    """Call a shim asserting it warns, returning its (unchanged) result."""
+    with pytest.warns(DeprecationWarning, match="SweepRequest"):
+        return fn(*args, **kw)
+
+
+def _assert_identical(old, new, ctx):
+    for f in old._fields:
+        a, b = np.asarray(getattr(old, f)), np.asarray(getattr(new, f))
+        assert np.array_equal(a, b, equal_nan=True), (ctx, f)
+
+
+def test_forwarder_shim_bit_identical():
+    old = _deprecated(
+        sweep_forwarder_jax,
+        "corec",
+        SEEDS,
+        workload="mawi",
+        n_packets=200,
+        traffic_params=dict(rate=35.0),
+    )
+    new = run_sweep(
+        SweepRequest(
+            scenario="forwarder",
+            policies=["corec"],
+            seeds=SEEDS,
+            arrival="bursty",
+            n_packets=200,
+            traffic_params=dict(rate=35.0),
+        )
+    )["corec"]
+    _assert_identical(old, new, "forwarder")
+
+
+def test_queueing_shim_bit_identical():
+    old = _deprecated(
+        sweep_policy_jax,
+        "scaleout",
+        SEEDS,
+        rate=3.0,
+        n_jobs=200,
+        service="LN",
+        batch=4,
+    )
+    new = run_sweep(
+        SweepRequest(
+            scenario="queueing",
+            policies=["scaleout"],
+            seeds=SEEDS,
+            service="LN",
+            n_packets=200,
+            lane_params=dict(batch=4, claim_overhead=0.0),
+            traffic_params=dict(rate=3.0, mean_service=1.0),
+        )
+    )["scaleout"]
+    _assert_identical(old, new, "queueing")
+
+
+def test_tcp_shim_bit_identical():
+    old = _deprecated(sweep_tcp_jax, "hybrid", SEEDS, n_pkts=48)
+    new = run_sweep(
+        SweepRequest(scenario="tcp", policies=["hybrid"], seeds=SEEDS, n_packets=48)
+    )["hybrid"]
+    _assert_identical(old, new, "tcp")
+
+
+def test_fused_entry_shims_bit_identical():
+    # the two fused building blocks deprecate as a pair: request
+    # construction (fused_jax_requests) and execution (run_lanes_fused)
+    with pytest.warns(DeprecationWarning, match="run_sweep"):
+        reqs = fused_jax_requests(SEEDS, policies=["corec", "locked"])
+    with pytest.warns(DeprecationWarning, match="SweepRequest"):
+        olds = run_lanes_fused(reqs, n_packets=150)
+    res = run_sweep(
+        SweepRequest(policies=["corec", "locked"], seeds=SEEDS, n_packets=150)
+    )
+    for pol, old in zip(["corec", "locked"], olds):
+        _assert_identical(old, res[pol], pol)
+
+
+def test_run_sweep_emits_no_deprecation_warnings():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        res = run_sweep(
+            SweepRequest(policies=["corec"], seeds=np.arange(2), n_packets=100)
+        )
+    assert (np.asarray(res["corec"].items) == 100).all()
+
+
+def test_internal_request_builder_matches_deprecated_one():
+    with pytest.warns(DeprecationWarning):
+        old = fused_jax_requests(
+            SEEDS, policies=["adaptive-batch"], lane_params=dict(batch=8)
+        )
+    new = _fused_requests(SEEDS, policies=["adaptive-batch"], lane_params=dict(batch=8))
+    assert len(old) == len(new) == 1
+    assert old[0].keys() == new[0].keys()
+    assert old[0]["policy"] == new[0]["policy"]
+    assert np.array_equal(old[0]["seeds"], new[0]["seeds"])
+    # the adaptive-batch batch->max_batch mirroring survives in both
+    assert old[0]["lane_params"] == new[0]["lane_params"]
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        run_sweep(SweepRequest(scenario="warp-drive"))
+
+
+def test_result_metadata_round_trip():
+    timings: dict = {}
+    res = run_sweep(
+        SweepRequest(policies=["corec"], seeds=np.arange(2), n_packets=100),
+        timings=timings,
+    )
+    assert res.policies == ("corec",)
+    assert res.request.scenario == "forwarder"
+    assert res.timings["compile_s"] > 0 and res.timings["run_s"] > 0
+    assert timings == res.timings

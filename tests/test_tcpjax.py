@@ -24,7 +24,7 @@ import pytest
 
 jax = pytest.importorskip("jax")
 
-from repro.core import jax_policies, sweep_tcp_jax  # noqa: E402
+from repro.core import SweepRequest, jax_policies, run_sweep  # noqa: E402
 from repro.core.jaxplane import rss_hash32  # noqa: E402
 from repro.core.tcp import TcpSimConfig, simulate_tcp  # noqa: E402
 from repro.core.tcpjax import run_tcp_lanes  # noqa: E402
@@ -132,9 +132,16 @@ def test_distributional_parity_with_des_plane(name):
     hints = {
         i: int(h) for i, h in enumerate(rss_hash32(np.arange(n_flows), N_WORKERS))
     }
-    res = sweep_tcp_jax(
-        name, np.arange(6), n_pkts=n_pkts, t_start=t_start, n_workers=N_WORKERS
-    )
+    res = run_sweep(
+        SweepRequest(
+            scenario="tcp",
+            policies=[name],
+            seeds=np.arange(6),
+            n_packets=n_pkts,
+            t_start=t_start,
+            n_workers=N_WORKERS,
+        )
+    )[name]
     assert np.asarray(res.done).all()
     j = np.asarray(res.fct).ravel()
     d = _des_fcts(name, flows, hints, range(3))
