@@ -25,8 +25,13 @@ Gated sources: per-policy p50/p99 from ``policy_sweep.json`` (udp +
 mawi DES runs), forwarder-lane p50/p99 medians + fused-sweep
 ``lane_points_per_s`` from ``jax_sweep.json``, the TCP-lane
 flow-completion-time p50/p99 + ``lane_points_per_s`` from the same
-file's ``tcp`` section (``jax_sweep/tcp/<policy>``), and the
-degraded-mode rows from ``fault_sweep.json``
+file's ``tcp`` section (``jax_sweep/tcp/<policy>``), the SACK-mode
+lossy-leg rows from its ``tcp_sack`` section
+(``jax_sweep/tcp_sack/<policy>``: FCT percentiles + throughput floor,
+plus ``sack_undelivered`` whose 0-valued baseline is an exact
+invariant — the scoreboard failing to repair even one hole fails the
+guard, not just the 2x band), and the degraded-mode rows from
+``fault_sweep.json``
 (``fault_sweep/<policy>``): ``degraded_p99`` under the latency
 tolerance, plus two count metrics whose 0-valued baselines make them
 exact invariants — ``wedged_lanes`` (a lease-capable policy wedging at
@@ -89,6 +94,17 @@ def collect_metrics(results_dir: Path) -> dict:
             out[f"jax_sweep/tcp/{pol}"] = {
                 m: row[m]
                 for m in ("fct_p50", "fct_p99", "lane_points_per_s")
+                if m in row
+            }
+        for pol, row in sweep.get("tcp_sack", {}).get("policies", {}).items():
+            out[f"jax_sweep/tcp_sack/{pol}"] = {
+                m: row[m]
+                for m in (
+                    "fct_p50",
+                    "fct_p99",
+                    "lane_points_per_s",
+                    "sack_undelivered",
+                )
                 if m in row
             }
     fs = results_dir / "fault_sweep.json"

@@ -12,9 +12,13 @@ from the packed claim bitmaps (multi-ring done-prefix kernel).
 
 The TCP section does the same for the closed loop
 (``SweepRequest(scenario="tcp")``): claim batch x deschedule
-probability x sender link rate x seeds, >= 1000 TCP lanes per policy
-fused into one call, reporting flow-completion-time p50/p99 and
-retransmit counts next to the forwarder latency percentiles.
+probability x sender link rate x per-lane packet budget
+(elephant/mice mixes) x seeds, >= 2000 TCP lanes per policy fused
+into one call, reporting flow-completion-time p50/p99 and retransmit
+counts next to the forwarder latency percentiles.  A second, smaller
+SACK leg re-runs the grid's spine under deterministic receiver loss
+to gate the scoreboard recovery path and the
+``sack_undelivered == 0`` delivery invariant.
 
 Compile time is measured separately from steady-state execution
 through the AOT lower/compile path: every row reports ``compile_s``
@@ -55,12 +59,30 @@ AXES = {
 }
 N_SEEDS = 14
 
-#: TCP grid: 6 x 3 x 4 = 72 configs; x 14 seeds = 1008 TCP lanes/policy
+#: TCP grid: 6 x 3 x 4 x 2 = 144 configs; x 14 seeds = 2016 lanes/policy.
+#: ``pkt_budget`` is the per-lane elephant/mice axis: 1<<30 = unbudgeted
+#: elephants, 48 = mice lanes that stop after 48 packets per flow.
 TCP_AXES = {
     "batch": [1, 2, 4, 8, 16, 32],
     "deschedule_prob": [0.0, 5e-4, 5e-3],
     "link_pps": [0.55, 0.85, 1.1, 1.35],
+    "pkt_budget": [1 << 30, 48],
 }
+
+#: SACK recovery leg: a smaller grid under deterministic receiver loss
+#: (every 10th segment dropped once) — gates the scoreboard path and
+#: the ``sack_undelivered`` == 0 delivery invariant without doubling
+#: the main grid's runtime.  The period is chosen to keep the last
+#: hole > reorder_thresh segments from the flow tail: tail losses are
+#: invisible to FACK (nothing sails past them), so a tail-adjacent
+#: period would time every flow out and benchmark the RTO, not the
+#: scoreboard.
+TCP_SACK_AXES = {
+    "batch": [1, 4, 16, 32],
+    "deschedule_prob": [0.0, 5e-3],
+    "link_pps": [0.85],
+}
+SACK_LOSS_EVERY = 10
 
 
 def run(
@@ -278,6 +300,91 @@ def run(
             raise AssertionError(
                 f"jax_sweep/tcp: {pol} violated exactly-once or left "
                 f"flows unfinished (lossless={lossless}, complete={complete})"
+            )
+
+    # ---- SACK recovery leg: multi-hole loss, delivery invariant -------
+    sk_arrays, sk_points = lane_grid(TCP_SACK_AXES, np.arange(n_seeds))
+    sk_seeds = sk_arrays.pop("__seeds__")
+    s_lanes = sk_seeds.shape[0]
+    s_ncfg = s_lanes // n_seeds
+    sk_lane_kw = {k: v for k, v in sk_arrays.items() if k in LaneParams._fields}
+    sk_tcp_kw = {k: v for k, v in sk_arrays.items() if k in TcpParams._fields}
+    sk_tcp_kw["sack"] = True
+    sk_tcp_kw["loss_every"] = SACK_LOSS_EVERY
+    sack_timings: dict = {}
+    sack_sweep = run_sweep(
+        SweepRequest(
+            scenario="tcp",
+            policies=pols,
+            seeds=sk_seeds,
+            lane_params=sk_lane_kw,
+            tcp_params=sk_tcp_kw,
+            n_packets=flow_pkts,
+            t_start=flow_start,
+            n_workers=N_WORKERS,
+            max_batch=MAX_BATCH,
+            shards=shards,
+        ),
+        timings=sack_timings,
+    )
+    s_total = s_lanes * len(pols)
+    s_compile, s_run = sack_timings["compile_s"], sack_timings["run_s"]
+    s_points_rate = s_total / s_run
+    out["tcp_sack"] = {
+        "lanes_per_policy": int(s_lanes),
+        "axes": {k: list(map(float, v)) for k, v in TCP_SACK_AXES.items()},
+        "loss_every": SACK_LOSS_EVERY,
+        "n_flows": n_flows,
+        "pkts_per_flow": int(flow_pkts[0]),
+        "n_seeds": int(n_seeds),
+        "engine": {
+            "fused_policies": len(pols),
+            "lanes_total": int(s_total),
+            "compile_s": s_compile,
+            "run_s": s_run,
+            "wall_s": s_compile + s_run,
+            "lane_points_per_s": s_points_rate,
+            "shards": str(shards),
+        },
+        "policies": {},
+    }
+    for pol in pols:
+        res = sack_sweep[pol]
+        fct = np.asarray(res.fct)
+        done = np.asarray(res.done)
+        retx = np.asarray(res.retransmissions)
+        delivered = np.asarray(res.delivered)
+        # every flow that finished must have delivered its whole payload
+        # to the receiver despite the injected holes — the scoreboard's
+        # end-to-end reliability invariant, gated at a 0 baseline
+        undelivered = int((flow_pkts[None, :] - delivered).sum())
+        complete = bool(done.all())
+        row = {
+            "lanes": int(s_lanes),
+            "complete": complete,
+            "compile_s": s_compile,
+            "run_s": s_run,
+            "lane_points_per_s": s_points_rate,
+            "fct_p50": float(np.percentile(fct, 50)),
+            "fct_p99": float(np.percentile(fct, 99)),
+            "retx_per_lane": float(retx.sum() / s_lanes),
+            "spurious_total": int(np.asarray(res.spurious).sum()),
+            "sack_undelivered": undelivered,
+        }
+        out["tcp_sack"]["policies"][pol] = row
+        emit(
+            f"jax_sweep/tcp_sack/{pol}",
+            s_run * 1e6,
+            f"{s_lanes} SACK lanes, loss 1/{SACK_LOSS_EVERY} "
+            f"({s_points_rate:.0f} lane-points/s), FCT p50 "
+            f"{row['fct_p50']:.1f} p99 {row['fct_p99']:.1f}, "
+            f"retx/lane {row['retx_per_lane']:.2f}, "
+            f"undelivered={undelivered} complete={complete}",
+        )
+        if undelivered or not complete:
+            raise AssertionError(
+                f"jax_sweep/tcp_sack: {pol} left data undelivered under "
+                f"loss (undelivered={undelivered}, complete={complete})"
             )
     save_json("jax_sweep", out)
     return out

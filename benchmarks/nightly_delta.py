@@ -1,0 +1,107 @@
+"""Compile/run-time delta table between two nightly result trees.
+
+The nightly CI job downloads the previous successful run's ``results/``
+artifact and prints, next to the fresh sweep, a per-engine table of
+``compile_s`` / ``run_s`` deltas — so a compile-time regression in the
+fused TCP jit (a new scan shape, an accidental retrace) is visible in
+the nightly log the day it lands, not months later when end-state
+latency finally drifts past the regression guard's 2x band.
+
+Comparison is structural: every dict in any ``results/*.json`` that
+carries both ``compile_s`` and ``run_s`` becomes a row, keyed by its
+JSON path (``jax_sweep:tcp.engine``, ...).  Rows missing on either
+side are listed, not failed on: the table is a lens, the hard gate
+stays :mod:`benchmarks.check_regression`.
+
+Usage::
+
+    python -m benchmarks.nightly_delta PREV_DIR [CUR_DIR]
+
+``PREV_DIR``/``CUR_DIR`` are ``results/`` directories (default current:
+``benchmarks/results``).  Exits 0 always unless the current tree is
+unreadable — a missing previous artifact (first nightly, expired
+retention) just prints a notice.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+_HERE = Path(__file__).resolve().parent
+
+
+def _timing_rows(node, path: str, out: dict) -> None:
+    if isinstance(node, dict):
+        # per-policy rows mirror their engine block's timings verbatim;
+        # one row per fused call is enough
+        if "compile_s" in node and "run_s" in node and ".policies." not in f".{path}.":
+            out[path] = (float(node["compile_s"]), float(node["run_s"]))
+        for k, v in node.items():
+            _timing_rows(v, f"{path}.{k}" if path else str(k), out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _timing_rows(v, f"{path}[{i}]", out)
+
+
+def collect(results_dir: Path) -> dict:
+    """``{"file:json.path": (compile_s, run_s)}`` over every .json."""
+    rows: dict = {}
+    for f in sorted(results_dir.glob("*.json")):
+        try:
+            data = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+        per: dict = {}
+        _timing_rows(data, "", per)
+        rows.update({f"{f.stem}:{k}": v for k, v in per.items()})
+    return rows
+
+
+def _fmt_delta(prev: float, cur: float) -> str:
+    if prev <= 0:
+        return "n/a"
+    pct = (cur - prev) / prev * 100.0
+    return f"{pct:+7.1f}%"
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: python -m benchmarks.nightly_delta PREV_DIR [CUR_DIR]")
+        return 2
+    prev_dir = Path(argv[0])
+    cur_dir = Path(argv[1]) if len(argv) > 1 else _HERE / "results"
+    if not prev_dir.is_dir():
+        print(f"nightly_delta: no previous results at {prev_dir} (first run?)")
+        return 0
+    cur = collect(cur_dir)
+    if not cur:
+        print(f"nightly_delta: no current results under {cur_dir}")
+        return 1
+    prev = collect(prev_dir)
+    header = (
+        f"{'engine':<48} {'compile_s':>9} {'prev':>9} {'Δ':>8}"
+        f" {'run_s':>9} {'prev':>9} {'Δ':>8}"
+    )
+    print(header)
+    print("-" * len(header))
+    for key in sorted(cur):
+        c_compile, c_run = cur[key]
+        if key in prev:
+            p_compile, p_run = prev[key]
+            print(
+                f"{key:<48} {c_compile:>9.2f} {p_compile:>9.2f} "
+                f"{_fmt_delta(p_compile, c_compile):>8} "
+                f"{c_run:>9.2f} {p_run:>9.2f} {_fmt_delta(p_run, c_run):>8}"
+            )
+        else:
+            print(f"{key:<48} {c_compile:>9.2f} {'new':>9} {'':>8} {c_run:>9.2f}")
+    for key in sorted(set(prev) - set(cur)):
+        print(f"{key:<48} (gone — present in previous nightly only)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

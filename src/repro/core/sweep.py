@@ -15,11 +15,15 @@ The old entry points remain as thin shims that emit
 ``DeprecationWarning`` and forward verbatim — same lanes, same results,
 bit for bit (pinned by ``tests/test_sweep_api.py``).  Migration map::
 
-    sweep_forwarder_jax(pol, seeds, ...)   -> SweepRequest(scenario="forwarder", policies=[pol], ...)
-    sweep_policy_jax(pol, seeds, ...)      -> SweepRequest(scenario="queueing", policies=[pol], ...)
-    sweep_tcp_jax(pol, seeds, ...)         -> SweepRequest(scenario="tcp", policies=[pol], ...)
-    run_lanes_fused(requests, ...)         -> SweepRequest(policies=[...], ...) (one segment per policy)
-    fused_jax_requests(seeds, ...)         -> handled inside run_sweep
+    sweep_forwarder_jax(pol, ...)  -> SweepRequest(scenario="forwarder",
+                                                   policies=[pol], ...)
+    sweep_policy_jax(pol, ...)     -> SweepRequest(scenario="queueing",
+                                                   policies=[pol], ...)
+    sweep_tcp_jax(pol, ...)        -> SweepRequest(scenario="tcp",
+                                                   policies=[pol], ...)
+    run_lanes_fused(requests, ...) -> SweepRequest(policies=[...], ...)
+                                      (one segment per policy)
+    fused_jax_requests(seeds, ...) -> handled inside run_sweep
 
 Scenario -> model mapping:
 
@@ -30,7 +34,12 @@ forwarder    open-loop L3 forwarder (sec 4.3.1): per-size lognormal
 queueing     M/G/N vs N x M/G/1 (sec 3.2): Poisson arrivals, ``service``
              picks M / D / LN.
 tcp          closed-loop NewReno/CUBIC lanes over the forwarder
-             (sec 4.3.2) on :mod:`repro.core.tcpjax`.
+             (sec 4.3.2) on :mod:`repro.core.tcpjax`; ``tcp_params``
+             additionally takes ``sack`` (scoreboard multi-hole
+             recovery, static per request), ``send_burst`` (events
+             coalesced per scan step), ``loss_every`` (deterministic
+             drop-once receiver loss) and ``pkt_budget`` (per-lane
+             elephant/mice packet cap, sweepable).
 serving      open-loop SLO sweeps (:mod:`repro.core.servingjax`):
              heavy-tailed sessions, admission + autoscale knobs from
              :class:`~repro.core.jaxplane.ServingParams`; each policy's

@@ -60,6 +60,14 @@ class TcpSimConfig:
     init_reorder_thresh: int = 3
     max_reorder_thresh: int = 300  # Linux sysctl tcp_max_reordering
     rto: float = 5_000.0  # coarse retransmission timer (us)
+    #: SACK-grade recovery (mirrors the jax plane's scoreboard engine):
+    #: FACK-style multi-hole loss marking, one window cut per recovery
+    #: episode, partial-ACK retransmit selection, RFC 6675 pipe.
+    sack: bool = False
+    #: receiver drops the FIRST arrival of every k-th segment (0 = off)
+    loss_every: int = 0
+    #: cap on packets actually sent per flow (elephant/mice mixes)
+    pkt_budget: int = 1 << 30
     seed: int = 0
     policy_kwargs: dict = field(default_factory=dict)
     #: per-flow steering override (flow id -> queue), the indirection-
@@ -99,6 +107,14 @@ class _Flow:
     recv_buf: set = field(default_factory=set)
     recv_next: int = 0  # receiver's next expected seq
     retx_queue: deque = field(default_factory=deque)
+    # SACK scoreboard (cfg.sack): holes awaiting retransmission /
+    # already resent but not yet cumulatively acked, plus the recovery
+    # episode marker (one window cut per episode)
+    retx_pending: set = field(default_factory=set)
+    retx_done: set = field(default_factory=set)
+    in_rec: bool = False
+    rec_pt: int = -1
+    dropped_once: set = field(default_factory=set)
 
 
 def simulate_tcp(
@@ -109,7 +125,7 @@ def simulate_tcp(
     fl: Dict[int, _Flow] = {
         fid: _Flow(
             fid=fid,
-            n_packets=n,
+            n_packets=min(n, cfg.pkt_budget),  # per-lane packet budget
             t_start=t0,
             cwnd=float(cfg.init_cwnd),
             reorder_thresh=cfg.init_reorder_thresh,
@@ -145,9 +161,14 @@ def simulate_tcp(
     def try_send(f: _Flow, t: float) -> None:
         wnd = min(f.cwnd, float(cfg.rwnd))
         while (not f.done) and f.in_flight < int(wnd) and (
-            f.retx_queue or f.next_to_send < f.n_packets
+            f.retx_pending or f.retx_queue or f.next_to_send < f.n_packets
         ):
-            if f.retx_queue:
+            if cfg.sack and f.retx_pending:
+                # scoreboard drain: lowest hole first, then new data
+                seq = min(f.retx_pending)
+                f.retx_pending.discard(seq)
+                f.retx_done.add(seq)
+            elif f.retx_queue:
                 seq = f.retx_queue.popleft()
             else:
                 seq = f.next_to_send
@@ -161,6 +182,16 @@ def simulate_tcp(
     def deliver(t: float, data) -> None:
         fid, seq = data
         f = fl[fid]
+        if (
+            cfg.loss_every
+            and (seq + 1) % cfg.loss_every == 0
+            and seq not in f.dropped_once
+        ):
+            # deterministic loss: the first copy of every k-th segment is
+            # dropped on the floor — no delivery, no ACK (mirrors the jax
+            # plane's drop-once dwords bitmap)
+            f.dropped_once.add(seq)
+            return
         dup = seq < f.recv_next or seq in f.recv_buf  # DSACK condition
         if not dup:
             f.recv_buf.add(seq)
@@ -186,6 +217,9 @@ def simulate_tcp(
                 # Eifel-style undo of the rate cut, but the flow stays in
                 # congestion avoidance (ssthresh keeps the cut value).
                 f.cwnd = f.cwnd_before_cut
+        if cfg.sack:
+            _on_ack_sack(f, t, dsack)
+            return
         if ackno > f.highest_acked:
             newly = ackno - f.highest_acked
             f.highest_acked = ackno
@@ -214,6 +248,67 @@ def simulate_tcp(
                 f.dup_acks = 0
         try_send(f, t)
 
+    def _on_ack_sack(f: _Flow, t: float, dsack: bool) -> None:
+        # SACK-grade recovery, semantically step-matched to the jax
+        # plane's scoreboard batch (tcpjax._tcp_step, sack=True): the
+        # sender reads the receiver's LIVE state (cumulative prefix +
+        # out-of-order set), exactly as the jax engine reads the packed
+        # receive bitmap when it consumes an ack batch.
+        ackno = f.recv_next - 1
+        advanced = ackno > f.highest_acked
+        if advanced:
+            newly = ackno - f.highest_acked
+            f.highest_acked = ackno
+            if not f.in_rec:  # no window growth during a recovery episode
+                if f.cwnd < f.ssthresh:
+                    f.cwnd += newly  # slow start
+                else:
+                    f.cwnd += newly / f.cwnd  # congestion avoidance
+            if f.highest_acked >= f.n_packets - 1:
+                f.done = True
+                f.t_done = t
+                return
+        # scoreboard upkeep: drop marks at/below the cumulative prefix
+        f.retx_pending = {s for s in f.retx_pending if s > ackno}
+        f.retx_done = {s for s in f.retx_done if s > ackno}
+        if advanced and f.in_rec and ackno >= f.rec_pt:
+            # recovery episode complete: forget resent-but-unacked marks
+            f.in_rec = False
+            f.retx_done.clear()
+        # FACK loss marking: every hole more than reorder_thresh below the
+        # highest SACKed seq is presumed lost (multi-hole, one pass)
+        high_sack = max(f.recv_buf) if f.recv_buf else ackno
+        cut_hi = min(high_sack - f.reorder_thresh, f.n_packets - 1)
+        marks = [
+            h
+            for h in range(ackno + 1, cut_hi + 1)
+            if h not in f.recv_buf
+            and h not in f.retx_pending
+            and h not in f.retx_done
+        ]
+        if marks:
+            f.retx_pending.update(marks)
+            f.retx += len(marks)
+            if not f.in_rec:  # one window cut per recovery episode
+                f.in_rec = True
+                f.rec_pt = f.next_to_send - 1
+                f.cwnd_before_cut = f.cwnd
+                f.ssthresh = max(2.0, f.cwnd * cfg.cubic_beta)
+                f.cwnd = f.ssthresh
+        if advanced and f.in_rec and ackno < f.rec_pt:
+            # partial ACK: the next hole is known-lost, resend immediately
+            fh = ackno + 1
+            if fh < f.n_packets and fh not in f.retx_pending and fh not in f.retx_done:
+                f.retx_pending.add(fh)
+                f.retx += 1
+        # RFC 6675 pipe: in-flight = sent, not SACKed, not marked lost
+        f.in_flight = sum(
+            1
+            for s in range(ackno + 1, f.next_to_send)
+            if s not in f.recv_buf and s not in f.retx_pending
+        )
+        try_send(f, t)
+
     # ---- event wiring + RTO safety ---------------------------------------
     hints = cfg.queue_hints or {}
     loop.on("start", lambda t, fid: try_send(fl[fid], t))
@@ -237,7 +332,15 @@ def simulate_tcp(
                 f.ssthresh = max(2.0, f.cwnd * cfg.cubic_beta)
                 f.cwnd = float(cfg.init_cwnd)
                 missing = f.highest_acked + 1
-                if missing < f.n_packets and missing not in f.retx_queue:
+                if cfg.sack:
+                    # timeout invalidates the resent-but-unacked marks and
+                    # the episode; re-mark the first hole for resend
+                    f.retx_done.clear()
+                    f.in_rec = False
+                    if missing < f.n_packets and missing not in f.retx_pending:
+                        f.retx_pending.add(missing)
+                        f.retx += 1
+                elif missing < f.n_packets and missing not in f.retx_queue:
                     f.retx_queue.appendleft(missing)
                     f.retx += 1
                     f.last_retx_seq = missing

@@ -46,6 +46,7 @@ __all__ = [
     "done_prefix_batch",
     "done_prefix_packed",
     "pack_bits_u32",
+    "first_set_bits",
     "on_tpu",
 ]
 
@@ -364,6 +365,31 @@ def pack_bits_u32(bits: jax.Array) -> jax.Array:
     b = b.reshape(*lead, n_words, 32)
     shifts = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
     return jnp.sum(b * shifts, axis=-1, dtype=jnp.uint32)
+
+
+def first_set_bits(words: jax.Array, k: int) -> jax.Array:
+    """Positions of the ``k`` lowest set bits of one packed row.
+
+    ``words`` is a single ``[n_words]`` uint32 bitmap in the
+    AtomicBitmap layout of :func:`pack_bits_u32`; returns ``[k]`` int32
+    positions in ascending order, padded with ``-1`` when fewer than
+    ``k`` bits are set.  The TCP lane engine's SACK hole-scan uses this
+    to pull the lowest retransmission holes out of a packed per-flow
+    scoreboard without unpacking it; ``k`` is static, so the peel loop
+    unrolls into ``k`` constant-shape find-lowest/clear rounds (vmap
+    over rows/lanes from the caller).
+    """
+    w = words
+    out = []
+    for _ in range(k):
+        nz = w != 0
+        widx = jnp.argmax(nz).astype(jnp.int32)
+        word = w[widx]
+        low = word & (jnp.uint32(0) - word)  # lowest set bit
+        pos = widx * 32 + jax.lax.population_count(low - 1).astype(jnp.int32)
+        out.append(jnp.where(jnp.any(nz), pos, jnp.int32(-1)))
+        w = w.at[widx].set(word ^ low)
+    return jnp.stack(out)
 
 
 def done_prefix_packed(

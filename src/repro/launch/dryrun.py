@@ -54,7 +54,10 @@ _DTYPE_BYTES = {
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
     "s8": 1, "u8": 1, "pred": 1,
 }
-_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2"
+    r"|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]"
+)
 _COLLECTIVES = ("all-gather(", "all-reduce(", "reduce-scatter(",
                 "all-to-all(", "collective-permute(")
 

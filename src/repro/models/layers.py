@@ -144,9 +144,15 @@ def attn_specs(cfg: ArchConfig, cross: bool = False, d_in: Optional[int] = None
 
 def _qkv(p, x, mem, cfg, dt, rules=None):
     """x: [B,S,d] query source; mem: [B,Sk,d] key/value source."""
-    q = jnp.einsum("bsd,dhk->bshk", x, use_weight(rules, p["wq"], (None, "heads", None), dt))
-    k = jnp.einsum("bsd,dhk->bshk", mem, use_weight(rules, p["wk"], (None, "kv_heads", None), dt))
-    v = jnp.einsum("bsd,dhk->bshk", mem, use_weight(rules, p["wv"], (None, "kv_heads", None), dt))
+    q = jnp.einsum(
+        "bsd,dhk->bshk", x, use_weight(rules, p["wq"], (None, "heads", None), dt)
+    )
+    k = jnp.einsum(
+        "bsd,dhk->bshk", mem, use_weight(rules, p["wk"], (None, "kv_heads", None), dt)
+    )
+    v = jnp.einsum(
+        "bsd,dhk->bshk", mem, use_weight(rules, p["wv"], (None, "kv_heads", None), dt)
+    )
     if "bq" in p:
         q = q + _c(p["bq"], dt)
         k = k + _c(p["bk"], dt)
@@ -179,7 +185,9 @@ def attention_block(
         q, k, v, causal=causal, impl=cfg.attention_impl,
         block_k=cfg.attention_block_k,
     )
-    out = jnp.einsum("bshk,hkd->bsd", o, use_weight(rules, p["wo"], ("heads", None, None), dt))
+    out = jnp.einsum(
+        "bshk,hkd->bsd", o, use_weight(rules, p["wo"], ("heads", None, None), dt)
+    )
     return out, {"k": k, "v": v}
 
 
@@ -194,7 +202,9 @@ def attention_decode_block(
     use_rope: bool = True,
 ) -> jax.Array:
     dt = cdtype(cfg)
-    q = jnp.einsum("bsd,dhk->bshk", x, use_weight(rules, p["wq"], (None, "heads", None), dt))
+    q = jnp.einsum(
+        "bsd,dhk->bshk", x, use_weight(rules, p["wq"], (None, "heads", None), dt)
+    )
     if "bq" in p:
         q = q + _c(p["bq"], dt)
     if use_rope:
@@ -202,14 +212,21 @@ def attention_decode_block(
     o = ops.decode_attention(
         q[:, 0], k_cache, v_cache, lengths, impl=cfg.attention_impl
     )
-    return jnp.einsum("bhk,hkd->bd", o, use_weight(rules, p["wo"], ("heads", None, None), dt))[:, None, :]
+    out = jnp.einsum(
+        "bhk,hkd->bd", o, use_weight(rules, p["wo"], ("heads", None, None), dt)
+    )
+    return out[:, None, :]
 
 
 def decode_kv(p, x, lengths, cfg, rules=None):
     """K/V for the new token (decode): [B, 1, Hkv, dh] each, rope'd."""
     dt = cdtype(cfg)
-    k = jnp.einsum("bsd,dhk->bshk", x, use_weight(rules, p["wk"], (None, "kv_heads", None), dt))
-    v = jnp.einsum("bsd,dhk->bshk", x, use_weight(rules, p["wv"], (None, "kv_heads", None), dt))
+    k = jnp.einsum(
+        "bsd,dhk->bshk", x, use_weight(rules, p["wk"], (None, "kv_heads", None), dt)
+    )
+    v = jnp.einsum(
+        "bsd,dhk->bshk", x, use_weight(rules, p["wv"], (None, "kv_heads", None), dt)
+    )
     if "bk" in p:
         k = k + _c(p["bk"], dt)
         v = v + _c(p["bv"], dt)

@@ -20,7 +20,16 @@ import jax.numpy as jnp
 
 from ..config import ArchConfig
 from ..kernels import ops
-from .layers import cdtype, embed_specs, embed_tokens, norm_specs, apply_norm, label_logprobs, unembed, use_weight
+from .layers import (
+    cdtype,
+    embed_specs,
+    embed_tokens,
+    norm_specs,
+    apply_norm,
+    label_logprobs,
+    unembed,
+    use_weight,
+)
 from .spec import ParamSpec, abstract_params, init_params
 from .transformer import _stack, scan_stack
 
@@ -104,29 +113,39 @@ class Rwkv6LM:
         B, T, d = x.shape
         m = self._ddlerp(p, x, xs, dt)
         xr, xk, xv, xg, xw = (m[:, :, i] for i in range(5))
-        r = jnp.einsum("btd,de->bte", xr, use_weight(rules, p["wr"], (None, "rwkv_heads"), dt)).reshape(B, T, H, N)
-        k = jnp.einsum("btd,de->bte", xk, use_weight(rules, p["wk"], (None, "rwkv_heads"), dt)).reshape(B, T, H, N)
-        v = jnp.einsum("btd,de->bte", xv, use_weight(rules, p["wv"], (None, "rwkv_heads"), dt)).reshape(B, T, H, N)
-        g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, use_weight(rules, p["wg"], (None, "rwkv_heads"), dt)))
+        wr = use_weight(rules, p["wr"], (None, "rwkv_heads"), dt)
+        wk = use_weight(rules, p["wk"], (None, "rwkv_heads"), dt)
+        wv = use_weight(rules, p["wv"], (None, "rwkv_heads"), dt)
+        wg = use_weight(rules, p["wg"], (None, "rwkv_heads"), dt)
+        r = jnp.einsum("btd,de->bte", xr, wr).reshape(B, T, H, N)
+        k = jnp.einsum("btd,de->bte", xk, wk).reshape(B, T, H, N)
+        v = jnp.einsum("btd,de->bte", xv, wv).reshape(B, T, H, N)
+        g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, wg))
+        lora = jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_lora_a"].astype(dt)))
         w_raw = p["w_base"].astype(jnp.float32) + jnp.einsum(
             "btr,rd->btd",
-            jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_lora_a"].astype(dt))).astype(jnp.float32),
+            lora.astype(jnp.float32),
             p["w_lora_b"].astype(jnp.float32),
         )
         w = jnp.exp(-jnp.exp(jnp.clip(w_raw, -8.0, 4.0))).reshape(B, T, H, N)
         o, new_state = ops.rwkv6(
             r, k, v, w, p["u"].astype(jnp.float32), state,
             chunk=cfg.rwkv_chunk,
-            impl="xla" if cfg.attention_impl in ("xla", "naive") else cfg.attention_impl,
+            impl="xla"
+            if cfg.attention_impl in ("xla", "naive")
+            else cfg.attention_impl,
         )
         # per-head GroupNorm
         of = o.astype(jnp.float32)
         mu = of.mean(-1, keepdims=True)
         var = of.var(-1, keepdims=True)
         of = (of - mu) * jax.lax.rsqrt(var + 64e-5)
-        of = of.reshape(B, T, d) * p["gn_w"].astype(jnp.float32) + p["gn_b"].astype(jnp.float32)
+        gw = p["gn_w"].astype(jnp.float32)
+        gb = p["gn_b"].astype(jnp.float32)
+        of = of.reshape(B, T, d) * gw + gb
         out = of.astype(dt) * g
-        return jnp.einsum("btd,de->bte", out, use_weight(rules, p["wo"], ("rwkv_heads", None), dt)), new_state
+        wo = use_weight(rules, p["wo"], ("rwkv_heads", None), dt)
+        return jnp.einsum("btd,de->bte", out, wo), new_state
 
     def _channel_mix(self, p, x, xs, dt, rules=None):
         dx = xs - x
@@ -246,13 +265,18 @@ class Rwkv6LM:
         B = x.shape[0]
         m = self._ddlerp(p, x, xs, dt)
         xr, xk, xv, xg, xw = (m[:, :, i] for i in range(5))
-        r = jnp.einsum("btd,de->bte", xr, use_weight(rules, p["wr"], (None, "rwkv_heads"), dt)).reshape(B, H, N)
-        k = jnp.einsum("btd,de->bte", xk, use_weight(rules, p["wk"], (None, "rwkv_heads"), dt)).reshape(B, H, N)
-        v = jnp.einsum("btd,de->bte", xv, use_weight(rules, p["wv"], (None, "rwkv_heads"), dt)).reshape(B, H, N)
-        g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, use_weight(rules, p["wg"], (None, "rwkv_heads"), dt)))
+        wr = use_weight(rules, p["wr"], (None, "rwkv_heads"), dt)
+        wk = use_weight(rules, p["wk"], (None, "rwkv_heads"), dt)
+        wv = use_weight(rules, p["wv"], (None, "rwkv_heads"), dt)
+        wg = use_weight(rules, p["wg"], (None, "rwkv_heads"), dt)
+        r = jnp.einsum("btd,de->bte", xr, wr).reshape(B, H, N)
+        k = jnp.einsum("btd,de->bte", xk, wk).reshape(B, H, N)
+        v = jnp.einsum("btd,de->bte", xv, wv).reshape(B, H, N)
+        g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, wg))
+        lora = jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_lora_a"].astype(dt)))
         w_raw = p["w_base"].astype(jnp.float32) + jnp.einsum(
             "btr,rd->btd",
-            jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["w_lora_a"].astype(dt))).astype(jnp.float32),
+            lora.astype(jnp.float32),
             p["w_lora_b"].astype(jnp.float32),
         )
         w = jnp.exp(-jnp.exp(jnp.clip(w_raw[:, 0], -8.0, 4.0))).reshape(B, H, N)
@@ -265,4 +289,5 @@ class Rwkv6LM:
             "gn_b"
         ].astype(jnp.float32)
         out = of.astype(dt) * g
-        return jnp.einsum("btd,de->bte", out, use_weight(rules, p["wo"], ("rwkv_heads", None), dt)), new_state
+        wo = use_weight(rules, p["wo"], ("rwkv_heads", None), dt)
+        return jnp.einsum("btd,de->bte", out, wo), new_state

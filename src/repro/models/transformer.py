@@ -127,10 +127,14 @@ class DecoderLM:
 
     def param_specs(self):
         cfg = self.cfg
-        specs: Dict[str, Any] = {"embed": embed_specs(cfg), "final_norm": norm_specs(cfg)}
+        specs: Dict[str, Any] = {
+            "embed": embed_specs(cfg),
+            "final_norm": norm_specs(cfg),
+        }
         if self.period:
+            inner = _stack(self.period - 1, self._layer_specs())
             specs["groups"] = {
-                "self": _stack(self.n_groups, _stack(self.period - 1, self._layer_specs())),
+                "self": _stack(self.n_groups, inner),
                 "cross": _stack(self.n_groups, self._cross_layer_specs()),
             }
         else:
@@ -253,11 +257,14 @@ class DecoderLM:
             }
         else:
             L = cfg.n_layers
+            kv_shape = (L, batch_size, seq_len, Hkv, dh)
             specs = {
-                "k": ParamSpec((L, batch_size, seq_len, Hkv, dh), kv_axes, "zeros", dtype=dt),
-                "v": ParamSpec((L, batch_size, seq_len, Hkv, dh), kv_axes, "zeros", dtype=dt),
+                "k": ParamSpec(kv_shape, kv_axes, "zeros", dtype=dt),
+                "v": ParamSpec(kv_shape, kv_axes, "zeros", dtype=dt),
             }
-        specs["lengths"] = ParamSpec((batch_size,), ("batch",), "zeros", dtype=jnp.int32)
+        specs["lengths"] = ParamSpec(
+            (batch_size,), ("batch",), "zeros", dtype=jnp.int32
+        )
         return specs
 
     def prefill(self, params, batch, rules=None, max_seq: Optional[int] = None):
@@ -321,16 +328,21 @@ class DecoderLM:
                 def inner(carry, step_sl):
                     x = carry
                     lp, kcl, vcl = step_sl
-                    x, kcl, vcl = self._decode_self_layer(rules, lengths, lp, kcl, vcl, x)
+                    x, kcl, vcl = self._decode_self_layer(
+                        rules, lengths, lp, kcl, vcl, x
+                    )
                     return x, (kcl, vcl)
 
-                x, (kc, vc) = scan_stack(inner, x, (gp["self"], kc, vc), cfg, remat=False)
+                x, (kc, vc) = scan_stack(
+                    inner, x, (gp["self"], kc, vc), cfg, remat=False
+                )
                 # cross layer: memory K/V precomputed in the cache
                 h = apply_norm(gp["cross"]["ln1"], x, cfg)
                 from .layers import use_weight as _uw
+                wq = gp["cross"]["attn"]["wq"]
                 q = jnp.einsum(
                     "bsd,dhk->bshk", h,
-                    _uw(rules, gp["cross"]["attn"]["wq"], (None, "heads", None), x.dtype),
+                    _uw(rules, wq, (None, "heads", None), x.dtype),
                 )
                 from ..kernels import ops as _ops
 
@@ -340,9 +352,10 @@ class DecoderLM:
                     jnp.full((x.shape[0],), n_img, jnp.int32),
                     impl=cfg.attention_impl,
                 )
+                wo = gp["cross"]["attn"]["wo"]
                 a = jnp.einsum(
                     "bhk,hkd->bd", o,
-                    _uw(rules, gp["cross"]["attn"]["wo"], ("heads", None, None), x.dtype),
+                    _uw(rules, wo, ("heads", None, None), x.dtype),
                 )[:, None]
                 x = x + self.res_scale * a
                 h2 = apply_norm(gp["cross"]["ln2"], x, cfg)

@@ -73,7 +73,9 @@ class EncDecLM:
         cfg = self.cfg
         return {
             "embed": embed_specs(cfg),
-            "enc_pos": ParamSpec((cfg.enc_len, cfg.d_model), (None, "embed"), scale=0.01),
+            "enc_pos": ParamSpec(
+                (cfg.enc_len, cfg.d_model), (None, "embed"), scale=0.01
+            ),
             "enc_layers": _stack(cfg.enc_layers, self._enc_layer_specs()),
             "enc_norm": norm_specs(cfg, "ln"),
             "dec_layers": _stack(cfg.n_layers, self._dec_layer_specs()),
@@ -93,7 +95,9 @@ class EncDecLM:
 
         def layer(x, lp):
             h = apply_norm(lp["ln1"], x, cfg)
-            a, _ = attention_block(lp["attn"], h, cfg, rules, causal=False, use_rope=False)
+            a, _ = attention_block(
+                lp["attn"], h, cfg, rules, causal=False, use_rope=False
+            )
             x = x + a
             h2 = apply_norm(lp["ln2"], x, cfg)
             return x + mlp_block(lp["mlp"], h2, cfg, rules), None
@@ -108,7 +112,8 @@ class EncDecLM:
         x = x + a
         h2 = apply_norm(lp["ln2"], x, cfg)
         c, ckv = attention_block(
-            lp["cross_attn"], h2, cfg, rules, memory=memory, causal=False, use_rope=False
+            lp["cross_attn"], h2, cfg, rules,
+            memory=memory, causal=False, use_rope=False,
         )
         x = x + c
         h3 = apply_norm(lp["ln3"], x, cfg)
@@ -143,9 +148,10 @@ class EncDecLM:
         L, Hkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
         kv_axes = (None, "batch", "cache_seq", "cache_heads", None)
         cross_axes = (None, "batch", None, "cache_heads", None)
+        kv_shape = (L, batch_size, seq_len, Hkv, dh)
         return {
-            "k": ParamSpec((L, batch_size, seq_len, Hkv, dh), kv_axes, "zeros", dtype=dt),
-            "v": ParamSpec((L, batch_size, seq_len, Hkv, dh), kv_axes, "zeros", dtype=dt),
+            "k": ParamSpec(kv_shape, kv_axes, "zeros", dtype=dt),
+            "v": ParamSpec(kv_shape, kv_axes, "zeros", dtype=dt),
             "cross_k": ParamSpec((L, batch_size, cfg.enc_len, Hkv, dh), cross_axes,
                                  "zeros", dtype=dt),
             "cross_v": ParamSpec((L, batch_size, cfg.enc_len, Hkv, dh), cross_axes,
@@ -158,7 +164,9 @@ class EncDecLM:
         tokens = batch["tokens"]
         B, S = tokens.shape
         max_seq = max_seq or S
-        x, ys = self.forward(params, tokens, batch["audio_embeds"], rules, collect_kv=True)
+        x, ys = self.forward(
+            params, tokens, batch["audio_embeds"], rules, collect_kv=True
+        )
         k, v, ck, cv = ys
         pad = max_seq - S
         if pad > 0:
@@ -184,20 +192,24 @@ class EncDecLM:
             k_new, v_new = decode_kv(lp["self_attn"], h, lengths + 1, cfg, rules)
             kc = _update_cache(kc, k_new, lengths)
             vc = _update_cache(vc, v_new, lengths)
-            a = attention_decode_block(lp["self_attn"], h, kc, vc, lengths + 1, cfg, rules)
+            a = attention_decode_block(
+                lp["self_attn"], h, kc, vc, lengths + 1, cfg, rules
+            )
             x = x + a
             h2 = apply_norm(lp["ln2"], x, cfg)
+            wq = lp["cross_attn"]["wq"]
             q = jnp.einsum(
                 "bsd,dhk->bshk", h2,
-                use_weight(rules, lp["cross_attn"]["wq"], (None, "heads", None), x.dtype),
+                use_weight(rules, wq, (None, "heads", None), x.dtype),
             )
             o = _ops.decode_attention(
                 q[:, 0], ck, cv, jnp.full((x.shape[0],), enc_len, jnp.int32),
                 impl=cfg.attention_impl,
             )
+            wo = lp["cross_attn"]["wo"]
             c = jnp.einsum(
                 "bhk,hkd->bd", o,
-                use_weight(rules, lp["cross_attn"]["wo"], ("heads", None, None), x.dtype),
+                use_weight(rules, wo, ("heads", None, None), x.dtype),
             )[:, None]
             x = x + c
             h3 = apply_norm(lp["ln3"], x, cfg)

@@ -24,7 +24,17 @@ import jax.numpy as jnp
 
 from ..config import ArchConfig
 from ..kernels import ops
-from .layers import apply_norm, cdtype, embed_specs, embed_tokens, label_logprobs, norm_specs, rope, unembed, use_weight
+from .layers import (
+    apply_norm,
+    cdtype,
+    embed_specs,
+    embed_tokens,
+    label_logprobs,
+    norm_specs,
+    rope,
+    unembed,
+    use_weight,
+)
 from .spec import ParamSpec, abstract_params, init_params
 from .transformer import _stack, _update_cache, scan_stack
 
@@ -54,8 +64,12 @@ class ZambaLM:
         d, d_in, H, G, N = cfg.d_model, self.d_in, self.H, self.G, self.N
         return {
             "ln": norm_specs(cfg),
-            "in_proj": ParamSpec((d, 2 * d_in + 2 * G * N + H), ("embed", "ssm_inner")),
-            "conv_w": ParamSpec((_CONV_K, self.conv_dim), (None, "ssm_inner"), scale=0.2),
+            "in_proj": ParamSpec(
+                (d, 2 * d_in + 2 * G * N + H), ("embed", "ssm_inner")
+            ),
+            "conv_w": ParamSpec(
+                (_CONV_K, self.conv_dim), (None, "ssm_inner"), scale=0.2
+            ),
             "conv_b": ParamSpec((self.conv_dim,), ("ssm_inner",), "zeros"),
             "A_log": ParamSpec((H,), ("ssm_heads",), "constant", scale=0.0),
             "D": ParamSpec((H,), ("ssm_heads",), "ones"),
@@ -131,12 +145,16 @@ class ZambaLM:
         xc = conv_out[..., :d_in]
         Bm = conv_out[..., d_in : d_in + G * N].reshape(B_, T, G, N)
         Cm = conv_out[..., d_in + G * N :].reshape(B_, T, G, N)
-        dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+        dtv = jax.nn.softplus(
+            dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32)
+        )
         A = -jnp.exp(lp["A_log"].astype(jnp.float32))
         y, new_state = ops.ssd(
             xc.reshape(B_, T, H, P), dtv, A, Bm, Cm, lp["D"].astype(jnp.float32),
             ssm_state, chunk=cfg.ssd_chunk,
-            impl="xla" if cfg.attention_impl in ("xla", "naive") else cfg.attention_impl,
+            impl="xla"
+            if cfg.attention_impl in ("xla", "naive")
+            else cfg.attention_impl,
         )
         y = y.reshape(B_, T, d_in)
         # gated RMSNorm (mamba2 norm)
@@ -188,21 +206,26 @@ class ZambaLM:
         Hh, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
         u = jnp.concatenate([x, emb0], axis=-1)
         h = apply_norm(sp["ln1"], u, cfg)
-        q = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wq"], (None, "heads", None), dt))
+        wq = use_weight(rules, sp["wq"], (None, "heads", None), dt)
+        q = jnp.einsum("btd,dhk->bthk", h, wq)
         q = q + jnp.einsum(
             "btr,re->bte", jnp.einsum("btd,dr->btr", h, lora["q_a"].astype(dt)),
             lora["q_b"].astype(dt),
         ).reshape(B_, T, Hh, dh)
-        k = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wk"], (None, "kv_heads", None), dt))
-        v = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wv"], (None, "kv_heads", None), dt))
+        wk = use_weight(rules, sp["wk"], (None, "kv_heads", None), dt)
+        wv = use_weight(rules, sp["wv"], (None, "kv_heads", None), dt)
+        k = jnp.einsum("btd,dhk->bthk", h, wk)
+        v = jnp.einsum("btd,dhk->bthk", h, wv)
         pos = positions if positions is not None else jnp.arange(T)
         q = rope(q, pos, cfg.rope_theta)
         k = rope(k, pos, cfg.rope_theta)
         o = ops.attention(q, k, v, causal=True, impl=cfg.attention_impl,
                           block_k=cfg.attention_block_k)
-        a = jnp.einsum("bthk,hkd->btd", o, use_weight(rules, sp["wo"], ("heads", None, None), dt))
+        wo = use_weight(rules, sp["wo"], ("heads", None, None), dt)
+        a = jnp.einsum("bthk,hkd->btd", o, wo)
         h2 = apply_norm(sp["ln2"], u, cfg)
-        m = jnp.einsum("btd,df->btf", h2, use_weight(rules, sp["w1"], (None, "mlp"), dt))
+        w1 = use_weight(rules, sp["w1"], (None, "mlp"), dt)
+        m = jnp.einsum("btd,df->btf", h2, w1)
         m = m + jnp.einsum(
             "btr,rf->btf", jnp.einsum("btd,dr->btr", h2, lora["m_a"].astype(dt)),
             lora["m_b"].astype(dt),
@@ -218,21 +241,26 @@ class ZambaLM:
         Hh, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
         u = jnp.concatenate([x, emb0], axis=-1)
         h = apply_norm(sp["ln1"], u, cfg)
-        q = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wq"], (None, "heads", None), dt))
+        wq = use_weight(rules, sp["wq"], (None, "heads", None), dt)
+        q = jnp.einsum("btd,dhk->bthk", h, wq)
         q = q + jnp.einsum(
             "btr,re->bte", jnp.einsum("btd,dr->btr", h, lora["q_a"].astype(dt)),
             lora["q_b"].astype(dt),
         ).reshape(B_, 1, Hh, dh)
-        k = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wk"], (None, "kv_heads", None), dt))
-        v = jnp.einsum("btd,dhk->bthk", h, use_weight(rules, sp["wv"], (None, "kv_heads", None), dt))
+        wk = use_weight(rules, sp["wk"], (None, "kv_heads", None), dt)
+        wv = use_weight(rules, sp["wv"], (None, "kv_heads", None), dt)
+        k = jnp.einsum("btd,dhk->bthk", h, wk)
+        v = jnp.einsum("btd,dhk->bthk", h, wv)
         q = rope(q, (lengths)[:, None], cfg.rope_theta)
         k = rope(k, (lengths)[:, None], cfg.rope_theta)
         kc = _update_cache(kc, k, lengths)
         vc = _update_cache(vc, v, lengths)
         o = ops.decode_attention(q[:, 0], kc, vc, lengths + 1, impl=cfg.attention_impl)
-        a = jnp.einsum("bhk,hkd->bd", o, use_weight(rules, sp["wo"], ("heads", None, None), dt))[:, None]
+        wo = use_weight(rules, sp["wo"], ("heads", None, None), dt)
+        a = jnp.einsum("bhk,hkd->bd", o, wo)[:, None]
         h2 = apply_norm(sp["ln2"], u, cfg)
-        m = jnp.einsum("btd,df->btf", h2, use_weight(rules, sp["w1"], (None, "mlp"), dt))
+        w1 = use_weight(rules, sp["w1"], (None, "mlp"), dt)
+        m = jnp.einsum("btd,df->btf", h2, w1)
         m = m + jnp.einsum(
             "btr,rf->btf", jnp.einsum("btd,dr->btr", h2, lora["m_a"].astype(dt)),
             lora["m_b"].astype(dt),
@@ -267,7 +295,9 @@ class ZambaLM:
                 return x, (ssm, conv, kv["k"], kv["v"])
             return x, None
 
-        x, ys = scan_stack(group_fn, x, (params["mamba_g"], params["lora"]), cfg, remat=False)
+        x, ys = scan_stack(
+            group_fn, x, (params["mamba_g"], params["lora"]), cfg, remat=False
+        )
         ys_x = None
         if self.n_extra:
             def inner_x(x, lp):
@@ -308,11 +338,13 @@ class ZambaLM:
             "lengths": ParamSpec((batch_size,), ("batch",), "zeros", dtype=jnp.int32),
         }
         if self.n_extra:
-            specs["ssm_x"] = ParamSpec((self.n_extra, batch_size, self.H, self.P, self.N),
-                                       (None, "batch", "ssm_heads", None, None),
-                                       "zeros", dtype=jnp.float32)
-            specs["conv_x"] = ParamSpec((self.n_extra, batch_size, _CONV_K - 1, self.conv_dim),
-                                        (None, "batch", None, "ssm_inner"),
+            specs["ssm_x"] = ParamSpec(
+                (self.n_extra, batch_size, self.H, self.P, self.N),
+                (None, "batch", "ssm_heads", None, None),
+                "zeros", dtype=jnp.float32)
+            specs["conv_x"] = ParamSpec(
+                (self.n_extra, batch_size, _CONV_K - 1, self.conv_dim),
+                (None, "batch", None, "ssm_inner"),
                                         "zeros", dtype=dt)
         return specs
 

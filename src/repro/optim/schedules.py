@@ -18,7 +18,9 @@ def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1)
     return lr
 
 
-def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int, floor: float = 0.01):
+def wsd_schedule(
+    peak_lr: float, warmup: int, stable: int, decay: int, floor: float = 0.01
+):
     """Warmup -> flat -> short exponential-ish (linear here) decay.
 
     MiniCPM (arXiv:2404.06395) trains with WSD so checkpoints in the stable

@@ -99,7 +99,11 @@ def make_rules(cfg: ArchConfig, mesh: Mesh) -> LogicalRules:
         "seq": None,  # activation sequence dim (train): stays unsharded
         "enc_seq": None,
         "ssm_heads": ("model",)
-        if (cfg.ssm_state > 0 and (cfg.ssm_expand * cfg.d_model // max(cfg.ssm_head_dim, 1)) % model == 0)
+        if (
+            cfg.ssm_state > 0
+            and (cfg.ssm_expand * cfg.d_model // max(cfg.ssm_head_dim, 1)) % model
+            == 0
+        )
         else None,
         "ssm_inner": ("model",),
         "rwkv_heads": ("model",)
@@ -108,7 +112,11 @@ def make_rules(cfg: ArchConfig, mesh: Mesh) -> LogicalRules:
     }
     # KV-cache head sharding: only if kv heads divide model AND we are not
     # already sharding the cache on seq (avoid double-sharding conflicts).
-    if not cfg.seq_shard_cache and cfg.n_kv_heads % model == 0 and cfg.n_kv_heads >= model:
+    if (
+        not cfg.seq_shard_cache
+        and cfg.n_kv_heads % model == 0
+        and cfg.n_kv_heads >= model
+    ):
         table["cache_heads"] = ("model",)
     return LogicalRules(table, mesh)
 

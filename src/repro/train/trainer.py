@@ -71,7 +71,9 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def init_state(self, rng=None):
-        params = self.bundle.model.init(rng if rng is not None else jax.random.PRNGKey(0))
+        params = self.bundle.model.init(
+            rng if rng is not None else jax.random.PRNGKey(0)
+        )
         opt = self.bundle.optimizer.init(params)
         return params, opt
 

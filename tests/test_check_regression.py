@@ -21,13 +21,20 @@ from benchmarks.check_regression import check, collect_metrics, main
 
 
 def _write_results(
-    tmp_path, jax_policies=None, tcp_policies=None, udp=None, fault_policies=None
+    tmp_path,
+    jax_policies=None,
+    tcp_policies=None,
+    udp=None,
+    fault_policies=None,
+    sack_policies=None,
 ):
     results = tmp_path / "quick"
     results.mkdir(exist_ok=True)
     sweep = {"policies": jax_policies or {}}
     if tcp_policies is not None:
         sweep["tcp"] = {"policies": tcp_policies}
+    if sack_policies is not None:
+        sweep["tcp_sack"] = {"policies": sack_policies}
     (results / "jax_sweep.json").write_text(json.dumps(sweep))
     if udp is not None:
         ps = {"workloads": {"udp": udp, "mawi": {}}}
@@ -287,6 +294,88 @@ def test_zero_wedged_baseline_is_an_exact_invariant_gate(tmp_path):
     )
     fails = check(bad, base, 100.0)
     assert len(fails) == 1 and "wedged_lanes regressed" in fails[0]
+
+
+def test_collect_metrics_tcp_sack_rows(tmp_path):
+    # the SACK lossy leg flattens next to the main TCP grid, carrying
+    # its delivery-invariant counter alongside the FCT/throughput rows
+    results = _write_results(
+        tmp_path,
+        sack_policies={
+            "corec": {
+                "fct_p50": 2723.1,
+                "fct_p99": 2730.0,
+                "lane_points_per_s": 15.0,
+                "sack_undelivered": 0,
+                "retx_per_lane": 24.0,
+            }
+        },
+    )
+    got = collect_metrics(results)
+    assert got["jax_sweep/tcp_sack/corec"] == {
+        "fct_p50": 2723.1,
+        "fct_p99": 2730.0,
+        "lane_points_per_s": 15.0,
+        "sack_undelivered": 0,
+    }
+
+
+def test_zero_sack_undelivered_baseline_is_an_exact_invariant(tmp_path):
+    # sack_undelivered baseline 0: one unrepaired hole fails at ANY
+    # tolerance — a scoreboard that stops delivering is breakage, not
+    # drift — while a clean lossy leg passes under the normal band
+    base = _baselines(
+        tmp_path,
+        {
+            "jax_sweep/tcp_sack/corec": {
+                "fct_p50": 2700.0,
+                "sack_undelivered": 0,
+            }
+        },
+    )
+    ok = _write_results(
+        tmp_path,
+        sack_policies={"corec": {"fct_p50": 2850.0, "sack_undelivered": 0}},
+    )
+    assert check(ok, base, 2.0) == []
+    bad = _write_results(
+        tmp_path,
+        sack_policies={"corec": {"fct_p50": 2700.0, "sack_undelivered": 1}},
+    )
+    fails = check(bad, base, 100.0)
+    assert len(fails) == 1 and "sack_undelivered regressed" in fails[0]
+
+
+def test_tcp_sack_row_missing_from_results_fails_by_name(tmp_path):
+    # a jax_sweep.json without the tcp_sack section (the lossy leg
+    # silently dropped) must fail the guard, not pass vacuously
+    results = _write_results(
+        tmp_path, jax_policies={"corec": {"p50_median": 0.1}}
+    )
+    base = _baselines(
+        tmp_path,
+        {"jax_sweep/tcp_sack/corec": {"fct_p50": 2700.0, "sack_undelivered": 0}},
+    )
+    fails = check(results, base, 2.0)
+    assert fails == ["jax_sweep/tcp_sack/corec: missing from quick results"]
+
+
+def test_tcp_sack_throughput_floor_boundary(tmp_path):
+    # lane_points_per_s on the SACK leg gates one-sided like the main
+    # grid: exactly baseline * floor passes, one ulp below fails
+    base = _baselines(
+        tmp_path,
+        {"jax_sweep/tcp_sack/corec": {"lane_points_per_s": 10.0}},
+    )
+    at_floor = _write_results(
+        tmp_path, sack_policies={"corec": {"lane_points_per_s": 5.0}}
+    )
+    assert check(at_floor, base, 2.0, throughput_floor=0.5) == []
+    below = _write_results(
+        tmp_path, sack_policies={"corec": {"lane_points_per_s": 4.999}}
+    )
+    fails = check(below, base, 2.0, throughput_floor=0.5)
+    assert len(fails) == 1 and "lane_points_per_s regressed" in fails[0]
 
 
 @pytest.mark.parametrize("ok", [True, False])

@@ -1,0 +1,201 @@
+"""SACK scoreboard recovery: jax lane engine vs the DES TCP plane.
+
+Covers the SACK-mode guarantees of the batched-event TCP engine
+(:mod:`repro.core.tcpjax` with ``tcp_params={"sack": True}``) and its
+DES mirror (:class:`repro.core.tcp.TcpSimConfig` ``sack=True``):
+
+* multi-hole recovery is surgical: under a deterministic loss schedule
+  the retransmission bitmap resends exactly the dropped segments — no
+  spurious full-window retransmit, no RTO when the holes are FACK-
+  visible,
+* DES-vs-jax FCT distributional parity holds for all five registry
+  policies with SACK on and receiver loss injected,
+* the receiver-side delivery invariant: every completed flow delivered
+  its whole (budget-clamped) payload despite the holes,
+* SACK off is the NewReno path, bit for bit: the knob defaults off and
+  ``sack=False`` is IEEE-identical to not passing the knob at all.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import SweepRequest, jax_policies, run_sweep  # noqa: E402
+from repro.core.jaxplane import rss_hash32  # noqa: E402
+from repro.core.tcp import TcpSimConfig, simulate_tcp  # noqa: E402
+from repro.core.tcpjax import run_tcp_lanes  # noqa: E402
+
+JAX_POLS = jax_policies()
+N_WORKERS = 4
+
+P50_RTOL = 0.15
+P99_RTOL = 0.35
+
+#: loss period for the parity/scoreboard tests, chosen so the last
+#: hole sits > reorder_thresh segments before the flow tail — tail
+#: losses are invisible to FACK (nothing sails past them) and would
+#: turn every test into an RTO test
+LOSS_EVERY = 10
+
+
+def _drops(n_pkts: int, loss_every: int = LOSS_EVERY) -> list[int]:
+    return [s for s in range(n_pkts) if (s + 1) % loss_every == 0]
+
+
+# ---------------------------------------------------------------------
+# Multi-hole loss schedule: the bitmap retransmits exactly the holes
+# ---------------------------------------------------------------------
+def test_multi_hole_retx_bitmap_resends_exactly_the_holes():
+    npk = 64
+    holes = _drops(npk)
+    assert len(holes) >= 4  # multi-hole, not a single-loss episode
+    res = run_tcp_lanes(
+        "corec",
+        np.arange(4),
+        n_pkts=npk,
+        tcp_params=dict(sack=True, loss_every=LOSS_EVERY),
+    )
+    assert np.asarray(res.done).all()
+    retx = np.asarray(res.retransmissions)
+    # surgical recovery: one retransmission per hole, nothing else —
+    # a full-window (go-back-N) retransmit would dwarf len(holes)
+    assert (retx == len(holes)).all(), retx
+    assert (np.asarray(res.spurious) == 0).all()
+    # and no RTO fired: FCT stays an order of magnitude below the
+    # 5000us timer on this link
+    assert (np.asarray(res.fct) < 2500.0).all()
+    # the receiver ended with the complete payload
+    assert (np.asarray(res.delivered) == npk).all()
+
+
+def test_multi_hole_des_mirror_matches_hole_count():
+    npk = 64
+    holes = _drops(npk)
+    for seed in range(3):
+        cfg = TcpSimConfig(
+            policy="corec", sack=True, loss_every=LOSS_EVERY, seed=seed
+        )
+        (r,) = simulate_tcp([(0, npk, 0.0)], cfg)
+        assert r.retransmissions == len(holes), (seed, r.retransmissions)
+        assert r.spurious == 0
+        assert r.fct < 2500.0
+
+
+def test_sack_beats_newreno_under_multi_hole_loss():
+    # the reason the scoreboard exists: NewReno retransmits one hole
+    # per RTT (or times out); SACK repairs them all in ~one episode
+    npk = 64
+    sack = run_tcp_lanes(
+        "corec",
+        np.arange(3),
+        n_pkts=npk,
+        tcp_params=dict(sack=True, loss_every=7),
+    )
+    reno = run_tcp_lanes(
+        "corec",
+        np.arange(3),
+        n_pkts=npk,
+        tcp_params=dict(sack=False, loss_every=7),
+    )
+    assert np.asarray(sack.done).all() and np.asarray(reno.done).all()
+    assert np.mean(np.asarray(sack.fct)) < 0.5 * np.mean(np.asarray(reno.fct))
+
+
+# ---------------------------------------------------------------------
+# DES-vs-jax FCT distributional parity, SACK on + loss injected
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("name", JAX_POLS)
+def test_sack_distributional_parity_with_des_plane(name):
+    n_flows, npk = 8, 55
+    n_pkts = np.full(n_flows, npk)
+    t_start = np.arange(n_flows) * 4.0
+    flows = [(i, npk, float(t_start[i])) for i in range(n_flows)]
+    hints = {
+        i: int(h) for i, h in enumerate(rss_hash32(np.arange(n_flows), N_WORKERS))
+    }
+    res = run_sweep(
+        SweepRequest(
+            scenario="tcp",
+            policies=[name],
+            seeds=np.arange(6),
+            tcp_params=dict(sack=True, loss_every=LOSS_EVERY),
+            n_packets=n_pkts,
+            t_start=t_start,
+            n_workers=N_WORKERS,
+        )
+    )[name]
+    assert np.asarray(res.done).all()
+    j = np.asarray(res.fct).ravel()
+    d = []
+    for seed in range(3):
+        cfg = TcpSimConfig(
+            policy=name,
+            n_workers=N_WORKERS,
+            sack=True,
+            loss_every=LOSS_EVERY,
+            seed=seed,
+            queue_hints=hints,
+        )
+        d += [r.fct for r in simulate_tcp(flows, cfg)]
+    d = np.asarray(d)
+    j50, j99 = np.percentile(j, 50), np.percentile(j, 99)
+    d50, d99 = np.percentile(d, 50), np.percentile(d, 99)
+    assert j50 == pytest.approx(d50, rel=P50_RTOL), (name, j50, d50)
+    assert j99 == pytest.approx(d99, rel=P99_RTOL), (name, j99, d99)
+
+
+# ---------------------------------------------------------------------
+# Delivery invariant + per-lane packet budget
+# ---------------------------------------------------------------------
+def test_delivered_tracks_packet_budget():
+    res = run_tcp_lanes(
+        "corec",
+        np.arange(3),
+        n_pkts=64,
+        tcp_params=dict(pkt_budget=np.array([1 << 30, 16, 40])),
+    )
+    assert np.asarray(res.done).all()
+    delivered = np.asarray(res.delivered)[:, 0]
+    assert delivered.tolist() == [64, 16, 40]
+    # DES mirror of the clamp
+    (r,) = simulate_tcp(
+        [(0, 64, 0.0)], TcpSimConfig(policy="corec", pkt_budget=16)
+    )
+    assert r.n_packets == 16 and r.fct > 0
+
+
+def test_sack_delivery_invariant_under_loss():
+    res = run_tcp_lanes(
+        "corec",
+        np.arange(4),
+        n_pkts=50,
+        tcp_params=dict(sack=True, loss_every=LOSS_EVERY, pkt_budget=50),
+    )
+    assert np.asarray(res.done).all()
+    undelivered = int((50 - np.asarray(res.delivered)).sum())
+    assert undelivered == 0
+
+
+# ---------------------------------------------------------------------
+# SACK off is the untouched NewReno path, bit for bit
+# ---------------------------------------------------------------------
+def test_sack_off_is_bit_identical_to_default():
+    base = run_tcp_lanes("corec", np.arange(4), n_pkts=90)
+    off = run_tcp_lanes(
+        "corec", np.arange(4), n_pkts=90, tcp_params=dict(sack=False)
+    )
+    for a, b in zip(base, off):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sack_static_knob_requires_scalar():
+    with pytest.raises(ValueError, match="sack"):
+        run_tcp_lanes(
+            "corec",
+            np.arange(2),
+            n_pkts=40,
+            tcp_params=dict(sack=np.array([0.0, 1.0])),
+        )
