@@ -41,7 +41,15 @@ open-loop serving rows from ``serving_sweep.json``
 (``serving_sweep/<policy>``) gate ``p99_median`` under the latency
 tolerance and ``slo_attainment`` one-sided as a floor (it lives in
 THROUGHPUT_METRICS: attainment *dropping* below baseline * floor
-fails, improving never does).
+fails, improving never does).  The retry-storm rows from
+``overload_sweep.json`` (``overload_sweep/<policy>``) gate
+``graceful_goodput_ratio`` as a floor (backoff + breaker must keep
+goodput near the healthy baseline), ``metastable_lanes`` whose 0-valued
+baseline is an exact invariant (a graceful lane falling off the
+metastable cliff fails the guard outright), and
+``naive_goodput_ratio`` under the latency tolerance — its baseline is
+the *collapsed* value, so the naive cliff *disappearing* (ratio rising)
+fails too: the demonstration is part of the contract.
 
 Usage (CI):
     python -m benchmarks.check_regression \
@@ -60,7 +68,9 @@ from pathlib import Path
 HERE = Path(__file__).resolve().parent
 
 #: metrics where bigger is better: gated one-sided against a floor
-THROUGHPUT_METRICS = frozenset({"lane_points_per_s", "slo_attainment"})
+THROUGHPUT_METRICS = frozenset(
+    {"lane_points_per_s", "slo_attainment", "graceful_goodput_ratio"}
+)
 
 
 def _load(path: Path) -> dict:
@@ -127,6 +137,19 @@ def collect_metrics(results_dir: Path) -> dict:
             out[f"serving_sweep/{pol}"] = {
                 m: row[m]
                 for m in ("slo_attainment", "p99_median")
+                if row.get(m) is not None
+            }
+    ov = results_dir / "overload_sweep.json"
+    if ov.exists():
+        sweep = _load(ov)
+        for pol, row in sweep.get("policies", {}).items():
+            out[f"overload_sweep/{pol}"] = {
+                m: row[m]
+                for m in (
+                    "graceful_goodput_ratio",
+                    "naive_goodput_ratio",
+                    "metastable_lanes",
+                )
                 if row.get(m) is not None
             }
     return out

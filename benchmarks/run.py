@@ -53,6 +53,7 @@ def main(argv=None) -> None:
         ("jax_sweep", {}, dict(n_packets=400, tcp_pkts=96)),  # vectorized jax plane
         ("fault_sweep", {}, dict(n_packets=400, n_seeds=3)),  # degraded mode
         ("serving_sweep", {}, dict(capacity=200, n_seeds=2)),  # open-loop serving
+        ("overload_sweep", {}, dict(capacity=200, n_seeds=3)),  # retry storms
         ("kernels_bench", {}, None),  # Pallas kernel analytics
         ("serving_bench", {}, None),  # framework-level COREC serving
         ("roofline", {}, None),  # dry-run aggregation (section Roofline)

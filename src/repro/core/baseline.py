@@ -61,12 +61,18 @@ class ScaleOutDriver:
     """
 
     def __init__(
-        self, n_queues: int, size: int, lease_timeout: Optional[float] = None
+        self,
+        n_queues: int,
+        size: int,
+        lease_timeout: Optional[float] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.n_queues = n_queues
         self.lease_timeout = lease_timeout
+        ck = {} if clock is None else {"clock": clock}
         self.rings = [
-            CorecRing(size, lease_timeout=lease_timeout) for _ in range(n_queues)
+            CorecRing(size, lease_timeout=lease_timeout, **ck)
+            for _ in range(n_queues)
         ]
         # Worker ids the chaos harness declared dead.  The WorkerPool
         # shares its own list object here so crash notifications are
@@ -158,13 +164,18 @@ class LockedSharedQueue:
     ring op.  A hook that raises ``WorkerCrash`` models the holder dying
     mid-claim — deliberately no try/finally, so the mutex stays locked
     forever and every peer wedges: a lease cannot help a design whose
-    claim is a critical section (``lease_timeout`` is accepted and
-    ignored for interface parity).  ``abort_wait()`` (also harness-set)
+    claim is a critical section (``lease_timeout`` / ``clock`` are
+    accepted and ignored for interface parity).  ``abort_wait()`` (also harness-set)
     lets blocked waiters poll for shutdown instead of hanging the host
     process on a dead mutex.
     """
 
-    def __init__(self, size: int, lease_timeout: Optional[float] = None):
+    def __init__(
+        self,
+        size: int,
+        lease_timeout: Optional[float] = None,
+        clock: Optional[Callable[[], float]] = None,
+    ):
         self.ring = CorecRing(size)
         self._mutex = threading.Lock()
         self.fault_hook: Optional[Callable[[int], None]] = None
@@ -216,8 +227,14 @@ class LockedSharedQueue:
 class CorecSharedQueue:
     """Adapter giving ``CorecRing`` the same (worker-indexed) surface."""
 
-    def __init__(self, size: int, lease_timeout: Optional[float] = None):
-        self.ring = CorecRing(size, lease_timeout=lease_timeout)
+    def __init__(
+        self,
+        size: int,
+        lease_timeout: Optional[float] = None,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        ck = {} if clock is None else {"clock": clock}
+        self.ring = CorecRing(size, lease_timeout=lease_timeout, **ck)
 
     def produce(self, payload: Any, flow_key: int = 0) -> bool:
         return self.ring.produce(payload)
@@ -260,9 +277,13 @@ class HybridStealDriver(ScaleOutDriver):
     """
 
     def __init__(
-        self, n_queues: int, size: int, lease_timeout: Optional[float] = None
+        self,
+        n_queues: int,
+        size: int,
+        lease_timeout: Optional[float] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
-        super().__init__(n_queues, size, lease_timeout=lease_timeout)
+        super().__init__(n_queues, size, lease_timeout=lease_timeout, clock=clock)
         self._steal_src = [-1] * n_queues  # last foreign ring per worker
         self.steals = 0  # diagnostic only (benign count race)
 
@@ -313,8 +334,9 @@ class AdaptiveBatchSharedQueue(CorecSharedQueue):
         min_batch: int = 1,
         max_batch: Optional[int] = None,
         lease_timeout: Optional[float] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
-        super().__init__(size, lease_timeout=lease_timeout)
+        super().__init__(size, lease_timeout=lease_timeout, clock=clock)
         self.n_workers = max(1, n_workers)
         self.min_batch = max(1, min_batch)
         self.max_batch = max_batch

@@ -22,6 +22,16 @@ dies mid-claim loses the done-marks of its whole batch and the helper
 that reclaims the expired lease re-serves every item in it — duplicates
 are bounded by one batch per fault, and exactly-once continues to hold
 everywhere else.  See README "Failure semantics".
+
+The module also owns the *stochastic impairment* RNG shared by the
+planes: :func:`hash_u01` is a counter-based uniform draw (two murmur3
+finalizer rounds over ``(seed, a, b)``) whose jax mirror
+(``tcpjax._hash_u01`` / ``jaxplane._hash_u01``) is bit-identical, so a
+random-loss or retry-jitter schedule keyed on stable identifiers
+(flow + sequence block, request + attempt) is the SAME schedule on the
+DES and jax planes for the same seed — no RNG-stream bookkeeping, and
+lanes stay vmappable because every draw is a pure function of its
+counters.
 """
 
 from __future__ import annotations
@@ -37,6 +47,8 @@ __all__ = [
     "FAULT_KINDS",
     "FAULT_POINTS",
     "faults_by_worker",
+    "mix32",
+    "hash_u01",
 ]
 
 #: ``crash``     — the worker dies at the injection point and never returns.
@@ -55,6 +67,38 @@ FAULT_KINDS = ("crash", "stall", "straggler")
 #:                 the done bits are lost, so a lease reclaim re-delivers
 #:                 the whole batch (the duplicate-visible case).
 FAULT_POINTS = ("pre", "hold", "post-work")
+
+
+_M32 = 0xFFFFFFFF
+
+
+def mix32(h: int) -> int:
+    """murmur3 fmix32 finalizer over a uint32 (pure-Python mirror).
+
+    Must stay in lockstep with the jnp mirrors in ``tcpjax`` /
+    ``jaxplane``: same constants, same shift pattern, 32-bit wrapping.
+    """
+    h &= _M32
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & _M32
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & _M32
+    h ^= h >> 16
+    return h
+
+
+def hash_u01(seed: int, a: int, b: int) -> float:
+    """Counter-based uniform draw in [0, 1) keyed on (seed, a, b).
+
+    The cross-plane impairment RNG: two fmix32 rounds, each counter
+    pre-scaled by an odd constant so adjacent (a, b) pairs decorrelate.
+    Impairment processes compare ``hash_u01(...) < rate`` with strict
+    ``<`` so ``rate == 0.0`` is an *exact* identity (no draw ever
+    fires), preserving the bit-identical knob-off convention.
+    """
+    h = mix32((seed & _M32) ^ ((a * 0x9E3779B1) & _M32))
+    h = mix32(h ^ ((b * 0x85EBCA77) & _M32))
+    return h * (1.0 / 4294967296.0)
 
 
 class WorkerCrash(Exception):

@@ -79,6 +79,7 @@ run in-graph.
 from __future__ import annotations
 
 import functools
+import math
 import time
 import warnings
 from typing import NamedTuple, Tuple
@@ -96,6 +97,7 @@ __all__ = [
     "TrafficParams",
     "FaultParams",
     "ServingParams",
+    "OverloadConfig",
     "LaneResult",
     "ClaimRecord",
     "JAX_POLICIES",
@@ -239,6 +241,7 @@ class ServingParams(NamedTuple):
     scale_backlog: jnp.ndarray  # fp32 backlog per extra worker (+inf = off)
     horizon: jnp.ndarray  # fp32 arrival-generation cutoff (+inf = open)
     slo_target: jnp.ndarray  # fp32 sojourn target (+inf = any delivery)
+    drop_rate: jnp.ndarray  # fp32 response-loss probability (0.0 = off)
 
 
 def default_serving_params(**kw) -> dict:
@@ -248,9 +251,104 @@ def default_serving_params(**kw) -> dict:
         scale_backlog=jnp.inf,
         horizon=jnp.inf,
         slo_target=jnp.inf,
+        drop_rate=0.0,
     )
     d.update(kw)
     return d
+
+
+class OverloadConfig(NamedTuple):
+    """Python-STATIC client/overload knobs for one serving segment.
+
+    Unlike :class:`ServingParams` these are compile-time scalars (like
+    ``sack`` / ``send_burst`` on the TCP plane): retry copies change
+    array shapes and the breaker / latency-gate branches compile only
+    when armed, so control-free lanes stay IEEE-bit-identical to the
+    pre-overload engine.  Every knob is an exact identity at its
+    default.
+
+    ``timeout``
+        client deadline per attempt: a response later than
+        ``arrival + timeout`` counts ``expired`` instead of delivered.
+    ``retries`` / ``backoff`` / ``jitter``
+        client retry policy: attempt ``j`` (1-based) re-submits after
+        a further ``timeout + (backoff + jitter * u_j) * 2**(j-1)``
+        where ``u_j`` is the counter-hash draw on (lane seed, request,
+        j) — ``backoff=jitter=0`` is the naive fixed-interval retry
+        storm.  Retries model a no-cancellation worst case: the server
+        serves every copy it admits, timely or not.
+    ``hedge``
+        speculative duplicate submitted ``hedge`` after the original
+        (0 = off).
+    ``breaker_age``
+        circuit breaker (brownout): a claiming worker whose queue head
+        has been waiting longer than this sheds the whole claim (up to
+        ``max_batch``) instead of serving work that would expire
+        anyway.
+    ``scale_latency``
+        latency-reactive autoscale: workers above ``base_workers``
+        wake while the lane's *measured* in-graph p99 sojourn estimate
+        exceeds this, replacing the ``scale_backlog`` queue-length
+        gate.
+    """
+
+    timeout: float = math.inf
+    retries: int = 0
+    backoff: float = 0.0
+    jitter: float = 0.0
+    hedge: float = 0.0
+    breaker_age: float = math.inf
+    scale_latency: float = math.inf
+
+    @property
+    def cpr(self) -> int:
+        """Copies per request (original + retries + optional hedge)."""
+        return 1 + self.retries + (1 if self.hedge > 0 else 0)
+
+    @property
+    def extended(self) -> bool:
+        """Whether request-level (copy-expanded) accounting is armed."""
+        return self.cpr > 1 or math.isfinite(self.timeout)
+
+
+_OV_OFF = OverloadConfig()
+
+#: seed salt separating response-loss draws from retry-jitter draws
+_DROP_SALT = 0xA5A5A5A5
+
+
+def _pop_overload(sp: dict) -> OverloadConfig:
+    """Pop the static overload knobs out of a serving_params dict.
+
+    Mirrors the ``sack`` / ``send_burst`` pattern: these knobs must be
+    python scalars (static), not lane arrays, and are validated here so
+    a swept array fails loudly instead of retracing per value.
+    """
+    kw = {}
+    if "retries" in sp:
+        r = sp.pop("retries")
+        if not isinstance(r, int) or isinstance(r, bool) or r < 0:
+            raise ValueError("serving_params['retries'] must be an int >= 0 (static)")
+        kw["retries"] = r
+    for name, low in (
+        ("timeout", 0.0),
+        ("backoff", 0.0),
+        ("jitter", 0.0),
+        ("hedge", 0.0),
+        ("breaker_age", 0.0),
+        ("scale_latency", 0.0),
+    ):
+        if name in sp:
+            v = sp.pop(name)
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                raise ValueError(
+                    f"serving_params[{name!r}] must be a scalar float (static)"
+                )
+            v = float(v)
+            if not v >= low or (v == 0.0 and name in ("timeout", "breaker_age")):
+                raise ValueError(f"serving_params[{name!r}] must be > 0")
+            kw[name] = v
+    return OverloadConfig(**kw)
 
 
 class LaneResult(NamedTuple):
@@ -274,9 +372,19 @@ class LaneResult(NamedTuple):
     undelivered: jnp.ndarray  # items never delivered (wedged lanes only)
     drain_t: jnp.ndarray  # last *finite* completion time (recovery edge)
     # -- serving-mode outputs (offered == n, shed == 0 off serving mode)
-    offered: jnp.ndarray  # arrivals inside the generation horizon
-    shed: jnp.ndarray  # requests dropped by admission control
+    offered: jnp.ndarray  # REQUESTS arriving inside the generation horizon
+    shed: jnp.ndarray  # attempt copies dropped by admission / breaker
     slo_attained: jnp.ndarray  # fraction of offered meeting slo_target
+    # -- overload-plane outputs (identities off serving / control mode:
+    #    attempts == offered copies, delivered == goodput == items,
+    #    expired == dup_served == 0).  Accounting invariants:
+    #    claimed_popcount == delivered + expired + shed and
+    #    delivered == goodput + dup_served.
+    attempts: jnp.ndarray  # attempt copies offered (requests x retry fan-out)
+    delivered: jnp.ndarray  # served copies answered in time and not lost
+    expired: jnp.ndarray  # served copies past their deadline or lost
+    goodput: jnp.ndarray  # unique requests with >= 1 timely response
+    dup_served: jnp.ndarray  # timely responses beyond the first per request
 
 
 # ----------------------------------------------------------------------
@@ -334,6 +442,25 @@ def rss_hash32(key, n_queues: int):
     h = h * np.uint32(0xC2B2AE35)
     h = h ^ (h >> np.uint32(16))
     return h % np.uint32(n_queues)
+
+
+def hash_u01(seed, a, b):
+    """jnp mirror of :func:`repro.core.faults.hash_u01` (same bits).
+
+    Counter-based uniform draw in [0, 1) keyed on ``(seed, a, b)`` —
+    the impairment RNG shared across planes.  The unit scale is exact
+    (rounding ``h`` to fp32 then scaling by a power of two equals
+    rounding ``h * 2**-32`` to fp32), so ``hash_u01(...) < rate``
+    agrees bit-for-bit with the DES mirror when the DES side compares
+    through ``np.float32``.  Strict ``<`` makes ``rate == 0.0`` an
+    exact never-fires identity.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    a = jnp.asarray(a).astype(jnp.uint32)
+    b = jnp.asarray(b).astype(jnp.uint32)
+    h = _fmix32(seed ^ (a * jnp.uint32(0x9E3779B1)))
+    h = _fmix32(h ^ (b * jnp.uint32(0x85EBCA77)))
+    return h.astype(jnp.float32) * jnp.float32(2.0**-32)
 
 
 def queue_heads(q_arr, qptr):
@@ -555,6 +682,7 @@ class _LaneState(NamedTuple):
     dups: jnp.ndarray  # int32 crashed-prefix items re-served (at-least-once)
     halted: jnp.ndarray  # bool no claimable work remains (drained OR wedged)
     shed: jnp.ndarray  # int32 requests dropped by admission (serving mode)
+    lat_est: jnp.ndarray  # fp32 in-graph p99 sojourn estimate (overload mode)
 
 
 class ClaimRecord(NamedTuple):
@@ -595,6 +723,7 @@ def _init_state(lanes: int, n_workers: int) -> _LaneState:
         dups=z,
         halted=jnp.zeros((lanes,), bool),
         shed=z,
+        lat_est=jnp.zeros((lanes,), jnp.float32),
     )
 
 
@@ -602,6 +731,7 @@ def _claim_step(
     pol: JaxPolicy,
     mb: int,
     serving: bool,
+    ov: OverloadConfig,
     params,
     sparams,
     q_arr,
@@ -629,6 +759,10 @@ def _claim_step(
     ``serving`` (static) arms the :class:`ServingParams` knobs in
     ``sparams`` — the autoscale wake gate and shed-at-claim admission —
     both exact identities at the +inf defaults, on the same convention.
+    ``ov`` (static, :class:`OverloadConfig`) additionally compiles in
+    the circuit breaker (``breaker_age``) and the latency-reactive
+    autoscale gate (``scale_latency``); at the defaults neither branch
+    exists in the graph, so control-free lanes stay bit-identical.
     """
     w_count, n = cumsvc.shape
     crash_w, slow_w, lease = flt
@@ -677,6 +811,17 @@ def _claim_step(
             qsel = jnp.arange(w_count, dtype=jnp.int32)
         gate_idx = jnp.clip(st.qptr[qsel] + thr_i - 1, 0, n)
         t_scale = jnp.where(scaled, q_arr[qsel, gate_idx], -jnp.inf)
+        if math.isfinite(ov.scale_latency):
+            # latency-reactive autoscale: scaled workers wake on the
+            # MEASURED p99 sojourn estimate crossing scale_latency, not
+            # on queue length.  The estimate lives in the carry, so the
+            # gate re-evaluates every step: workers park again once the
+            # estimate decays below the threshold (hysteresis comes
+            # from the asymmetric quantile update below).
+            hot = st.lat_est > ov.scale_latency
+            t_scale = jnp.where(
+                scaled, jnp.where(hot, -jnp.inf, jnp.inf), -jnp.inf
+            )
         t_cand = jnp.maximum(t_cand, t_scale)
     # dead-worker mask: a worker whose next feasible claim would start
     # at/after its crash time never claims again (crash-between-claims)
@@ -718,12 +863,25 @@ def _claim_step(
         shed = jnp.where(
             active, jnp.minimum(excess, float(mb)).astype(jnp.int32), 0
         )
+        if math.isfinite(ov.breaker_age):
+            # circuit breaker (brownout): when the queue head has aged
+            # past breaker_age the whole claim is shed instead of
+            # served — bounded-staleness service: work that would
+            # expire anyway is dropped cheaply at the head, up to
+            # max_batch per claim, keeping the shed span within the
+            # claim-record window.
+            head_age = t0 - q_arr[q, st.qptr[q]]
+            tripped = active & (backlog > 0) & (head_age > ov.breaker_age)
+            shed = jnp.where(tripped, jnp.minimum(backlog, mb), shed)
+        else:
+            tripped = jnp.zeros((), bool)
         backlog = backlog - shed
     else:
         shed = jnp.zeros((), jnp.int32)
+        tripped = jnp.zeros((), bool)
     k = pol.next_batch(backlog, params, w_count)
     k = jnp.clip(k, jnp.minimum(backlog, 1), jnp.minimum(backlog, mb))
-    k = jnp.where(active, k, 0).astype(jnp.int32)
+    k = jnp.where(active & ~tripped, k, 0).astype(jnp.int32)
     desch = active & (u < params.deschedule_prob)
     stall_t = jnp.where(desch, stall * params.deschedule_mean, 0.0)
     t1 = t0 + params.claim_overhead + stall_t
@@ -764,6 +922,21 @@ def _claim_step(
         crashed, st.resume_until.at[q].set(ptr_s + k), st.resume_until
     )
     will_reclaim = crashed & jnp.isfinite(lease_v)
+    if serving and math.isfinite(ov.scale_latency):
+        # Robbins-Monro p99 tracker fed from claim completions: the
+        # sample is the batch's max sojourn (its first served rank has
+        # the earliest arrival).  est += lr * (0.99 - I[s <= est])
+        # converges to the 0.99-quantile; the asymmetry (big up-steps,
+        # small down-steps) doubles as scale-down hysteresis.
+        samp_ok = active & (k_eff > 0)
+        samp = t_end - q_arr[q, ptr_s]
+        lr = jnp.float32(0.25 * ov.scale_latency)
+        step = lr * (jnp.float32(0.99) - (samp <= st.lat_est).astype(jnp.float32))
+        lat_est = jnp.where(
+            samp_ok, jnp.maximum(st.lat_est + step, 0.0), st.lat_est
+        )
+    else:
+        lat_est = st.lat_est
     has = (k_eff + shed) > 0 if serving else k_eff > 0
     st2 = _LaneState(
         qptr=st.qptr.at[q].add(shed + k_eff),
@@ -778,6 +951,7 @@ def _claim_step(
         dups=st.dups + jnp.where(will_reclaim, k_eff, 0),
         halted=st.halted | ~active,
         shed=st.shed + shed,
+        lat_est=lat_est,
     )
     rec = ClaimRecord(
         q=jnp.where(has, q, w_count),
@@ -829,29 +1003,84 @@ def _lane_setup(
     pol: JaxPolicy,
     workload: str,
     service: str,
-    n: int,
+    n_orig: int,
+    n_slots: int,
     n_flows: int,
     n_workers: int,
     n_draws: int,
     serving: bool,
+    ov: OverloadConfig,
     params: LaneParams,
     traffic: TrafficParams,
     fparams: FaultParams,
     sparams: ServingParams,
     seed,
 ):
-    """Pre-draw one lane's traffic and build its per-queue views."""
+    """Pre-draw one lane's traffic and build its per-queue views.
+
+    ``n_orig`` is the generated request count (identical draws to the
+    pre-overload engine); ``n_slots >= n_orig`` is the shared attempt
+    capacity of the fused call.  With retry/hedge knobs armed each
+    request expands into ``ov.cpr`` attempt copies (original, retries
+    at counter-hash-jittered backoff offsets, optional hedge), globally
+    re-sorted by arrival; surplus capacity pads with never-arriving
+    +inf slots so every fused segment shares one shape.
+    """
     key = jax.random.PRNGKey(seed)
     kt, kd = jax.random.split(key)
-    arr, svc, flows = _gen_traffic(kt, traffic, workload, service, n, n_flows)
+    lseed = jnp.asarray(seed, jnp.uint32)
+    arr, svc, flows = _gen_traffic(kt, traffic, workload, service, n_orig, n_flows)
     if serving:
         # Generation horizon: arrivals after it never happen.  They keep
         # their rank slots as +inf pad (arrivals are monotone, so the
         # masked set is a per-queue rank suffix and rows stay sorted);
         # ``offered`` is the lane's true open-loop load.
         arr = jnp.where(arr <= sparams.horizon, arr, jnp.inf)
+    arr0 = arr
+    if n_slots == n_orig:
+        parent = jnp.arange(n_orig, dtype=jnp.int32)
+        att = jnp.zeros(n_orig, dtype=jnp.int32)
+    else:
+        # attempt expansion: rows [cpr, n_orig] of (arrival, attempt)
+        # per request.  Attempt j re-fires a further timeout +
+        # (backoff + jitter * u_j) * 2**(j-1) after attempt j-1; the
+        # hedge copy fires a flat ``hedge`` after the original.  A
+        # client models fire-and-forget (no cancellation): copies
+        # happen whether or not an earlier attempt succeeded — the
+        # retry-amplification worst case.
+        pidx = jnp.arange(n_orig, dtype=jnp.int32)
+        rows, att_ids = [arr], [0]
+        acc = jnp.zeros(n_orig, jnp.float32)
+        for j in range(1, ov.retries + 1):
+            u_j = hash_u01(lseed, pidx, jnp.int32(j))
+            acc = acc + jnp.float32(ov.timeout) + (
+                jnp.float32(ov.backoff) + jnp.float32(ov.jitter) * u_j
+            ) * jnp.float32(2.0 ** (j - 1))
+            rows.append(arr + acc)
+            att_ids.append(j)
+        if ov.hedge > 0:
+            rows.append(arr + jnp.float32(ov.hedge))
+            att_ids.append(ov.retries + 1)
+        arr_e = jnp.concatenate(rows)
+        arr_e = jnp.where(jnp.isfinite(jnp.tile(arr0, len(rows))), arr_e, jnp.inf)
+        if serving:
+            arr_e = jnp.where(arr_e <= sparams.horizon, arr_e, jnp.inf)
+        parent = jnp.tile(pidx, len(rows))
+        att = jnp.repeat(jnp.asarray(att_ids, jnp.int32), n_orig)
+        pad = n_slots - arr_e.shape[0]
+        if pad:
+            arr_e = jnp.concatenate([arr_e, jnp.full(pad, jnp.inf, jnp.float32)])
+            parent = jnp.concatenate([parent, jnp.zeros(pad, jnp.int32)])
+            att = jnp.concatenate([att, jnp.full(pad, ov.retries + 2, jnp.int32)])
+        order = jnp.argsort(arr_e)  # stable: rank construction needs
+        arr = arr_e[order]  # globally arrival-sorted slots
+        parent = parent[order]
+        att = att[order]
+        svc = jnp.where(jnp.isfinite(arr), svc[parent], 0.0)
+        flows = flows[parent]
     qid = pol.select_queue(flows, n_workers)  # [n] in [0, W)
     # rank of each packet within its queue (arrival order is global order)
+    n = arr.shape[0]
     rank = jnp.zeros(n, dtype=jnp.int32)
     for w in range(n_workers):
         m = qid == w
@@ -883,11 +1112,20 @@ def _lane_setup(
         lease=jnp.float32(fparams.lease),
     )
     if serving:
+        # offered counts attempt COPIES (the drain predicate's unit);
+        # offered_req counts the requests behind them
         su["offered"] = jnp.sum(jnp.isfinite(arr)).astype(jnp.int32)
+        su["offered_req"] = jnp.sum(jnp.isfinite(arr0)).astype(jnp.int32)
+        su["parent"] = parent
+        su["att"] = att
+        su["arr0"] = arr0
+        su["lseed"] = lseed
     return su
 
 
-def _reference_lane(pol: JaxPolicy, mb: int, serving: bool, params, sparams, su):
+def _reference_lane(
+    pol: JaxPolicy, mb: int, serving: bool, ov: OverloadConfig, params, sparams, su
+):
     """The pre-compaction per-claim scan: windows written inside the step.
 
     Shares :func:`_claim_step` with the compacted engine and applies
@@ -913,7 +1151,7 @@ def _reference_lane(pol: JaxPolicy, mb: int, serving: bool, params, sparams, su)
         st, done_qr, clm_qr = carry
         u, stall = xs
         st2, rec = _claim_step(
-            pol, mb, serving, params, sparams, q_arr, cumsvc, flt, st, u, stall
+            pol, mb, serving, ov, params, sparams, q_arr, cumsvc, flt, st, u, stall
         )
         ptr_s = rec.ptr + rec.shed  # first *served* rank
         row = jax.lax.dynamic_slice(done_qr, (rec.q, ptr_s), (1, mb))[0]
@@ -1016,13 +1254,24 @@ def _sweep_core(
     chunk: int,
     engine: str,
     serving: bool,
+    ovs,
+    max_cpr: int,
     return_times: bool,
 ):
     """Simulate every lane of every policy segment; returns per-segment
-    dicts of lane-axis arrays (safe to wrap in ``shard_map``)."""
+    dicts of lane-axis arrays (safe to wrap in ``shard_map``).
+
+    ``ovs`` is one static :class:`OverloadConfig` per segment;
+    ``max_cpr`` is the largest copies-per-request across them — every
+    segment shares the ``n_packets * max_cpr`` attempt-slot shape
+    (segments with fewer copies pad with never-arriving slots).
+    """
     n, mb = n_packets, max_batch
+    n_slots = n_packets * max_cpr
     setups, states = [], []
-    for pol, (params, traffic, fparams, sparams, seeds) in zip(pols, blocks):
+    for pol, ov, (params, traffic, fparams, sparams, seeds) in zip(
+        pols, ovs, blocks
+    ):
         setup = jax.vmap(
             functools.partial(
                 _lane_setup,
@@ -1030,10 +1279,12 @@ def _sweep_core(
                 workload,
                 service,
                 n,
+                n_slots,
                 n_flows,
                 n_workers,
                 s_pad,
                 serving,
+                ov,
             )
         )(params, traffic, fparams, sparams, seeds)
         setups.append(setup)
@@ -1041,8 +1292,10 @@ def _sweep_core(
 
     if engine == "reference":
         finals = []
-        for pol, (params, _, _, sparams, _), su in zip(pols, blocks, setups):
-            ref = jax.vmap(functools.partial(_reference_lane, pol, mb, serving))(
+        for pol, ov, (params, _, _, sparams, _), su in zip(
+            pols, ovs, blocks, setups
+        ):
+            ref = jax.vmap(functools.partial(_reference_lane, pol, mb, serving, ov))(
                 params, sparams, su
             )
             finals.append(ref)
@@ -1055,10 +1308,10 @@ def _sweep_core(
         # segmentation here — the step is compute-bound, not
         # dispatch-bound, at sweep lane counts)
         finals = []
-        for pol, (params, _, _, sparams, _), su, st0 in zip(
-            pols, blocks, setups, states
+        for pol, ov, (params, _, _, sparams, _), su, st0 in zip(
+            pols, ovs, blocks, setups, states
         ):
-            step = functools.partial(_claim_step, pol, mb, serving)
+            step = functools.partial(_claim_step, pol, mb, serving, ov)
 
             def body(carry, x, step=step, params=params, sparams=sparams, su=su):
                 u, stall = x
@@ -1089,8 +1342,8 @@ def _sweep_core(
         raise ValueError(f"unknown engine {engine!r}")
 
     outs = []
-    for (_, _, _, sparams, _), su, (st, done, claimed) in zip(
-        blocks, setups, finals
+    for ov, (_, _, _, sparams, _), su, (st, done, claimed) in zip(
+        ovs, blocks, setups, finals
     ):
         words = kernel_ops.pack_bits_u32(claimed)
         ratio, max_dist = jax.vmap(reorder_metrics)(done)
@@ -1100,24 +1353,62 @@ def _sweep_core(
             # carry arr=done=+inf), so every aggregate masks on
             # delivery and percentiles interpolate over the delivered
             # prefix of the sorted row — matching np.percentile on the
-            # delivered subset exactly (pinned by tests).
-            delivered = jnp.isfinite(done)
-            sojourn = jnp.where(delivered, done - su["arr"], jnp.inf)
-            n_del = jnp.sum(delivered, axis=-1).astype(jnp.int32)
+            # delivered subset exactly (pinned by tests).  A served
+            # attempt only counts delivered when its response survives
+            # drop_rate (counter-hash on request + attempt; all-false
+            # at the 0.0 identity) AND, with a timeout armed, returns
+            # within timeout of ITS OWN submission.
+            served = jnp.isfinite(done)
+            lost = (
+                hash_u01(
+                    su["lseed"][:, None] ^ jnp.uint32(_DROP_SALT),
+                    su["parent"],
+                    su["att"],
+                )
+                < sparams.drop_rate[:, None]
+            )
+            delivered = served & ~lost
+            attempts = su["offered"].astype(jnp.int32)
+            if ov.extended:
+                # request-level accounting: a request is good when ANY
+                # of its attempt copies answers within its deadline;
+                # later timely copies are duplicate work (dup_served)
+                delivered = delivered & (done <= su["arr"] + jnp.float32(ov.timeout))
+                lanes_i = jnp.arange(done.shape[0])[:, None]
+                first_ok = (
+                    jnp.full((done.shape[0], n), jnp.inf)
+                    .at[lanes_i, su["parent"]]
+                    .min(jnp.where(delivered, done, jnp.inf))
+                )
+                deliv_req = jnp.isfinite(first_ok)
+                sojourn = jnp.where(deliv_req, first_ok - su["arr0"], jnp.inf)
+                arr_lat = su["arr0"]
+                offered = su["offered_req"].astype(jnp.int32)
+            else:
+                sojourn = jnp.where(delivered, done - su["arr"], jnp.inf)
+                deliv_req = delivered
+                arr_lat = su["arr"]
+                offered = su["offered"].astype(jnp.int32)
+            n_del = jnp.sum(deliv_req, axis=-1).astype(jnp.int32)
             svals = jnp.sort(sojourn, axis=-1)
             p50 = _masked_percentile(svals, n_del, 50.0)
             p99 = _masked_percentile(svals, n_del, 99.0)
             mean = jnp.sum(
-                jnp.where(delivered, sojourn, 0.0), axis=-1
+                jnp.where(deliv_req, sojourn, 0.0), axis=-1
             ) / jnp.maximum(n_del, 1)
-            offered = su["offered"].astype(jnp.int32)
-            ok = delivered & (sojourn <= sparams.slo_target[:, None])
+            ok = deliv_req & (sojourn <= sparams.slo_target[:, None])
             slo_att = jnp.sum(ok, axis=-1) / jnp.maximum(offered, 1)
-            drain_t = jnp.max(jnp.where(delivered, done, -jnp.inf), axis=-1)
-            t_first = jnp.min(su["arr"], axis=-1)
+            drain_t = jnp.max(
+                jnp.where(jnp.isfinite(done), done, -jnp.inf), axis=-1
+            )
+            t_first = jnp.min(arr_lat, axis=-1)
             span = jnp.maximum(drain_t - t_first, 1e-9)
             throughput = st.items / span
-            undelivered = (offered - st.items - st.shed).astype(jnp.int32)
+            undelivered = (attempts - st.items - st.shed).astype(jnp.int32)
+            n_deliv_cp = jnp.sum(delivered, axis=-1).astype(jnp.int32)
+            expired = st.items - n_deliv_cp
+            goodput = n_del
+            dup_served = n_deliv_cp - goodput
         else:
             sojourn = done - su["arr"]
             pct = jnp.percentile(sojourn, jnp.asarray([50.0, 99.0]), axis=-1)
@@ -1135,6 +1426,12 @@ def _sweep_core(
             span = drain_t - jnp.min(su["arr"], axis=-1)
             throughput = n / span
             undelivered = (n - st.items).astype(jnp.int32)
+            # no client plane off serving mode: every claimed item is a
+            # delivered original
+            attempts = offered
+            expired = jnp.zeros_like(st.items)
+            goodput = st.items
+            dup_served = jnp.zeros_like(st.items)
         outs.append(
             dict(
                 p50=p50,
@@ -1157,6 +1454,11 @@ def _sweep_core(
                 offered=offered,
                 shed=st.shed,
                 slo_attained=slo_att.astype(jnp.float32),
+                attempts=attempts,
+                delivered=goodput + dup_served,
+                expired=expired,
+                goodput=goodput,
+                dup_served=dup_served,
                 sojourn=sojourn if return_times else sojourn[:, :0],
             )
         )
@@ -1178,6 +1480,8 @@ def _run_fused_impl(
     n_shards: int,
     engine: str,
     serving: bool,
+    ovs,
+    max_cpr: int,
     prefix_impl: str,
     prefix_interpret: bool,
     return_times: bool,
@@ -1195,6 +1499,8 @@ def _run_fused_impl(
         chunk=chunk,
         engine=engine,
         serving=serving,
+        ovs=ovs,
+        max_cpr=max_cpr,
         return_times=return_times,
     )
     if n_shards > 1:
@@ -1204,12 +1510,14 @@ def _run_fused_impl(
         )
     outs = core(blocks)
     # exactly-once on the packed words, one multi-ring prefix launch for
-    # every segment of the fused call
+    # every segment of the fused call (bit width = the attempt-slot
+    # capacity when retry fan-out is armed)
+    n_slots = n_packets * max_cpr
     words = jnp.concatenate([o["words"] for o in outs], axis=0)
     prefix = kernel_ops.done_prefix_packed(
         words,
-        jnp.full((words.shape[0],), n_packets, dtype=jnp.int32),
-        n_bits=n_packets,
+        jnp.full((words.shape[0],), n_slots, dtype=jnp.int32),
+        n_bits=n_slots,
         impl=prefix_impl,
         interpret=prefix_interpret,
     )
@@ -1237,6 +1545,11 @@ def _run_fused_impl(
                 offered=o["offered"],
                 shed=o["shed"],
                 slo_attained=o["slo_attained"],
+                attempts=o["attempts"],
+                delivered=o["delivered"],
+                expired=o["expired"],
+                goodput=o["goodput"],
+                dup_served=o["dup_served"],
             )
         )
         at += lanes
@@ -1256,6 +1569,8 @@ _FUSED_STATICS = (
     "n_shards",
     "engine",
     "serving",
+    "ovs",
+    "max_cpr",
     "prefix_impl",
     "prefix_interpret",
     "return_times",
@@ -1358,12 +1673,9 @@ def _fused_lanes(
         raise ValueError("run_lanes_fused: empty request list")
     serving = serving or any(req.get("serving_params") for req in requests)
     n_shards = _resolve_shards(shards)
-    budget = n_packets if claim_budget is None else int(claim_budget)
-    budget = max(1, min(budget, n_packets))
     chunk = max(1, int(chunk))
-    s_pad = -(-budget // chunk) * chunk
 
-    pols, blocks, orig_lanes = [], [], []
+    pols, blocks, orig_lanes, ovs = [], [], [], []
     for req in requests:
         pol = _resolve_policy(req["policy"])
         seeds = jnp.asarray(np.asarray(req["seeds"], dtype=np.uint32))
@@ -1372,6 +1684,11 @@ def _fused_lanes(
         tp = default_traffic_params(**(req.get("traffic_params") or {}))
         fp = default_fault_params(**(req.get("fault_params") or {}))
         sp = default_serving_params(**(req.get("serving_params") or {}))
+        # overload-control knobs are STATIC per segment (retry fan-out
+        # changes shapes; the breaker / latency-gate branches compile
+        # only when armed) — popped before the sweep-knob validation
+        # like ``sack`` / ``send_burst`` on the TCP plane
+        ov = _pop_overload(sp)
         unknown = set(lp) - set(LaneParams._fields)
         unknown |= set(tp) - set(TrafficParams._fields)
         unknown |= set(fp) - set(FaultParams._fields)
@@ -1384,8 +1701,17 @@ def _fused_lanes(
         sparams = ServingParams(*_broadcast_lanes(sp, ServingParams._fields, lanes))
         pad = (-lanes) % n_shards
         pols.append(pol)
+        ovs.append(ov)
         blocks.append(_pad_lanes((params, traffic, fparams, sparams, seeds), pad))
         orig_lanes.append(lanes)
+
+    # every fused segment shares the attempt-slot shape: requests *
+    # the largest per-segment copy fan-out (1 when no retry knobs)
+    max_cpr = max(ov.cpr for ov in ovs)
+    n_slots = n_packets * max_cpr
+    budget = n_slots if claim_budget is None else int(claim_budget)
+    budget = max(1, min(budget, n_slots))
+    s_pad = -(-budget // chunk) * chunk
 
     donate = jax.default_backend() != "cpu"
     fn = _fused_jit(donate)
@@ -1402,6 +1728,8 @@ def _fused_lanes(
         n_shards=n_shards,
         engine=engine,
         serving=serving,
+        ovs=tuple(ovs),
+        max_cpr=max_cpr,
         prefix_impl=prefix_impl,
         prefix_interpret=prefix_interpret,
         return_times=return_times,

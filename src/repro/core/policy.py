@@ -81,6 +81,7 @@ __all__ = [
     "make_thread_queue",
     "make_jax_policy",
     "serving_defaults",
+    "overload_defaults",
     "fused_jax_requests",
 ]
 
@@ -316,6 +317,16 @@ class PolicySpec:
     #: caller overrides on top (``repro.core.run_sweep``); an empty
     #: mapping means "no per-policy preset".
     serving_defaults: Mapping[str, float] = field(default_factory=dict)
+    #: Graceful-degradation preset for the overload scenario: the
+    #: client/breaker knobs (``timeout``, ``retries``, ``backoff``,
+    #: ``jitter``, ``breaker_age`` — see
+    #: :class:`repro.core.jaxplane.OverloadConfig`) plus an
+    #: ``admit_limit`` override matched to the timeout (admission depth
+    #: ~ timeout x service rate, so everything actually served is still
+    #: fresh).  Times are in units of the mean service time.  Consumed
+    #: by ``benchmarks/overload_sweep.py``; an empty mapping means "no
+    #: preset".
+    overload_defaults: Mapping[str, float] = field(default_factory=dict)
 
 
 _REGISTRY: Dict[str, PolicySpec] = {}
@@ -377,6 +388,11 @@ def serving_defaults(name: str) -> dict:
     return dict(get_spec(name).serving_defaults)
 
 
+def overload_defaults(name: str) -> dict:
+    """The policy's graceful-degradation overload preset (fresh dict)."""
+    return dict(get_spec(name).overload_defaults)
+
+
 def _fused_requests(seeds, lane_params=None, policies=None, **knob_dicts):
     """Registry-wide request list for the fused jax-plane sweeps.
 
@@ -431,6 +447,22 @@ def _jax_factory(name: str) -> Callable[[], Any]:
     return factory
 
 
+#: Graceful-degradation overload presets (see PolicySpec.overload_defaults):
+#: bounded retries with exponential backoff + jitter, a breaker that
+#: browns out on a stale queue head, and an admission depth matched to
+#: the client deadline (timeout x per-pool service rate).  Per-worker
+#: queues carry ~1/N of the shared-queue admission budget, exactly as
+#: the serving presets do.
+_GRACEFUL_SHARED = {
+    "timeout": 2.0,
+    "retries": 2,
+    "backoff": 4.0,
+    "jitter": 1.0,
+    "breaker_age": 0.5,
+    "admit_limit": 2.0,
+}
+_GRACEFUL_PERQUEUE = dict(_GRACEFUL_SHARED, admit_limit=1.0)
+
 register_policy(
     PolicySpec(
         name="corec",
@@ -443,6 +475,7 @@ register_policy(
             "base_workers": 2.0,
             "scale_backlog": 48.0,
         },
+        overload_defaults=_GRACEFUL_SHARED,
     )
 )
 register_policy(
@@ -459,6 +492,7 @@ register_policy(
             "base_workers": 2.0,
             "scale_backlog": 12.0,
         },
+        overload_defaults=_GRACEFUL_PERQUEUE,
     )
 )
 register_policy(
@@ -474,6 +508,7 @@ register_policy(
             "base_workers": 2.0,
             "scale_backlog": 48.0,
         },
+        overload_defaults=_GRACEFUL_SHARED,
     )
 )
 register_policy(
@@ -488,6 +523,7 @@ register_policy(
             "base_workers": 2.0,
             "scale_backlog": 12.0,
         },
+        overload_defaults=_GRACEFUL_PERQUEUE,
     )
 )
 register_policy(
@@ -502,5 +538,6 @@ register_policy(
             "base_workers": 2.0,
             "scale_backlog": 48.0,
         },
+        overload_defaults=_GRACEFUL_SHARED,
     )
 )

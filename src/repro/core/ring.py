@@ -341,12 +341,16 @@ class CorecRing:
         self.stats.claims += 1
         self.stats.claimed_items += n
         if self.lease_timeout is not None:
+            # Stamp the deadline BEFORE taking the lease mutex: the clock
+            # is injectable (tests use fake clocks that may inspect lease
+            # state) and must never run under an internal lock.
+            deadline = self._clock() + self.lease_timeout
             with self._lease_mtx:
                 self._leases[start] = _LeaseEntry(
                     AtomicLease(),
                     start,
                     n,
-                    self._clock() + self.lease_timeout,
+                    deadline,
                     list(payloads),
                 )
         return Claim(start, start + n, payloads)

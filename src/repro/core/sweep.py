@@ -38,13 +38,23 @@ tcp          closed-loop NewReno/CUBIC lanes over the forwarder
              additionally takes ``sack`` (scoreboard multi-hole
              recovery, static per request), ``send_burst`` (events
              coalesced per scan step), ``loss_every`` (deterministic
-             drop-once receiver loss) and ``pkt_budget`` (per-lane
-             elephant/mice packet cap, sweepable).
+             drop-once receiver loss), ``loss_rate`` / ``loss_burst``
+             (random Bernoulli / Gilbert-Elliott-style burst loss,
+             sweepable, counter-based RNG shared with the DES mirror)
+             and ``pkt_budget`` (per-lane elephant/mice packet cap,
+             sweepable).
 serving      open-loop SLO sweeps (:mod:`repro.core.servingjax`):
              heavy-tailed sessions, admission + autoscale knobs from
-             :class:`~repro.core.jaxplane.ServingParams`; each policy's
+             :class:`~repro.core.jaxplane.ServingParams` (including
+             the sweepable ``drop_rate`` response loss); each policy's
              registry ``serving_defaults`` seed the knobs and the
              request's ``serving_params`` override them key-wise.
+             Overload-control statics (client ``timeout`` / ``retries``
+             / ``backoff`` / ``jitter`` / ``hedge``, breaker
+             ``breaker_age``, latency-reactive ``scale_latency`` — see
+             :class:`~repro.core.jaxplane.OverloadConfig`) ride in
+             ``serving_params`` too and are popped per request before
+             the sweepable knobs are broadcast.
 ===========  =========================================================
 """
 

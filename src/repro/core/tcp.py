@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .des import DesItem, EventLoop, WorkerPlane
+from .faults import hash_u01
 from .policy import make_policy
 
 __all__ = ["TcpSimConfig", "FlowResult", "simulate_tcp", "sweep_tcp_jax"]
@@ -66,6 +67,15 @@ class TcpSimConfig:
     sack: bool = False
     #: receiver drops the FIRST arrival of every k-th segment (0 = off)
     loss_every: int = 0
+    #: random drop probability per segment (0.0 = off); drop-once like
+    #: ``loss_every``, scheduled by the counter-hash
+    #: :func:`repro.core.faults.hash_u01` on (seed, flow, seq block) —
+    #: the jax plane reproduces the exact schedule from the lane seed
+    loss_rate: float = 0.0
+    #: mean loss-burst length in segments (1.0 = iid Bernoulli): whole
+    #: ``loss_burst``-wide seq blocks share one draw, so losses cluster
+    #: Gilbert-Elliott-style at unchanged marginal rate
+    loss_burst: float = 1.0
     #: cap on packets actually sent per flow (elephant/mice mixes)
     pkt_budget: int = 1 << 30
     seed: int = 0
@@ -182,14 +192,19 @@ def simulate_tcp(
     def deliver(t: float, data) -> None:
         fid, seq = data
         f = fl[fid]
-        if (
-            cfg.loss_every
-            and (seq + 1) % cfg.loss_every == 0
-            and seq not in f.dropped_once
-        ):
-            # deterministic loss: the first copy of every k-th segment is
-            # dropped on the floor — no delivery, no ACK (mirrors the jax
-            # plane's drop-once dwords bitmap)
+        sched = bool(cfg.loss_every) and (seq + 1) % cfg.loss_every == 0
+        if cfg.loss_rate > 0.0 and not sched:
+            # random loss: counter-hash schedule shared with the jax
+            # plane — compare through float32 so the drop decision is
+            # bit-identical to the in-scan fp32 comparison
+            blk = seq // max(int(cfg.loss_burst), 1)
+            sched = np.float32(hash_u01(cfg.seed, fid, blk)) < np.float32(
+                cfg.loss_rate
+            )
+        if sched and seq not in f.dropped_once:
+            # loss: the first copy of a loss-scheduled segment is
+            # dropped on the floor — no delivery, no ACK (mirrors the
+            # jax plane's drop-once dwords bitmap)
             f.dropped_once.add(seq)
             return
         dup = seq < f.recv_next or seq in f.recv_buf  # DSACK condition

@@ -99,6 +99,7 @@ from .jaxplane import (
     _resolve_shards,
     default_fault_params,
     default_lane_params,
+    hash_u01,
     queue_heads,
     rows_arrived,
     steal_choice,
@@ -131,6 +132,8 @@ class TcpParams(NamedTuple):
     rto: jnp.ndarray  # coarse retransmission timer
     pkt_budget: jnp.ndarray  # per-lane cap on packets per flow (mice/elephant mixes)
     loss_every: jnp.ndarray  # drop the 1st arrival of every k-th segment (0 = off)
+    loss_rate: jnp.ndarray  # random drop probability per segment (0.0 = off)
+    loss_burst: jnp.ndarray  # mean loss-burst length in segments (1.0 = Bernoulli)
 
 
 def default_tcp_params(**kw) -> dict:
@@ -147,6 +150,8 @@ def default_tcp_params(**kw) -> dict:
         rto=5_000.0,
         pkt_budget=1 << 30,  # effectively uncapped; exact in fp32
         loss_every=0,
+        loss_rate=0.0,
+        loss_burst=1.0,
     )
     d.update(kw)
     return d
@@ -245,7 +250,11 @@ def _tcp_setup(tcp: TcpParams, seed, tx_budget: int, n_steps: int):
     svc_pad = jnp.concatenate([svc, jnp.zeros(1, jnp.float32)])
     u_desch = jax.random.uniform(ku, (n_steps,))
     stalls = jax.random.exponential(ke, (n_steps,)).astype(jnp.float32)
-    return dict(svc_pad=svc_pad, u=u_desch, stalls=stalls)
+    # counter-RNG key for the random-loss process (faults.hash_u01
+    # mirror): keyed on the lane seed so the DES plane reproduces the
+    # exact drop schedule from TcpSimConfig.seed
+    lseed = jnp.asarray(seed, jnp.uint32)
+    return dict(svc_pad=svc_pad, u=u_desch, stalls=stalls, lseed=lseed)
 
 
 def _tcp_state0(
@@ -580,8 +589,16 @@ def _tcp_step(
         bitv = jnp.left_shift(jnp.uint32(1), bsh)
         # loss injection: the receiver drops the FIRST arrival of every
         # loss_every-th segment, exactly once per seq (dwords bitmap);
-        # a dropped segment produces no ACK — the event just vanishes
+        # a dropped segment produces no ACK — the event just vanishes.
+        # The random process ORs in: a segment is loss-scheduled iff its
+        # counter-hash (lane seed, flow, seq block) lands under
+        # loss_rate; whole loss_burst-wide blocks share one draw, so
+        # the marginal drop rate stays loss_rate while losses cluster
+        # with mean burst length loss_burst (Gilbert-Elliott-style)
         sched = (li > 0) & ((sa + 1) % lim == 0)
+        lb = jnp.maximum(tcp.loss_burst.astype(jnp.int32), 1)
+        u_loss = hash_u01(consts["lseed"], fa, sa // lb)
+        sched = sched | (u_loss < tcp.loss_rate)
         seen_d = (st["dwords"][fad, wi] & bitv) != 0
         drop = ma & sched & ~seen_d
         st["dwords"] = (
@@ -685,8 +702,13 @@ def _tcp_step(
         wi_j = sa_c >> 5
         bit_j = jnp.left_shift(jnp.uint32(1), (sa_c & 31).astype(jnp.uint32))
         # loss injection: among same-seq copies in one batch only the
-        # EARLIEST undropped arrival is eligible to drop (DES order)
+        # EARLIEST undropped arrival is eligible to drop (DES order);
+        # random loss ORs into the schedule exactly as on the per-event
+        # path (same counter-hash, same block-burst semantics)
         sched_j = (li > 0) & ((sa_j + 1) % lim == 0)
+        lb_j = jnp.maximum(tcp.loss_burst.astype(jnp.int32), 1)
+        u_loss_j = hash_u01(consts["lseed"], fa_j, sa_j // lb_j)
+        sched_j = sched_j | (u_loss_j < tcp.loss_rate)
         seen_j = (st["dwords"][fad_j, wi_j] & bit_j) != 0
         cand_j = m & sched_j & ~seen_j
         tmin_seq = (

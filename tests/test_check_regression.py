@@ -27,6 +27,7 @@ def _write_results(
     udp=None,
     fault_policies=None,
     sack_policies=None,
+    overload_policies=None,
 ):
     results = tmp_path / "quick"
     results.mkdir(exist_ok=True)
@@ -42,6 +43,9 @@ def _write_results(
     if fault_policies is not None:
         fs = {"policies": fault_policies}
         (results / "fault_sweep.json").write_text(json.dumps(fs))
+    if overload_policies is not None:
+        ov = {"policies": overload_policies}
+        (results / "overload_sweep.json").write_text(json.dumps(ov))
     return results
 
 
@@ -376,6 +380,99 @@ def test_tcp_sack_throughput_floor_boundary(tmp_path):
     )
     fails = check(below, base, 2.0, throughput_floor=0.5)
     assert len(fails) == 1 and "lane_points_per_s regressed" in fails[0]
+
+
+def test_collect_metrics_overload_rows(tmp_path):
+    # retry-storm rows flatten next to the other sources, keeping only
+    # the three gated metrics (per-mode detail stays in the JSON)
+    results = _write_results(
+        tmp_path,
+        overload_policies={
+            "corec": {
+                "graceful_goodput_ratio": 0.97,
+                "naive_goodput_ratio": 0.08,
+                "metastable_lanes": 0,
+                "healthy_goodput": 450.0,
+            }
+        },
+    )
+    got = collect_metrics(results)
+    assert got["overload_sweep/corec"] == {
+        "graceful_goodput_ratio": 0.97,
+        "naive_goodput_ratio": 0.08,
+        "metastable_lanes": 0,
+    }
+
+
+def test_overload_graceful_floor_and_metastable_invariant(tmp_path):
+    # graceful_goodput_ratio gates one-sided as a floor (exactly
+    # baseline * floor passes, below fails) and metastable_lanes'
+    # 0-valued baseline is an exact invariant: one lane off the cliff
+    # fails at ANY tolerance
+    base = _baselines(
+        tmp_path,
+        {
+            "overload_sweep/corec": {
+                "graceful_goodput_ratio": 1.0,
+                "metastable_lanes": 0,
+            }
+        },
+    )
+    at_floor = _write_results(
+        tmp_path,
+        overload_policies={
+            "corec": {"graceful_goodput_ratio": 0.5, "metastable_lanes": 0}
+        },
+    )
+    assert check(at_floor, base, 2.0, throughput_floor=0.5) == []
+    below = _write_results(
+        tmp_path,
+        overload_policies={
+            "corec": {"graceful_goodput_ratio": 0.499, "metastable_lanes": 0}
+        },
+    )
+    fails = check(below, base, 2.0, throughput_floor=0.5)
+    assert len(fails) == 1 and "graceful_goodput_ratio regressed" in fails[0]
+    cliffed = _write_results(
+        tmp_path,
+        overload_policies={
+            "corec": {"graceful_goodput_ratio": 1.0, "metastable_lanes": 1}
+        },
+    )
+    fails = check(cliffed, base, 100.0)
+    assert len(fails) == 1 and "metastable_lanes regressed" in fails[0]
+
+
+def test_overload_naive_cliff_disappearing_fails(tmp_path):
+    # naive_goodput_ratio's baseline is the COLLAPSED value: the cliff
+    # disappearing (ratio rising past baseline * tolerance) fails — the
+    # demonstration is part of the contract — while staying collapsed
+    # or collapsing further passes
+    base = _baselines(
+        tmp_path, {"overload_sweep/corec": {"naive_goodput_ratio": 0.1}}
+    )
+    still_collapsed = _write_results(
+        tmp_path, overload_policies={"corec": {"naive_goodput_ratio": 0.05}}
+    )
+    assert check(still_collapsed, base, 2.0) == []
+    recovered = _write_results(
+        tmp_path, overload_policies={"corec": {"naive_goodput_ratio": 0.9}}
+    )
+    fails = check(recovered, base, 2.0)
+    assert len(fails) == 1 and "naive_goodput_ratio regressed" in fails[0]
+
+
+def test_overload_row_missing_from_results_fails_by_name(tmp_path):
+    # overload_sweep.json silently not produced must fail the guard
+    results = _write_results(
+        tmp_path, jax_policies={"corec": {"p50_median": 0.1}}
+    )
+    base = _baselines(
+        tmp_path,
+        {"overload_sweep/corec": {"graceful_goodput_ratio": 1.0}},
+    )
+    fails = check(results, base, 2.0)
+    assert fails == ["overload_sweep/corec: missing from quick results"]
 
 
 @pytest.mark.parametrize("ok", [True, False])

@@ -210,11 +210,42 @@ def test_des_fault_free_runs_unchanged_and_audited():
 # Threaded plane: the chaos harness on real threads
 # ---------------------------------------------------------------------
 def test_threaded_kill_claim_holder_peer_reclaims_within_lease():
+    # Deterministic lease expiry via an injected fake clock (no
+    # wall-clock race on loaded CI runners): time is frozen at 0 until
+    # (a) the chaos harness has really killed the claim holder and
+    # (b) the dead worker's claim is the only lease outstanding; then
+    # it jumps far past the lease.  Live claims can never spuriously
+    # expire — while one is outstanding the clock stays frozen, and a
+    # claim stamped after the jump carries a deadline beyond it — while
+    # the dead holder's claim expires on the very next peer reclaim
+    # scan.  The kill itself is made deterministic too: worker 0 dies
+    # holding its FIRST claim (after_claims=0 + 'hold'), and the live
+    # workers' work_fn blocks until the kill lands, so fast peers can
+    # never drain the backlog before the fault fires.
     n = 400
-    q = make_queue("corec", 3, 128, lease_timeout=0.2)
+    boxes: dict = {}
+
+    def clock() -> float:
+        pool = boxes.get("pool")
+        if (
+            pool is not None
+            and any(pool.dead)
+            and boxes["q"].leases_outstanding() <= 1
+        ):
+            return 10.0
+        return 0.0
+
+    def work_fn(it) -> None:
+        pool = boxes["pool"]
+        while not (any(pool.dead) or pool._stop.is_set()):
+            time.sleep(0.001)
+
+    q = make_queue("corec", 3, 128, lease_timeout=0.2, clock=clock)
+    boxes["q"] = q
     items = [Item(seqno=i, flow=i % 32) for i in range(n)]
-    faults = [FaultSpec(worker=0, after_claims=2, point="hold")]
-    pool = WorkerPool(q, 3, work_fn=lambda it: None, max_batch=8, faults=faults)
+    faults = [FaultSpec(worker=0, after_claims=0, point="hold")]
+    pool = WorkerPool(q, 3, work_fn=work_fn, max_batch=8, faults=faults)
+    boxes["pool"] = pool
     t0 = time.perf_counter()
     res = pool.run_open_loop(items, rate=None, drain_timeout=30)
     wall = time.perf_counter() - t0

@@ -1,0 +1,420 @@
+"""Stochastic impairment + overload control across the planes.
+
+Covers the PR's tentpole guarantees:
+
+* the counter-based impairment RNG (``faults.hash_u01``) is
+  bit-identical between the pure-python DES mirror and the jnp mirror,
+  so both planes drop the SAME segments for the same lane seed, and
+  ``rate == 0.0`` is an exact never-fires identity,
+* random loss keeps distributional DES-vs-jax FCT parity on matched
+  configs for all five policies, and a ``loss_rate == 0`` lane inside
+  a lossy vmapped call stays bit-identical to the loss-free engine,
+* the paper's impairment shape: corec's FCT p99 stays within 3% of
+  scaleout under random loss at 3%,
+* the overload-control plane: exact off-identities, extended
+  exactly-once accounting (``popcount == delivered + expired + shed``,
+  ``delivered == goodput + dup_served``), duplicates bounded by the
+  retry fan-out, and the metastable cliff — naive retries collapse
+  goodput where backoff + breaker + admission degrade gracefully — on
+  BOTH engines,
+* a hypothesis chaos sweep over (loss x retry knobs x policy) holding
+  the accounting invariants on both planes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+jax = pytest.importorskip("jax")
+
+from repro.core.faults import hash_u01  # noqa: E402
+from repro.core.jaxplane import hash_u01 as hash_u01_jax  # noqa: E402
+from repro.core.jaxplane import rss_hash32  # noqa: E402
+from repro.core.policy import overload_defaults  # noqa: E402
+from repro.core.servingjax import (  # noqa: E402
+    ServingSimConfig,
+    simulate_serving_des,
+    sweep_serving_jax,
+)
+from repro.core.tcp import TcpSimConfig, simulate_tcp  # noqa: E402
+from repro.core.tcpjax import run_tcp_lanes  # noqa: E402
+
+JAX_POLS = ["adaptive-batch", "corec", "hybrid", "locked", "scaleout"]
+N_WORKERS = 4
+
+# repo-standard parity bands: pooled percentiles, relative error
+P50_RTOL = 0.15
+P99_RTOL = 0.35
+
+#: the matched random-loss process both planes run in the parity tests
+LOSS = dict(loss_rate=0.02, loss_burst=2.0)
+
+#: the overload regime the cliff tests run in (mirrors
+#: benchmarks/overload_sweep.py: rho ~ 3/4 per worker before retries)
+OV_RATE = 3.0
+OV_TIMEOUT = 2.0
+OV_DROP = 0.1
+
+
+# ---------------------------------------------------------------------
+# The impairment RNG: one counter hash, two bit-identical mirrors
+# ---------------------------------------------------------------------
+def test_hash_u01_planes_agree_bit_for_bit():
+    a = np.arange(64, dtype=np.uint32)
+    b = np.arange(16, dtype=np.uint32)
+    for seed in (0, 1, 7, 0xDEADBEEF):
+        py = np.array(
+            [[np.float32(hash_u01(seed, int(x), int(y))) for y in b] for x in a],
+            dtype=np.float32,
+        )
+        jx = np.asarray(hash_u01_jax(seed, a[:, None], b[None, :]))
+        assert jx.dtype == np.float32
+        assert (py == jx).all(), seed
+
+
+def test_hash_u01_is_uniform_enough_and_rate_zero_never_fires():
+    u = np.array(
+        [hash_u01(3, i, j) for i in range(32) for j in range(32)]
+    )
+    assert (u >= 0.0).all() and (u < 1.0).all()
+    assert abs(u.mean() - 0.5) < 0.02
+    # strict < makes rate 0.0 an exact identity on both planes
+    assert not (np.float32(u) < np.float32(0.0)).any()
+    assert not np.asarray(
+        hash_u01_jax(3, np.arange(1024), 0) < np.float32(0.0)
+    ).any()
+
+
+def test_drop_schedule_predicate_parity():
+    # the exact drop predicate both TCP planes evaluate: same seed ->
+    # same dropped (flow, seq-block) set, compared through fp32
+    rate, burst, seed = 0.03, 2, 9
+    flows = np.arange(16)
+    seqs = np.arange(200)
+    py = np.array(
+        [
+            [
+                np.float32(hash_u01(seed, int(f), int(s) // burst))
+                < np.float32(rate)
+                for s in seqs
+            ]
+            for f in flows
+        ]
+    )
+    jx = np.asarray(
+        hash_u01_jax(seed, flows[:, None], seqs[None, :] // burst)
+        < np.float32(rate)
+    )
+    assert (py == jx).all()
+    # marginal drop rate lands near the knob; bursts share one draw so
+    # each block is all-dropped or all-kept
+    assert 0.01 < py.mean() < 0.06
+    blocks = py[:, ::burst]
+    assert (py[:, 1::burst] == blocks[:, : py[:, 1::burst].shape[1]]).all()
+
+
+# ---------------------------------------------------------------------
+# Random loss on the TCP lanes: identity off, parity on
+# ---------------------------------------------------------------------
+def test_loss_rate_zero_lane_matches_lossless_engine_bit_for_bit():
+    # lane 0 rides a vmapped call whose sibling lane drops segments;
+    # its outputs must equal the no-knob engine exactly
+    seeds = np.arange(2)
+    mixed = run_tcp_lanes(
+        "corec",
+        seeds,
+        n_pkts=200,
+        tcp_params=dict(
+            loss_rate=np.array([0.0, 0.05], np.float32), loss_burst=1.0
+        ),
+        n_workers=N_WORKERS,
+    )
+    clean = run_tcp_lanes("corec", seeds, n_pkts=200, n_workers=N_WORKERS)
+    assert np.asarray(mixed.done).all()
+    for field in ("fct", "sends", "retransmissions"):
+        m = np.asarray(getattr(mixed, field))
+        c = np.asarray(getattr(clean, field))
+        assert m[0] == c[0], field
+    # ...while the lossy lane really was impaired
+    assert np.asarray(mixed.retransmissions)[1] > np.asarray(
+        clean.retransmissions
+    ).max()
+
+
+def test_random_loss_keeps_exactly_once_on_the_forwarder():
+    res = run_tcp_lanes(
+        "corec",
+        np.arange(3),
+        n_pkts=300,
+        tcp_params=dict(loss_rate=0.05, loss_burst=2.0),
+        n_workers=N_WORKERS,
+    )
+    assert np.asarray(res.done).all()
+    sends = np.asarray(res.sends)
+    assert (np.asarray(res.claimed_popcount) == sends).all()
+    assert (np.asarray(res.claimed_prefix) == sends).all()
+    # losses force retransmissions, so the link carried extra copies
+    assert (sends > 300).all()
+
+
+def _des_fcts(name, flows, hints, seeds, **tcp_kw):
+    out = []
+    for seed in seeds:
+        cfg = TcpSimConfig(
+            policy=name,
+            n_workers=N_WORKERS,
+            seed=seed,
+            queue_hints=hints,
+            **tcp_kw,
+        )
+        out += [r.fct for r in simulate_tcp(flows, cfg)]
+    return np.asarray(out)
+
+
+@pytest.mark.parametrize("name", JAX_POLS)
+def test_fct_parity_with_des_plane_under_random_loss(name):
+    n_flows, npk = 12, 50
+    t_start = np.arange(n_flows) * 4.0
+    flows = [(i, npk, float(t_start[i])) for i in range(n_flows)]
+    hints = {
+        i: int(h) for i, h in enumerate(rss_hash32(np.arange(n_flows), N_WORKERS))
+    }
+    res = run_tcp_lanes(
+        name,
+        np.arange(6),
+        n_pkts=np.full(n_flows, npk),
+        t_start=t_start,
+        tcp_params=dict(LOSS),
+        n_workers=N_WORKERS,
+    )
+    assert np.asarray(res.done).all()
+    j = np.asarray(res.fct).ravel()
+    d = _des_fcts(name, flows, hints, range(3), **LOSS)
+    j50, j99 = np.percentile(j, 50), np.percentile(j, 99)
+    d50, d99 = np.percentile(d, 50), np.percentile(d, 99)
+    assert j50 == pytest.approx(d50, rel=P50_RTOL), (name, j50, d50)
+    assert j99 == pytest.approx(d99, rel=P99_RTOL), (name, j99, d99)
+
+
+def test_impairment_shape_corec_tracks_scaleout_within_band():
+    # the paper's robustness claim: random loss <= 3% costs the
+    # single-queue design no more than ~3% FCT p99 vs per-queue RSS
+    kw = dict(
+        n_pkts=400,
+        tcp_params=dict(loss_rate=0.03, loss_burst=2.0),
+        n_workers=N_WORKERS,
+    )
+    corec = run_tcp_lanes("corec", np.arange(4), **kw)
+    scale = run_tcp_lanes("scaleout", np.arange(4), **kw)
+    assert np.asarray(corec.done).all() and np.asarray(scale.done).all()
+    c99 = np.percentile(np.asarray(corec.fct).ravel(), 99)
+    s99 = np.percentile(np.asarray(scale.fct).ravel(), 99)
+    assert c99 <= 1.03 * s99, (c99, s99)
+
+
+# ---------------------------------------------------------------------
+# Overload control on the jax plane: identity off, accounting on
+# ---------------------------------------------------------------------
+def _jax_serving(pol, seeds, capacity, **serving_params):
+    return sweep_serving_jax(
+        pol,
+        np.asarray(seeds),
+        capacity=capacity,
+        traffic_params=dict(rate=OV_RATE),
+        serving_params=serving_params,
+        n_workers=N_WORKERS,
+        max_batch=16,
+    )
+
+
+def test_overload_knobs_off_is_bit_identical():
+    base = _jax_serving("corec", np.arange(2), 150)
+    # retries=0 / drop_rate=0.0 are the documented exact identities
+    off = _jax_serving("corec", np.arange(2), 150, retries=0, drop_rate=0.0)
+    for field in ("p50", "p99", "slo_attained", "items", "shed"):
+        assert (
+            np.asarray(getattr(base, field)) == np.asarray(getattr(off, field))
+        ).all(), field
+    # off-mode identities of the new accounting fields
+    assert (np.asarray(base.attempts) == np.asarray(base.offered)).all()
+    assert (np.asarray(base.delivered) == np.asarray(base.goodput)).all()
+    assert (np.asarray(base.delivered) == np.asarray(base.items)).all()
+    assert not np.asarray(base.expired).any()
+    assert not np.asarray(base.dup_served).any()
+
+
+def test_extended_exactly_once_and_duplicate_bound_jax():
+    retries, hedge = 2, 0.5
+    cpr = 1 + retries + 1
+    res = _jax_serving(
+        "corec",
+        np.arange(3),
+        200,
+        timeout=OV_TIMEOUT,
+        retries=retries,
+        backoff=1.0,
+        jitter=0.5,
+        hedge=hedge,
+        drop_rate=OV_DROP,
+    )
+    pop = np.asarray(res.claimed_popcount)
+    delivered = np.asarray(res.delivered)
+    expired = np.asarray(res.expired)
+    shed = np.asarray(res.shed)
+    goodput = np.asarray(res.goodput)
+    dup = np.asarray(res.dup_served)
+    offered = np.asarray(res.offered)
+    attempts = np.asarray(res.attempts)
+    assert (pop == delivered + expired + shed).all()
+    assert (delivered == goodput + dup).all()
+    assert (attempts <= offered * cpr).all()
+    assert (dup <= goodput * (cpr - 1)).all()
+    assert (goodput <= offered).all()
+    # the lossy retrying lanes really exercised the extended plane
+    assert attempts.sum() > offered.sum()
+    assert expired.sum() + dup.sum() > 0
+
+
+def test_naive_retries_collapse_but_graceful_degrades_jax():
+    seeds = np.arange(3)
+    cap = 240
+    healthy = _jax_serving(
+        "corec", seeds, cap, timeout=OV_TIMEOUT, drop_rate=OV_DROP
+    )
+    naive = _jax_serving(
+        "corec",
+        seeds,
+        cap,
+        timeout=OV_TIMEOUT,
+        retries=2,
+        drop_rate=OV_DROP,
+    )
+    graceful = _jax_serving(
+        "corec",
+        seeds,
+        cap,
+        drop_rate=OV_DROP,
+        **dict(overload_defaults("corec")),
+    )
+    h = np.asarray(healthy.goodput, np.float64).sum()
+    n = np.asarray(naive.goodput, np.float64).sum()
+    g = np.asarray(graceful.goodput, np.float64).sum()
+    # the metastable cliff: unpaced retries triple the offered load and
+    # goodput collapses; backoff + jitter + breaker + matched admission
+    # keep goodput near the healthy baseline
+    assert n < 0.5 * h, (n, h)
+    assert g > 0.75 * h, (g, h)
+    assert g > 3.0 * n, (g, n)
+
+
+# ---------------------------------------------------------------------
+# Overload control on the DES mirror
+# ---------------------------------------------------------------------
+def _des_serving(pol="corec", capacity=400, **kw):
+    cfg = ServingSimConfig(
+        policy=pol,
+        rate=OV_RATE,
+        capacity=capacity,
+        n_workers=N_WORKERS,
+        batch=16,
+        **kw,
+    )
+    return simulate_serving_des(cfg)
+
+
+def test_des_overload_off_identities():
+    res = _des_serving(seed=5)
+    assert res.attempts == res.offered
+    assert res.goodput == res.delivered
+    assert res.expired == 0 and res.dup_served == 0
+
+
+def test_des_extended_accounting_and_duplicate_bound():
+    retries, hedge = 2, 0.5
+    cpr = 1 + retries + 1
+    res = _des_serving(
+        seed=7,
+        timeout=OV_TIMEOUT,
+        retries=retries,
+        backoff=1.0,
+        jitter=0.5,
+        hedge=hedge,
+        drop_rate=OV_DROP,
+    )
+    assert res.attempts == res.delivered + res.expired + res.shed + res.undelivered
+    assert res.delivered == res.goodput + res.dup_served
+    assert res.attempts <= res.offered * cpr
+    assert res.dup_served <= res.goodput * (cpr - 1)
+    assert res.goodput <= res.offered
+    assert res.attempts > res.offered
+
+
+def test_naive_retries_collapse_but_graceful_degrades_des():
+    healthy = _des_serving(seed=3, timeout=OV_TIMEOUT, drop_rate=OV_DROP)
+    naive = _des_serving(
+        seed=3, timeout=OV_TIMEOUT, retries=2, drop_rate=OV_DROP
+    )
+    graceful = _des_serving(
+        seed=3, drop_rate=OV_DROP, **dict(overload_defaults("corec"))
+    )
+    assert naive.goodput < 0.5 * healthy.goodput
+    assert graceful.goodput > 0.75 * healthy.goodput
+    assert graceful.goodput > 3.0 * naive.goodput
+
+
+def test_des_latency_autoscale_reacts_to_measured_p99():
+    # scaled workers gated on the in-loop p99 estimate must tame the
+    # tail vs the same pool with the scaled workers never waking
+    slow = _des_serving(
+        seed=2, base_workers=1.0, scale_latency=math.inf, horizon=150.0
+    )
+    reactive = _des_serving(
+        seed=2, base_workers=1.0, scale_latency=8.0, horizon=150.0
+    )
+    assert reactive.p99 < 0.5 * slow.p99, (reactive.p99, slow.p99)
+
+
+# ---------------------------------------------------------------------
+# Chaos under impairment: the hypothesis sweep (satellite property)
+# ---------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    pol=st.sampled_from(JAX_POLS),
+    retries=st.integers(min_value=0, max_value=2),
+    timeout=st.sampled_from([1.0, 4.0, math.inf]),
+    drop=st.sampled_from([0.0, 0.05, 0.25]),
+    hedge=st.sampled_from([0.0, 0.5]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_chaos_accounting_holds_on_both_planes(
+    pol, retries, timeout, drop, hedge, seed
+):
+    cpr = 1 + retries + (1 if hedge > 0.0 else 0)
+    knobs = dict(
+        timeout=timeout,
+        retries=retries,
+        backoff=0.5,
+        jitter=0.5,
+        drop_rate=drop,
+    )
+    if hedge > 0.0:
+        knobs["hedge"] = hedge
+    res = _jax_serving(pol, np.asarray([seed % 4]), 120, **knobs)
+    pop = np.asarray(res.claimed_popcount)
+    delivered = np.asarray(res.delivered)
+    assert (pop == delivered + np.asarray(res.expired) + np.asarray(res.shed)).all()
+    assert (delivered == np.asarray(res.goodput) + np.asarray(res.dup_served)).all()
+    assert (np.asarray(res.dup_served) <= np.asarray(res.goodput) * (cpr - 1)).all()
+    assert (np.asarray(res.attempts) <= np.asarray(res.offered) * cpr).all()
+    des = _des_serving(pol, seed=seed, capacity=120, **knobs)
+    assert (
+        des.attempts
+        == des.delivered + des.expired + des.shed + des.undelivered
+    )
+    assert des.delivered == des.goodput + des.dup_served
+    assert des.dup_served <= des.goodput * (cpr - 1)
+    assert des.attempts <= des.offered * cpr
